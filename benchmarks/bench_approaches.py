@@ -1,0 +1,79 @@
+"""Paper Table 1 / Sec. 3: Approach 1 vs Approach 2 vs the Pallas
+memory-controller kernel.
+
+Reports, per (tensor, mode):
+  * the analytical external-traffic model (elements moved — Table 1),
+  * measured XLA-CPU wall time for both pure-JAX lowerings (the *ordering*
+    is what transfers: Approach 1's sorted segment-sum beats the scatter),
+  * PMS-predicted TPU time for the Pallas layout.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.coo import frostt_like, random_factors
+from repro.core.hypergraph import approach1_traffic, approach2_traffic
+from repro.core.mttkrp import mttkrp_approach1, mttkrp_approach2
+from repro.core.pms import search
+from repro.core.remap import remap_stable
+
+
+def _time(fn, *args, reps=5):
+    fn(*args).block_until_ready()  # compile + warm
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        out = fn(*args)
+    out.block_until_ready()
+    return (time.perf_counter() - t0) / reps
+
+
+def run(rank: int = 16, preset: str = "small"):
+    st = frostt_like(preset)
+    facs = random_factors(jax.random.PRNGKey(0), st.shape, rank)
+    rows = []
+    for mode in range(st.nmodes):
+        t1 = approach1_traffic(st, mode, rank)
+        t2 = approach2_traffic(st, mode, rank)
+        idx, val = jnp.asarray(st.indices), jnp.asarray(st.values)
+        sidx, sval, _ = remap_stable(idx, val, mode)
+
+        sec1 = _time(
+            lambda i, v: mttkrp_approach1(i, v, facs, mode, st.shape[mode]), sidx, sval
+        )
+        sec2 = _time(
+            lambda i, v: mttkrp_approach2(i, v, facs, mode, st.shape[mode]), idx, val
+        )
+        best = search(st, mode, rank, top_k=1)
+        rows.append(
+            dict(
+                preset=preset,
+                mode=mode,
+                elems_a1=t1.total_elems,
+                elems_a2=t2.total_elems,
+                traffic_ratio=t2.total_elems / t1.total_elems,
+                cpu_us_a1=sec1 * 1e6,
+                cpu_us_a2=sec2 * 1e6,
+                pms_tpu_us=best[0].t_total * 1e6 if best else float("nan"),
+                pms_bottleneck=best[0].bottleneck if best else "-",
+            )
+        )
+    return rows
+
+
+def main():
+    print("preset,mode,elems_a1,elems_a2,traffic_ratio,cpu_us_a1,cpu_us_a2,pms_tpu_us,bottleneck")
+    for preset in ("tiny", "small", "medium"):
+        for r in run(preset=preset):
+            print(
+                f"{r['preset']},{r['mode']},{r['elems_a1']},{r['elems_a2']},"
+                f"{r['traffic_ratio']:.3f},{r['cpu_us_a1']:.0f},{r['cpu_us_a2']:.0f},"
+                f"{r['pms_tpu_us']:.1f},{r['pms_bottleneck']}"
+            )
+
+
+if __name__ == "__main__":
+    main()

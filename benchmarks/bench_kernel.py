@@ -1,0 +1,37 @@
+"""Pallas MTTKRP kernel layout quality: measured tile fills / padding /
+single-flush property per memory-controller configuration, plus the PMS
+三-term estimate.  (Wall-clock is meaningless in interpret mode; the layout
+statistics ARE the kernel's performance on TPU — they count the HBM<->VMEM
+DMAs the BlockSpec schedule will issue.)"""
+from __future__ import annotations
+
+from repro.core.coo import frostt_like
+from repro.core.memctrl import CacheEngineConfig, DMAEngineConfig, MemoryControllerConfig
+from repro.core.pms import predict_from_plan
+from repro.core.remap import plan_blocks
+
+
+def main():
+    print("tensor,config,nblocks,padding,fills_A,fills_B,fills_C,single_flush,"
+          "t_stream_us,t_factor_us,t_out_us,t_compute_us,bottleneck")
+    for preset in ("small", "medium"):
+        st = frostt_like(preset)
+        for tiles in ((128, 128, 128, 128), (256, 256, 256, 256), (512, 512, 512, 512), (256, 512, 512, 128)):
+            ti, tj, tk, blk = tiles
+            cfg = MemoryControllerConfig(
+                cache=CacheEngineConfig(tile_i=ti, tile_j=tj, tile_k=tk),
+                dma=DMAEngineConfig(blk=blk),
+            )
+            plan = plan_blocks(st, 0, tile_i=ti, tile_j=tj, tile_k=tk, blk=blk)
+            est = predict_from_plan(plan, 16, cfg)
+            fills = plan.tile_fills()
+            print(
+                f"{preset},{ti}x{tj}x{tk}/{blk},{plan.nblocks},{plan.padding_fraction():.3f},"
+                f"{fills['A']},{fills['B']},{fills['C']},{plan.a_tile_single_flush()},"
+                f"{est.t_stream*1e6:.1f},{est.t_factor*1e6:.1f},{est.t_out*1e6:.1f},"
+                f"{est.t_compute*1e6:.1f},{est.bottleneck}"
+            )
+
+
+if __name__ == "__main__":
+    main()

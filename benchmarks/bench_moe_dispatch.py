@@ -1,0 +1,58 @@
+"""The paper's technique on the LM side: MoE token->expert dispatch as
+Approach 1 (remap/counting sort) vs Approach 2 (one-hot partial tensors).
+
+Reports compiled HLO flops + bytes for each dispatch mode (XLA CPU numbers;
+the *ratio* is the transferable quantity — the (Tg, E, C) one-hot dispatch
+tensor is pure partial-sum traffic, exactly Table 1's |T|*R column), and
+wall time on the host device.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import MoEConfig
+from repro.models.moe import moe_apply, moe_init
+
+
+def measure(dispatch: str, G=4, Tg=1024, D=256, E=16, k=2):
+    cfg = MoEConfig(num_experts=E, top_k=k, d_ff=512, capacity_factor=1.25, dispatch=dispatch)
+    key = jax.random.PRNGKey(0)
+    p = moe_init(key, D, cfg, "silu")
+    x = jax.random.normal(key, (G, Tg, D), jnp.float32) * 0.3
+
+    fn = jax.jit(lambda p, x: moe_apply(p, x, cfg, "silu")[0])
+    lowered = fn.lower(p, x)
+    compiled = lowered.compile()
+    ca = compiled.cost_analysis() or {}
+    out = fn(p, x)
+    out.block_until_ready()
+    t0 = time.perf_counter()
+    for _ in range(5):
+        out = fn(p, x)
+    out.block_until_ready()
+    wall = (time.perf_counter() - t0) / 5
+    return dict(
+        dispatch=dispatch,
+        flops=float(ca.get("flops", -1)),
+        bytes=float(ca.get("bytes accessed", -1)),
+        wall_us=wall * 1e6,
+    )
+
+
+def main():
+    print("dispatch,flops,bytes,wall_us,notes")
+    rows = [measure("remap"), measure("onehot")]
+    for r in rows:
+        print(f"{r['dispatch']},{r['flops']:.3e},{r['bytes']:.3e},{r['wall_us']:.0f},")
+    if rows[0]["bytes"] > 0:
+        print(f"# bytes ratio onehot/remap = {rows[1]['bytes']/rows[0]['bytes']:.2f} "
+              f"(the paper's partial-sum traffic, Table 1)")
+        print(f"# flops ratio onehot/remap = {rows[1]['flops']/rows[0]['flops']:.2f}")
+
+
+if __name__ == "__main__":
+    main()

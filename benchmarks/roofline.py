@@ -1,0 +1,186 @@
+"""Roofline analysis from dry-run artifacts (EXPERIMENTS.md §Roofline).
+
+Methodology
+-----------
+XLA's HloCostAnalysis counts a while-loop body ONCE regardless of trip count
+(verified empirically), so the scanned full-step module undercounts.  The
+dry-run therefore lowers two UNROLLED cost probes per cell — depth = 1x and
+2x the layer-pattern period, scan_unroll=True, num_microbatches=1 — giving
+exact per-device costs c(1), c(2).  Linear extrapolation:
+
+    per_period = c(2) - c(1);   base = c(1) - per_period
+    full(depth n_reps) = base + n_reps * per_period
+
+(`base` captures embedding + head + optimizer-free overhead; the optimizer
+and grad pieces scale with depth and live inside per_period.)  Microbatching
+does not change FLOPs; it re-reads the accumulator, which we fold into the
+memory term as (mb-1) * accum_bytes.
+
+Terms (per device == per chip; the partitioned module is per-device):
+    compute    = flops / PEAK_FLOPS
+    memory     = bytes_accessed / HBM_BW
+    collective = sum over collective ops of wire bytes / ICI_BW, where wire
+                 bytes uses ring factors: all-reduce 2(n-1)/n, all-gather /
+                 reduce-scatter (n-1)/n, all-to-all (n-1)/n, permute 1.
+Hardware: TPU v5e — 197 TFLOP/s bf16, 819 GB/s HBM, 50 GB/s/link ICI (the
+brief's constants; single-link conservative).
+"""
+from __future__ import annotations
+
+import glob
+import json
+import math
+import os
+
+PEAK_FLOPS = 197e12
+HBM_BW = 819e9
+ICI_BW = 50e9
+HBM_BYTES = 16 * 2**30
+
+RING = {
+    "all-reduce": lambda n: 2 * (n - 1) / n,
+    "all-gather": lambda n: (n - 1) / n,
+    "reduce-scatter": lambda n: (n - 1) / n,
+    "all-to-all": lambda n: (n - 1) / n,
+    "collective-permute": lambda n: 1.0,
+}
+
+# dominant mesh-axis size for ring factors (16 on both meshes here)
+AXIS_N = 16
+
+
+def wire_bytes(collectives: dict) -> float:
+    total = 0.0
+    for kind, d in collectives.items():
+        total += d["bytes"] * RING.get(kind, lambda n: 1.0)(AXIS_N)
+    return total
+
+
+def model_flops_train(cfg, tokens: int) -> float:
+    return 6.0 * cfg.active_param_count() * tokens
+
+
+def model_flops_decode(cfg, batch: int) -> float:
+    return 2.0 * cfg.active_param_count() * batch  # one new token per seq
+
+
+def extrapolate(rec: dict, n_reps: int) -> dict | None:
+    """Exact full-depth per-device costs from the two unrolled probes."""
+    p = rec.get("probes")
+    if not p or "depth1" not in p or "depth2" not in p:
+        return None
+    c1, c2 = p["depth1"], p["depth2"]
+
+    def full(key):
+        per = c2[key] - c1[key]
+        base = c1[key] - per
+        return base + n_reps * per
+
+    coll1 = wire_bytes(c1.get("collectives", {}))
+    coll2 = wire_bytes(c2.get("collectives", {}))
+    coll_full = (c1 and (coll1 - (coll2 - coll1))) + n_reps * (coll2 - coll1)
+    out = {
+        "flops": full("flops"),
+        "bytes": full("bytes_accessed"),
+        "coll_bytes": max(coll_full, 0.0),
+    }
+    # microbatched accumulation re-reads/writes the grad buffer per microbatch
+    mb = rec.get("num_microbatches") or 1
+    if mb > 1 and rec.get("memory"):
+        accum = rec["memory"]["argument_bytes"] * 0.25  # ~ grad-tree bytes
+        out["bytes"] += (mb - 1) * accum
+    return out
+
+
+def analyze_cell(rec: dict, cfg) -> dict | None:
+    n_reps = cfg.n_layers // cfg.period
+    ext = extrapolate(rec, n_reps)
+    if ext is None:
+        return None
+    t_compute = ext["flops"] / PEAK_FLOPS
+    t_memory = ext["bytes"] / HBM_BW
+    t_coll = ext["coll_bytes"] / ICI_BW
+    terms = {"compute": t_compute, "memory": t_memory, "collective": t_coll}
+    bottleneck = max(terms, key=terms.get)
+    shape = rec["shape"]
+    nchips = rec["nchips"]
+    if shape.startswith("train"):
+        from repro.configs.base import SHAPES
+
+        sc = SHAPES[shape]
+        mf = model_flops_train(cfg, sc.seq_len * sc.global_batch) / nchips
+    else:
+        from repro.configs.base import SHAPES
+
+        sc = SHAPES[shape]
+        if sc.kind == "prefill":
+            mf = 2.0 * cfg.active_param_count() * sc.seq_len * sc.global_batch / nchips
+        else:
+            mf = model_flops_decode(cfg, sc.global_batch) / nchips
+    t_total = max(terms.values())
+    return {
+        "arch": rec["arch"],
+        "shape": shape,
+        "mesh": rec["mesh"],
+        "compute_s": t_compute,
+        "memory_s": t_memory,
+        "collective_s": t_coll,
+        "bottleneck": bottleneck,
+        "model_flops_per_chip": mf,
+        "hlo_flops_per_chip": ext["flops"],
+        "useful_flop_ratio": mf / ext["flops"] if ext["flops"] > 0 else float("nan"),
+        "roofline_fraction": (mf / PEAK_FLOPS) / t_total if t_total > 0 else float("nan"),
+        "peak_gib": rec["memory"]["peak_bytes"] / 2**30 if rec.get("memory") else None,
+        "fits_hbm": rec["memory"]["peak_bytes"] <= HBM_BYTES if rec.get("memory") else None,
+    }
+
+
+def load_artifacts(art_dir: str = "artifacts/dryrun") -> list[dict]:
+    recs = []
+    for path in sorted(glob.glob(os.path.join(art_dir, "*.json"))):
+        with open(path) as f:
+            recs.append(json.load(f))
+    return recs
+
+
+def table(art_dir: str = "artifacts/dryrun", mesh: str = "single") -> list[dict]:
+    from repro.configs import get_config
+
+    rows = []
+    for rec in load_artifacts(art_dir):
+        if rec.get("skipped") or rec.get("mesh") != mesh:
+            continue
+        cfg = get_config(rec["arch"])
+        row = analyze_cell(rec, cfg)
+        if row:
+            rows.append(row)
+    return rows
+
+
+def render_markdown(rows: list[dict]) -> str:
+    hdr = ("| arch | shape | compute s | memory s | collective s | bottleneck | "
+           "useful/HLO | roofline frac | peak GiB |")
+    sep = "|" + "---|" * 9
+    out = [hdr, sep]
+    for r in sorted(rows, key=lambda r: (r["arch"], r["shape"])):
+        out.append(
+            f"| {r['arch']} | {r['shape']} | {r['compute_s']:.3e} | {r['memory_s']:.3e} "
+            f"| {r['collective_s']:.3e} | {r['bottleneck']} | {r['useful_flop_ratio']:.2f} "
+            f"| {r['roofline_fraction']:.2%} | {r['peak_gib']:.2f} |"
+        )
+    return "\n".join(out)
+
+
+def main():
+    rows = table()
+    if not rows:
+        print("[roofline] no probe artifacts found — run "
+              "`python -m repro.launch.dryrun --matrix --probe` first")
+        return
+    print(render_markdown(rows))
+    with open("artifacts/roofline.json", "w") as f:
+        json.dump(rows, f, indent=1)
+
+
+if __name__ == "__main__":
+    main()

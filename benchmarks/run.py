@@ -1,0 +1,47 @@
+"""Benchmark aggregator: one section per paper table/figure + the LM-side
+dispatch experiment and (if dry-run artifacts exist) the roofline table.
+
+  PYTHONPATH=src python -m benchmarks.run [--quick]
+"""
+from __future__ import annotations
+
+import sys
+import time
+
+
+def _section(title: str):
+    print(f"\n{'='*72}\n== {title}\n{'='*72}")
+
+
+def main() -> None:
+    t0 = time.time()
+
+    _section("Table 1 / Sec.3 — Approach 1 vs Approach 2 (traffic + time)")
+    from . import bench_approaches
+    bench_approaches.main()
+
+    _section("Sec 3.1 — Tensor Remapper overhead (<6% claim)")
+    from . import bench_remap
+    bench_remap.main()
+
+    _section("Sec 5.2/5.3 — PMS design-space search + model accuracy")
+    from . import bench_pms
+    bench_pms.main()
+
+    _section("Kernel memory-layout quality (BlockSpec DMA schedule)")
+    from . import bench_kernel
+    bench_kernel.main()
+
+    _section("MoE dispatch: the paper's approaches on the LM side")
+    from . import bench_moe_dispatch
+    bench_moe_dispatch.main()
+
+    _section("Roofline (from dry-run artifacts, if present)")
+    from . import roofline
+    roofline.main()
+
+    print(f"\n[benchmarks] total {time.time()-t0:.1f}s")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,48 @@
+"""The paper's memory-controller insight applied to MoE: dispatch tokens to
+experts by Approach 1 (remap / counting sort — contiguous per-expert
+buffers, no partial tensors) vs Approach 2 (one-hot dispatch tensors), and
+verify they compute the same layer while moving very different traffic.
+
+  PYTHONPATH=src python examples/moe_dispatch_demo.py
+"""
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import MoEConfig
+from repro.models.moe import moe_apply, moe_init
+
+
+def main():
+    G, Tg, D, E, k = 2, 512, 128, 8, 2
+    key = jax.random.PRNGKey(0)
+    x = jax.random.normal(key, (G, Tg, D)) * 0.3
+
+    outs = {}
+    for dispatch in ("remap", "onehot"):
+        cfg = MoEConfig(num_experts=E, top_k=k, d_ff=256, capacity_factor=1.25,
+                        dispatch=dispatch)
+        params = moe_init(key, D, cfg, "silu")
+        fn = jax.jit(lambda p, x: moe_apply(p, x, cfg, "silu")[0])
+        compiled = fn.lower(params, x).compile()
+        ca = compiled.cost_analysis() or {}
+        out = fn(params, x)
+        out.block_until_ready()
+        t0 = time.perf_counter()
+        for _ in range(10):
+            out = fn(params, x)
+        out.block_until_ready()
+        wall = (time.perf_counter() - t0) / 10
+        outs[dispatch] = np.asarray(out)
+        print(f"{dispatch:7s}: bytes={ca.get('bytes accessed', -1):.3e} "
+              f"flops={ca.get('flops', -1):.3e} wall={wall*1e6:.0f}us")
+
+    err = np.abs(outs["remap"] - outs["onehot"]).max()
+    print(f"max |remap - onehot| = {err:.2e}  (identical math, different memory "
+          f"schedule — the paper's Approach 1 vs 2, Sec. 3)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,65 @@
+"""Generate the §Dry-run and §Roofline tables in EXPERIMENTS.md from
+artifacts/dryrun/*.json (replaces the <!-- DRYRUN-TABLE --> and
+<!-- ROOFLINE-TABLE --> markers).
+
+  PYTHONPATH=src:. python scripts/fill_experiments.py
+"""
+import json
+import sys
+
+sys.path.insert(0, "src")
+sys.path.insert(0, ".")
+
+from benchmarks.roofline import load_artifacts, table, render_markdown  # noqa: E402
+from repro.configs import SHAPES, get_config, list_configs  # noqa: E402
+
+
+def dryrun_table() -> str:
+    recs = {(r["arch"], r["shape"], r["mesh"]): r for r in load_artifacts()}
+    out = [
+        "| arch | shape | mesh | peak GiB | fits 16 GiB | args GiB | compile s | mb | collectives (count: ag/ar/rs/a2a/cp) |",
+        "|---|---|---|---|---|---|---|---|---|",
+    ]
+    for arch in list_configs():
+        for shape in SHAPES:
+            for mesh in ("single", "multi"):
+                r = recs.get((arch, shape, mesh))
+                if r is None:
+                    out.append(f"| {arch} | {shape} | {mesh} | — | — | — | — | — | MISSING |")
+                    continue
+                if r.get("skipped"):
+                    if mesh == "single":
+                        out.append(f"| {arch} | {shape} | both | — | — | — | — | — | SKIP: sub-quadratic-only shape |")
+                    continue
+                m = r["memory"]
+                c = r.get("collectives", {})
+                cc = "/".join(
+                    str(c.get(k, {}).get("count", 0))
+                    for k in ("all-gather", "all-reduce", "reduce-scatter", "all-to-all", "collective-permute")
+                )
+                peak = m["peak_bytes"] / 2**30
+                out.append(
+                    f"| {arch} | {shape} | {mesh} | {peak:.2f} | "
+                    f"{'yes' if peak <= 16 else '**no**'} | {m['argument_bytes']/2**30:.2f} | "
+                    f"{r['compile_s']} | {r.get('num_microbatches') or '-'} | {cc} |"
+                )
+    return "\n".join(out)
+
+
+def main():
+    dr = dryrun_table()
+    rows = table()
+    rl = render_markdown(rows) if rows else "(no probe artifacts yet)"
+    with open("EXPERIMENTS.md") as f:
+        txt = f.read()
+    txt = txt.replace("<!-- DRYRUN-TABLE -->", dr)
+    txt = txt.replace("<!-- ROOFLINE-TABLE -->", rl)
+    with open("EXPERIMENTS.md", "w") as f:
+        f.write(txt)
+    ok = sum(1 for r in load_artifacts() if r.get("ok"))
+    sk = sum(1 for r in load_artifacts() if r.get("skipped"))
+    print(f"[fill_experiments] {ok} compiled cells, {sk} skip records; tables written")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,56 @@
+"""Hillclimb driver: lower one cell under a set of config variants and
+report the roofline terms per variant (EXPERIMENTS.md §Perf).
+
+  PYTHONPATH=src python scripts/hillclimb.py qwen3-0.6b train_4k \
+      base remat_off mb1 ...
+"""
+import os
+import sys
+
+sys.path.insert(0, "src")
+from repro.launch import dryrun as D  # noqa: E402  (sets XLA_FLAGS first)
+
+VARIANTS = {
+    "base": {},
+    "remat_off": {"remat": False},
+    "mb1": {"num_microbatches": 1},
+    "mb4": {"num_microbatches": 4},
+    "mb8": {"num_microbatches": 8},
+    "sp": {"sp": True},
+    "chunk512": {"attn_chunk": 512},
+    "chunk4096": {"attn_chunk": 4096},
+    "remat_off_mb1": {"remat": False, "num_microbatches": 1},
+    "rg0": {"remat_group": 0},
+    "barrier": {"barrier_xs": True},
+}
+
+
+def main():
+    arch, shape = sys.argv[1], sys.argv[2]
+    variants = sys.argv[3:] or ["base"]
+    out_dir = f"artifacts/hillclimb/{arch}__{shape}"
+    os.makedirs(out_dir, exist_ok=True)
+    for name in variants:
+        overrides = VARIANTS[name]
+        try:
+            rec = D.run_cell(arch, shape, multi_pod=False, probe=True,
+                             out_dir=os.path.join(out_dir, name), **overrides)
+            if rec.get("skipped"):
+                print(f"{name}: SKIP")
+                continue
+            from benchmarks.roofline import analyze_cell
+            from repro.configs import get_config
+
+            row = analyze_cell(rec, get_config(arch))
+            m = rec["memory"]
+            print(f"{name:16s} peak={m['peak_bytes']/2**30:6.2f}GiB "
+                  f"compute={row['compute_s']:.3e}s memory={row['memory_s']:.3e}s "
+                  f"coll={row['collective_s']:.3e}s bottleneck={row['bottleneck']} "
+                  f"useful/HLO={row['useful_flop_ratio']:.3f} "
+                  f"roofline={row['roofline_fraction']:.2%}")
+        except Exception as e:
+            print(f"{name}: FAIL {type(e).__name__}: {e}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,75 @@
+"""Memory-iteration probe: grad-only grok-1 microbatch step with XLA buffer
+dump, reporting the top temp regions.  Usage:
+  PYTHONPATH=src python scripts/memprobe.py [--remat-group N] [--arch A]
+"""
+import os
+import sys
+
+args = dict(a.split("=") for a in sys.argv[1:] if "=" in a)
+DUMP = args.get("dump", "/tmp/xladump")
+os.environ["XLA_FLAGS"] = (
+    f"--xla_force_host_platform_device_count=512 --xla_dump_to={DUMP}"
+)
+
+import re
+import dataclasses
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+sys.path.insert(0, "src")
+from repro.configs import get_config, SHAPES
+from repro.dist.sharding import make_plan, param_pspecs, valid_spec, batch_specs, batch_pspecs
+from repro.models import transformer as T
+from repro.launch.mesh import make_production_mesh
+
+arch = args.get("arch", "grok-1-314b")
+rg = int(args.get("rg", "0"))
+mesh = make_production_mesh()
+cfg = dataclasses.replace(get_config(arch), remat_group=rg)
+plan = make_plan(mesh, cfg)
+params_abs = T.abstract_params(cfg)
+pspecs = param_pspecs(params_abs, plan)
+pspecs = jax.tree.map(lambda a, s: valid_spec(a.shape, s, mesh), params_abs, pspecs,
+                      is_leaf=lambda x: isinstance(x, P))
+named = jax.tree.map(lambda s: NamedSharding(mesh, s), pspecs, is_leaf=lambda x: isinstance(x, P))
+shape_cfg = SHAPES[args.get("shape", "train_4k")]
+batch_abs = batch_specs(cfg, shape_cfg, plan)
+mbsize = int(args.get("mb", "16"))
+mb = {k: jax.ShapeDtypeStruct((mbsize,) + v.shape[1:], v.dtype) for k, v in batch_abs.items()}
+b_named = {k: NamedSharding(mesh, valid_spec(mb[k].shape, s, mesh))
+           for k, s in batch_pspecs(cfg, shape_cfg, plan).items()}
+
+def grad_only(params, batch):
+    pc = jax.tree.map(lambda p: p.astype(jnp.bfloat16) if (p.dtype == jnp.float32 and p.ndim >= 2) else p, params)
+    def loss_fn(p):
+        l, m = T.apply_train(p, batch, cfg, plan)
+        return l
+    return jax.grad(loss_fn)(pc)
+
+with mesh:
+    c2 = jax.jit(grad_only, in_shardings=(named, b_named)).lower(params_abs, mb).compile()
+    ma = c2.memory_analysis()
+    print("GRAD-ONLY rg=%d: args %.2f out %.2f temp %.2f peak %.2f GiB" % (
+        rg, ma.argument_size_in_bytes / 2**30, ma.output_size_in_bytes / 2**30,
+        ma.temp_size_in_bytes / 2**30,
+        (ma.argument_size_in_bytes + ma.output_size_in_bytes + ma.temp_size_in_bytes
+         - ma.alias_size_in_bytes) / 2**30))
+
+# parse the buffer assignment
+import glob
+fn = sorted(glob.glob(f"{DUMP}/*buffer-assignment.txt"))[-1]
+txt = open(fn).read()
+m = re.search(r"allocation (\d+): size (\d+), preallocated-temp:\n((?: .*\n)*)", txt)
+if m:
+    body = m.group(3)
+    vals = re.findall(r"value: <\d+ ([^@]+)@\d+> \(size=(\d+),offset=(\d+)\): (\S+)", body)
+    byoff = {}
+    for name, size, off, shape in vals:
+        size, off = int(size), int(off)
+        if off not in byoff or size > byoff[off][0]:
+            byoff[off] = (size, name.strip(), shape)
+    rows = sorted(byoff.values(), reverse=True)
+    print(f"top temp regions (preallocated-temp {int(m.group(2))/2**30:.2f} GiB):")
+    for s, n, sh in rows[:16]:
+        print(f"{s/2**20:9.1f} MiB  {sh:44s} {n[:70]}")

@@ -1,0 +1,24 @@
+"""phi4-mini-3.8b [dense] — 32L d_model=3072 24H (GQA kv=8) d_ff=8192
+vocab=200064. RoPE SwiGLU GQA. [arXiv:2412.08905; hf]"""
+from .base import ModelConfig, register
+
+
+@register("phi4-mini-3.8b")
+def config() -> ModelConfig:
+    return ModelConfig(
+        name="phi4-mini-3.8b",
+        family="dense",
+        n_layers=32,
+        d_model=3072,
+        n_heads=24,
+        n_kv_heads=8,
+        d_ff=8192,
+        vocab=200_064,
+        head_dim=128,
+        rope_theta=10_000.0,
+        act="silu",
+        tie_embeddings=True,
+        norm_eps=1e-5,
+        fsdp=True,
+        source="arXiv:2412.08905; hf",
+    )

@@ -1,0 +1,185 @@
+"""COO sparse-tensor container + synthetic FROSTT-like generators.
+
+The paper (Sec. 2.1, Alg. 2) operates on third-or-higher-order sparse tensors
+stored in coordinate (COO) format: per non-zero, one coordinate per mode plus a
+value.  We keep a host-side numpy container (`SparseTensor`) for dataset
+construction / remap planning, and a device pytree (`CooBatch`) with padded,
+jit-stable shapes for compute.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = [
+    "SparseTensor",
+    "CooBatch",
+    "synthetic_tensor",
+    "frostt_like",
+    "to_device",
+    "pad_nnz",
+]
+
+
+@dataclasses.dataclass
+class SparseTensor:
+    """Host-side COO tensor.  `indices[z, m]` is the mode-m coordinate of nnz z."""
+
+    indices: np.ndarray  # (nnz, nmodes) int32
+    values: np.ndarray  # (nnz,) float32
+    shape: tuple[int, ...]
+
+    def __post_init__(self):
+        assert self.indices.ndim == 2 and self.indices.shape[1] == len(self.shape)
+        assert self.values.shape == (self.indices.shape[0],)
+        self.indices = np.asarray(self.indices, np.int32)
+        self.values = np.asarray(self.values, np.float32)
+
+    @property
+    def nnz(self) -> int:
+        return self.indices.shape[0]
+
+    @property
+    def nmodes(self) -> int:
+        return len(self.shape)
+
+    @property
+    def density(self) -> float:
+        return self.nnz / float(np.prod([float(s) for s in self.shape]))
+
+    def nbytes(self, index_bytes: int = 4, value_bytes: int = 4) -> int:
+        """Size of the COO stream, |T| elements (paper's tensor-size metric)."""
+        return self.nnz * (self.nmodes * index_bytes + value_bytes)
+
+    def mode_histogram(self, mode: int) -> np.ndarray:
+        """Non-zeros per coordinate of `mode` (hypergraph vertex degrees)."""
+        return np.bincount(self.indices[:, mode], minlength=self.shape[mode])
+
+    def sorted_by(self, mode: int) -> "SparseTensor":
+        """Stable sort by one mode's coordinates (host-side reference remap)."""
+        order = np.argsort(self.indices[:, mode], kind="stable")
+        return SparseTensor(self.indices[order], self.values[order], self.shape)
+
+    def is_sorted_by(self, mode: int) -> bool:
+        c = self.indices[:, mode]
+        return bool(np.all(c[1:] >= c[:-1]))
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class CooBatch:
+    """Device-side COO with jit-stable (padded) nnz.  Padding rows have
+    value 0 and coordinates 0, contributing nothing to MTTKRP."""
+
+    indices: jax.Array  # (nnz_padded, nmodes) int32
+    values: jax.Array  # (nnz_padded,) float dtype
+    shape: tuple[int, ...]  # static
+    nnz: int  # static true nnz (<= padded)
+
+    def tree_flatten(self):
+        return (self.indices, self.values), (self.shape, self.nnz)
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        indices, values = children
+        shape, nnz = aux
+        return cls(indices=indices, values=values, shape=shape, nnz=nnz)
+
+    @property
+    def nmodes(self) -> int:
+        return len(self.shape)
+
+
+def pad_nnz(st: SparseTensor, multiple: int) -> SparseTensor:
+    """Pad the nnz stream to a multiple (DMA-buffer granularity).  Padding
+    values are zero so downstream compute is unchanged."""
+    nnz = st.nnz
+    padded = ((nnz + multiple - 1) // multiple) * multiple
+    if padded == nnz:
+        return st
+    pad = padded - nnz
+    idx = np.concatenate([st.indices, np.zeros((pad, st.nmodes), np.int32)], 0)
+    val = np.concatenate([st.values, np.zeros((pad,), np.float32)], 0)
+    return SparseTensor(idx, val, st.shape)
+
+
+def to_device(st: SparseTensor, pad_multiple: int = 1, dtype=jnp.float32) -> CooBatch:
+    stp = pad_nnz(st, pad_multiple) if pad_multiple > 1 else st
+    return CooBatch(
+        indices=jnp.asarray(stp.indices),
+        values=jnp.asarray(stp.values, dtype),
+        shape=st.shape,
+        nnz=st.nnz,
+    )
+
+
+def _zipf_coords(rng: np.random.Generator, n: int, size: int, alpha: float) -> np.ndarray:
+    """Skewed coordinates: real FROSTT tensors have power-law mode degree
+    distributions (a few very hot rows).  alpha=0 -> uniform."""
+    if alpha <= 0:
+        return rng.integers(0, size, n, dtype=np.int64)
+    # Sample from a discretized zipf over [0, size) via inverse-CDF on ranks.
+    ranks = np.arange(1, size + 1, dtype=np.float64)
+    probs = ranks ** (-alpha)
+    probs /= probs.sum()
+    coords = rng.choice(size, size=n, p=probs)
+    # Random permutation of coordinate labels so hot rows are scattered.
+    perm = rng.permutation(size)
+    return perm[coords]
+
+
+def synthetic_tensor(
+    shape: Sequence[int],
+    nnz: int,
+    *,
+    seed: int = 0,
+    skew: float = 0.0,
+    dedup: bool = False,
+) -> SparseTensor:
+    """Random sparse tensor with optional per-mode zipf skew.
+
+    dedup=True removes duplicate coordinates (real tensors are sets); for
+    large sparse shapes collisions are rare so we keep it optional.
+    """
+    rng = np.random.default_rng(seed)
+    cols = [_zipf_coords(rng, nnz, s, skew) for s in shape]
+    idx = np.stack(cols, axis=1).astype(np.int32)
+    if dedup:
+        idx = np.unique(idx, axis=0)
+    vals = rng.standard_normal(idx.shape[0]).astype(np.float32)
+    return SparseTensor(idx, vals, tuple(int(s) for s in shape))
+
+
+def frostt_like(name: str = "small", seed: int = 0) -> SparseTensor:
+    """Synthetic stand-ins shaped like FROSTT-repository tensors (paper
+    Table 2: mode lengths 17–39 M, nnz 3–144 M, 3–5 modes).  Scaled-down
+    presets keep CI fast; `paper` presets match Table 2 magnitudes and are
+    used only by the dry-run / PMS (no allocation at full scale)."""
+    presets = {
+        # name: (shape, nnz, skew)
+        "tiny": ((64, 48, 80), 2_000, 0.8),
+        "small": ((1_000, 800, 1_200), 50_000, 0.9),
+        "medium": ((20_000, 15_000, 25_000), 500_000, 1.0),
+        "large": ((200_000, 150_000, 250_000), 4_000_000, 1.0),
+        "nell2_like": ((12_092, 9_184, 28_818), 2_000_000, 1.1),
+        "4d_small": ((500, 400, 600, 300), 40_000, 0.8),
+        "5d_small": ((120, 100, 150, 80, 60), 20_000, 0.6),
+    }
+    shape, nnz, skew = presets[name]
+    return synthetic_tensor(shape, nnz, seed=seed, skew=skew)
+
+
+def random_factors(
+    key: jax.Array, shape: Sequence[int], rank: int, dtype=jnp.float32
+) -> list[jax.Array]:
+    """Random dense factor matrices, one (I_m, R) per mode."""
+    keys = jax.random.split(key, len(shape))
+    return [
+        jax.random.normal(k, (int(s), rank), dtype) / np.sqrt(rank)
+        for k, s in zip(keys, shape)
+    ]

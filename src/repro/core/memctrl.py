@@ -1,0 +1,79 @@
+"""Programmable memory-controller configuration (paper Sec. 5).
+
+The paper's controller has three engines whose parameters are fixed at FPGA
+synthesis time and share a finite on-chip SRAM budget (BRAM/URAM).  The TPU
+analogue fixes the parameters at *trace/compile* time and shares the VMEM
+budget.  The mapping of each paper parameter (Sec. 5.2):
+
+  Cache Engine  — cache-line width        -> factor-tile row width  (R_pad lanes)
+                  number of cache lines   -> tile rows (tile_j / tile_k)
+                  associativity           -> resident tiles per operand (1 in the
+                                             kernel; modeled for the PMS)
+  DMA Engine    — number of DMAs          -> concurrent BlockSpec streams (fixed
+                                             by kernel arity)
+                  buffers per DMA         -> double-buffer depth (pipelined grid)
+                  DMA buffer size         -> blk (non-zeros per grid step)
+  Remapper      — DMA buffer size         -> remap chunk
+                  tensor-element width    -> index+value bytes
+                  max address pointers    -> pointer_budget (hierarchical remap
+                                             when a mode exceeds it)
+"""
+from __future__ import annotations
+
+import dataclasses
+
+__all__ = ["CacheEngineConfig", "DMAEngineConfig", "RemapperConfig", "MemoryControllerConfig", "TPUSpec"]
+
+
+@dataclasses.dataclass(frozen=True)
+class CacheEngineConfig:
+    tile_i: int = 256  # output-tile rows resident in VMEM (accumulator)
+    tile_j: int = 256  # input factor tile rows ("number of cache lines")
+    tile_k: int = 256
+    resident_tiles: int = 1  # "associativity": tiles kept per operand
+
+
+@dataclasses.dataclass(frozen=True)
+class DMAEngineConfig:
+    blk: int = 256  # non-zeros per grid step ("DMA buffer size")
+    buffers: int = 2  # double buffering depth (Pallas pipelines grid steps)
+
+
+@dataclasses.dataclass(frozen=True)
+class RemapperConfig:
+    pointer_budget: int = 1 << 20  # max address pointers on-chip (Sec. 3.1)
+    index_bytes: int = 4
+    value_bytes: int = 4
+
+
+@dataclasses.dataclass(frozen=True)
+class TPUSpec:
+    """Target-hardware constants (TPU v5e)."""
+
+    peak_flops: float = 197e12  # bf16
+    peak_flops_f32: float = 98.5e12
+    hbm_bw: float = 819e9  # bytes/s
+    vmem_bytes: int = 128 * 1024 * 1024
+    vmem_usable_frac: float = 0.5  # compiler scratch, double buffers
+    ici_bw_per_link: float = 50e9  # bytes/s/link
+    ici_links: int = 4  # 2D torus on v5e: 4 links/chip
+    hbm_bytes: int = 16 * 1024**3
+
+
+@dataclasses.dataclass(frozen=True)
+class MemoryControllerConfig:
+    cache: CacheEngineConfig = CacheEngineConfig()
+    dma: DMAEngineConfig = DMAEngineConfig()
+    remapper: RemapperConfig = RemapperConfig()
+
+    def vmem_bytes(self, rank_padded: int, value_bytes: int = 4) -> int:
+        """VMEM footprint of one kernel instance (per buffer set):
+        A/B/C tiles + the non-zero block stream (vals + 3 local index vectors).
+        Pallas double-buffers streamed operands -> multiply by dma.buffers."""
+        c, d = self.cache, self.dma
+        tiles = (c.tile_i + (c.tile_j + c.tile_k) * c.resident_tiles) * rank_padded * value_bytes
+        stream = d.blk * (value_bytes + 3 * 4)
+        return d.buffers * (tiles + stream)
+
+    def fits(self, spec: TPUSpec, rank_padded: int) -> bool:
+        return self.vmem_bytes(rank_padded) <= spec.vmem_bytes * spec.vmem_usable_frac

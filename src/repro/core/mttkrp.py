@@ -1,0 +1,140 @@
+"""spMTTKRP compute patterns (paper Sec. 3, Algorithms 2-5), pure JAX.
+
+Both approaches compute, for each non-zero x at (i0..iN-1) and output mode m:
+
+    out[i_m, :] += x * prod_{n != m} F_n[i_n, :]
+
+They differ only in traversal order — which on TPU becomes *which lowering
+XLA picks*:
+
+  * Approach 1 (output-direction, stream sorted by output coordinate):
+    `segment_sum` with `indices_are_sorted=True` — a streaming segmented
+    reduction, no partial-sum materialization (matches Alg. 3 / Alg. 5).
+  * Approach 2 (input-direction, unsorted stream): scatter-add — XLA
+    materializes and re-reads accumulator traffic, the moral equivalent of the
+    paper's DRAM partial sums (matches Alg. 4).
+
+The hot 3-mode path additionally has a Pallas kernel (kernels/mttkrp_pallas.py)
+driven by the BlockPlan layout; this module is the N-mode reference + the
+distributed (shard_map) implementation.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+__all__ = [
+    "hadamard_rows",
+    "mttkrp_approach1",
+    "mttkrp_approach2",
+    "mttkrp",
+    "mttkrp_sharded",
+]
+
+
+def hadamard_rows(indices: jax.Array, values: jax.Array, factors: Sequence[jax.Array], mode: int) -> jax.Array:
+    """Per-non-zero Hadamard products: rows of the Khatri-Rao product gathered
+    through the tensor's indices.  (nnz, R)."""
+    prod = None
+    for n, f in enumerate(factors):
+        if n == mode:
+            continue
+        rows = f[indices[:, n]]  # gather: the Cache-Engine access pattern
+        prod = rows if prod is None else prod * rows
+    assert prod is not None
+    return prod * values[:, None].astype(prod.dtype)
+
+
+@partial(jax.jit, static_argnames=("mode", "out_rows", "sorted_by_mode"))
+def mttkrp_approach1(
+    indices: jax.Array,
+    values: jax.Array,
+    factors: Sequence[jax.Array],
+    mode: int,
+    out_rows: int,
+    sorted_by_mode: bool = True,
+) -> jax.Array:
+    """Approach 1: output-direction computation over a stream sorted by the
+    output mode (Alg. 3).  Lowered as a sorted segmented reduction."""
+    contrib = hadamard_rows(indices, values, factors, mode)
+    return jax.ops.segment_sum(
+        contrib,
+        indices[:, mode],
+        num_segments=out_rows,
+        indices_are_sorted=sorted_by_mode,
+    )
+
+
+@partial(jax.jit, static_argnames=("mode", "out_rows"))
+def mttkrp_approach2(
+    indices: jax.Array,
+    values: jax.Array,
+    factors: Sequence[jax.Array],
+    mode: int,
+    out_rows: int,
+) -> jax.Array:
+    """Approach 2: input-direction computation (Alg. 4) — unsorted stream,
+    scatter-add accumulation (partial sums materialized by the backend)."""
+    contrib = hadamard_rows(indices, values, factors, mode)
+    out = jnp.zeros((out_rows, contrib.shape[1]), contrib.dtype)
+    return out.at[indices[:, mode]].add(contrib, indices_are_sorted=False, unique_indices=False)
+
+
+def mttkrp(
+    indices: jax.Array,
+    values: jax.Array,
+    factors: Sequence[jax.Array],
+    mode: int,
+    out_rows: int,
+    *,
+    method: str = "approach1",
+) -> jax.Array:
+    """Dispatcher. `method` in {approach1, approach2}.  The Pallas path is
+    dispatched in kernels/ops.py (it needs the host-side BlockPlan)."""
+    if method == "approach1":
+        return mttkrp_approach1(indices, values, factors, mode, out_rows)
+    if method == "approach2":
+        return mttkrp_approach2(indices, values, factors, mode, out_rows)
+    raise ValueError(f"unknown method {method!r}")
+
+
+# ---------------------------------------------------------------------------
+# Distributed MTTKRP (shard_map over the non-zero stream)
+# ---------------------------------------------------------------------------
+
+
+def mttkrp_sharded(mesh, axis_names: tuple[str, ...], mode: int, out_rows: int, method: str = "approach1"):
+    """Build a shard_map'd MTTKRP: non-zeros sharded over `axis_names`
+    (flattened data axes), factor matrices replicated, outputs psum-reduced.
+
+    This is the production distribution of the paper's kernel: every device
+    runs Approach 1 on its local remapped shard; the output factor matrix is
+    reduced across the stream shards (one all-reduce of I_out x R — the
+    `I_out*R` store term of Table 1, now a collective).
+    """
+    from jax.experimental.shard_map import shard_map
+
+    def local_fn(indices, values, *factors):
+        out = mttkrp(indices, values, factors, mode, out_rows, method=method)
+        return jax.lax.psum(out, axis_names)
+
+    nfac = None  # bound at call time via *factors
+
+    def call(indices, values, factors):
+        in_specs = (
+            P(axis_names),
+            P(axis_names),
+        ) + tuple(P(None, None) for _ in factors)
+        return shard_map(
+            local_fn,
+            mesh=mesh,
+            in_specs=in_specs,
+            out_specs=P(None, None),
+            check_rep=False,
+        )(indices, values, *factors)
+
+    return call

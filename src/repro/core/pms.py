@@ -1,0 +1,189 @@
+"""Performance Model Simulator (paper Sec. 5.3), retargeted to TPU.
+
+The paper's PMS estimates spMTTKRP execution time for a controller
+configuration + dataset, and checks the configuration fits on-chip memory, so
+the (hours-long) synthesis loop never runs on a bad configuration.  Our PMS
+does the same for the Pallas kernel: given tensor statistics (or an actual
+BlockPlan) and a MemoryControllerConfig, estimate the three roofline terms and
+search the parameter space under the VMEM budget.  Re-instantiating the kernel
+is a re-jit (seconds), but the model is still what makes the search tractable
+for large datasets.
+
+Model (per output mode):
+  t_stream  = stream_bytes / hbm_bw          (DMA Engine term)
+  t_factor  = tile_fill_bytes / hbm_bw       (Cache Engine miss term)
+  t_out     = out_tile_bytes / hbm_bw        (single flush per A tile; Approach 1)
+  t_mem     = t_stream + t_factor + t_out
+  t_compute = kernel_flops / peak_flops      (MXU one-hot segment matmul)
+  t_total   ~= max(t_mem, t_compute)         (double-buffered overlap)
+"""
+from __future__ import annotations
+
+import dataclasses
+import itertools
+import math
+from typing import Iterable, Sequence
+
+import numpy as np
+
+from .coo import SparseTensor
+from .hypergraph import HypergraphStats, stats as hg_stats
+from .memctrl import MemoryControllerConfig, CacheEngineConfig, DMAEngineConfig, RemapperConfig, TPUSpec
+from .remap import BlockPlan, plan_blocks
+
+__all__ = ["PMSEstimate", "predict_from_plan", "predict_analytic", "search", "DEFAULT_TILE_CHOICES"]
+
+
+@dataclasses.dataclass(frozen=True)
+class PMSEstimate:
+    cfg: MemoryControllerConfig
+    t_stream: float
+    t_factor: float
+    t_out: float
+    t_compute: float
+    vmem_bytes: int
+    nblocks: int
+    padding_fraction: float
+
+    @property
+    def t_mem(self) -> float:
+        return self.t_stream + self.t_factor + self.t_out
+
+    @property
+    def t_total(self) -> float:
+        return max(self.t_mem, self.t_compute)
+
+    @property
+    def bottleneck(self) -> str:
+        return "memory" if self.t_mem >= self.t_compute else "compute"
+
+
+def _rank_padded(rank: int) -> int:
+    return max(128, ((rank + 127) // 128) * 128)
+
+
+def _kernel_times(
+    cfg: MemoryControllerConfig,
+    rank: int,
+    nblocks: int,
+    fills: dict[str, int],
+    spec: TPUSpec,
+    value_bytes: int = 4,
+) -> tuple[float, float, float, float]:
+    rp = _rank_padded(rank)
+    c, d = cfg.cache, cfg.dma
+    stream_bytes = nblocks * d.blk * (value_bytes + 3 * 4)
+    factor_bytes = (fills["B"] * c.tile_j + fills["C"] * c.tile_k) * rp * value_bytes
+    out_bytes = fills["A"] * c.tile_i * rp * value_bytes
+    # one-hot segment matmul (TI x blk)@(blk x Rp) + hadamard/gather vector work
+    flops = nblocks * (2 * c.tile_i * d.blk * rp + 6 * d.blk * rp)
+    return (
+        stream_bytes / spec.hbm_bw,
+        factor_bytes / spec.hbm_bw,
+        out_bytes / spec.hbm_bw,
+        flops / spec.peak_flops_f32,
+    )
+
+
+def predict_from_plan(plan: BlockPlan, rank: int, cfg: MemoryControllerConfig, spec: TPUSpec = TPUSpec()) -> PMSEstimate:
+    """Exact PMS terms from a built memory layout (measured fills/padding)."""
+    fills = plan.tile_fills()
+    ts, tf, to, tc = _kernel_times(cfg, rank, plan.nblocks, fills, spec)
+    return PMSEstimate(
+        cfg=cfg,
+        t_stream=ts,
+        t_factor=tf,
+        t_out=to,
+        t_compute=tc,
+        vmem_bytes=cfg.vmem_bytes(_rank_padded(rank)),
+        nblocks=plan.nblocks,
+        padding_fraction=plan.padding_fraction(),
+    )
+
+
+def _expected_occupied(bins: float, balls: float) -> float:
+    """E[# occupied bins] for `balls` uniform balls in `bins` bins."""
+    if bins <= 1:
+        return 1.0
+    return bins * (1.0 - math.exp(-balls / bins))
+
+
+def predict_analytic(
+    hs: HypergraphStats,
+    mode: int,
+    rank: int,
+    cfg: MemoryControllerConfig,
+    spec: TPUSpec = TPUSpec(),
+) -> PMSEstimate:
+    """Analytic PMS: no plan construction.  Estimates group structure with a
+    balls-in-bins occupancy model (skew makes it conservative: skewed tensors
+    have fewer, hotter groups, i.e. fewer fills than predicted)."""
+    in_modes = [m for m in range(hs.nmodes) if m != mode][:2]
+    c, d = cfg.cache, cfg.dma
+    n_it = math.ceil(hs.shape[mode] / c.tile_i)
+    n_jt = math.ceil(hs.shape[in_modes[0]] / c.tile_j)
+    n_kt = math.ceil(hs.shape[in_modes[1]] / c.tile_k) if len(in_modes) > 1 else 1
+
+    groups = _expected_occupied(n_it * n_jt * n_kt, hs.nnz)
+    # each occupied (it,jt,kt) group costs >= 1 block; remaining nnz fill blocks
+    nblocks = int(groups + hs.nnz / d.blk)
+    fills = {
+        "A": _expected_occupied(n_it, hs.nnz),
+        "B": groups,  # jt changes at most once per group
+        "C": groups,
+    }
+    fills = {k: int(max(1, v)) for k, v in fills.items()}
+    ts, tf, to, tc = _kernel_times(cfg, rank, nblocks, fills, spec)
+    padding = 1.0 - hs.nnz / float(nblocks * d.blk)
+    return PMSEstimate(
+        cfg=cfg,
+        t_stream=ts,
+        t_factor=tf,
+        t_out=to,
+        t_compute=tc,
+        vmem_bytes=cfg.vmem_bytes(_rank_padded(rank)),
+        nblocks=nblocks,
+        padding_fraction=max(0.0, padding),
+    )
+
+
+DEFAULT_TILE_CHOICES: tuple[int, ...] = (128, 256, 512, 1024)
+DEFAULT_BLK_CHOICES: tuple[int, ...] = (128, 256, 512, 1024)
+
+
+def search(
+    st_or_stats: SparseTensor | HypergraphStats,
+    mode: int,
+    rank: int,
+    *,
+    spec: TPUSpec = TPUSpec(),
+    tile_choices: Sequence[int] = DEFAULT_TILE_CHOICES,
+    blk_choices: Sequence[int] = DEFAULT_BLK_CHOICES,
+    exact: bool = False,
+    top_k: int = 5,
+) -> list[PMSEstimate]:
+    """Exhaustive module-by-module parameter search (paper Sec. 5.3), pruned
+    by the VMEM-fit constraint.  exact=True builds a BlockPlan per candidate
+    (accurate, slower) — use for final configuration of a dataset domain."""
+    if isinstance(st_or_stats, SparseTensor):
+        hs = hg_stats(st_or_stats)
+        st = st_or_stats
+    else:
+        hs, st = st_or_stats, None
+        exact = False
+
+    results: list[PMSEstimate] = []
+    for ti, tj, tk, blk in itertools.product(tile_choices, tile_choices, tile_choices, blk_choices):
+        cfg = MemoryControllerConfig(
+            cache=CacheEngineConfig(tile_i=ti, tile_j=tj, tile_k=tk),
+            dma=DMAEngineConfig(blk=blk),
+        )
+        if not cfg.fits(spec, _rank_padded(rank)):
+            continue
+        if exact and st is not None:
+            plan = plan_blocks(st, mode, tile_i=ti, tile_j=tj, tile_k=tk, blk=blk)
+            results.append(predict_from_plan(plan, rank, cfg, spec))
+        else:
+            results.append(predict_analytic(hs, mode, rank, cfg, spec))
+    results.sort(key=lambda e: e.t_total)
+    return results[:top_k]

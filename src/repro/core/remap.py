@@ -1,0 +1,265 @@
+"""Tensor Remapper (paper Alg. 5 + Sec. 5.1.3), adapted to TPU.
+
+The paper remaps (re-sorts) the non-zero stream into the *output mode's*
+order before each mode's MTTKRP, so Approach 1 (no DRAM partial sums) applies
+to every mode with a single tensor copy.  The FPGA mechanism is a table of
+per-output-coordinate *address pointers* (a counting sort); when the table
+exceeds on-chip memory the paper flags it as a key design problem.
+
+TPU adaptation:
+  * `remap_stable`           — XLA stable sort (production path, jittable).
+  * `remap_pointer_machine`  — faithful pointer-table emulation (lax.scan FIFO,
+                               one element per step) used to *validate* that the
+                               sort path implements exactly the paper's mapping.
+  * `remap_radix`            — hierarchical counting sort for when the pointer
+                               table exceeds the budget (paper's overflow case):
+                               digits of `pointer_budget` bins per pass.
+  * `plan_blocks`            — two-level *tile* remap producing the Pallas
+                               kernel's memory layout: blocks sorted by
+                               (output tile, input tile pair) with per-block
+                               metadata. This is the "ideal memory layout" of
+                               Sec. 3.1 (bounded pointer table + equal-sized
+                               partitions).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .coo import SparseTensor
+
+__all__ = [
+    "pointer_table",
+    "remap_stable",
+    "remap_pointer_machine",
+    "remap_radix",
+    "BlockPlan",
+    "plan_blocks",
+]
+
+
+def pointer_table(coords: jax.Array, nbins: int) -> tuple[jax.Array, jax.Array]:
+    """The paper's address-pointer table: per-bin base addresses.
+
+    Returns (offsets, counts): offsets[b] = where bin b's first element goes
+    (exclusive prefix sum of the histogram)."""
+    counts = jnp.zeros((nbins,), jnp.int32).at[coords].add(1)
+    offsets = jnp.concatenate([jnp.zeros((1,), jnp.int32), jnp.cumsum(counts)[:-1]])
+    return offsets, counts
+
+
+@partial(jax.jit, static_argnames=("mode",))
+def remap_stable(indices: jax.Array, values: jax.Array, mode: int):
+    """Stable sort of the COO stream by one mode's coordinates.
+
+    Production remap: XLA's sort is the TPU-native equivalent of the streaming
+    counting sort (same output order — stability preserves the FIFO property
+    the paper's weak-consistency model requires).
+    Returns (indices_sorted, values_sorted, perm)."""
+    perm = jnp.argsort(indices[:, mode], stable=True)
+    return indices[perm], values[perm], perm
+
+
+def remap_pointer_machine(indices: np.ndarray, values: np.ndarray, mode: int, nbins: int):
+    """Paper-faithful Tensor Remapper emulation: stream elements one by one,
+    looking up + bumping the per-output-coordinate address pointer (Alg. 5
+    lines 3-6).  Host-side (numpy); used in tests to certify `remap_stable`
+    produces the identical layout."""
+    coords = indices[:, mode]
+    counts = np.bincount(coords, minlength=nbins)
+    ptr = np.concatenate([[0], np.cumsum(counts)[:-1]]).astype(np.int64)
+    out_idx = np.empty_like(indices)
+    out_val = np.empty_like(values)
+    for z in range(indices.shape[0]):  # the element-wise store stream
+        c = coords[z]
+        p = ptr[c]
+        out_idx[p] = indices[z]
+        out_val[p] = values[z]
+        ptr[c] = p + 1
+    return out_idx, out_val
+
+
+@partial(jax.jit, static_argnames=("mode", "nbins", "pointer_budget"))
+def remap_radix(indices: jax.Array, values: jax.Array, mode: int, nbins: int, pointer_budget: int):
+    """Hierarchical remap for pointer tables larger than on-chip memory
+    (paper Sec. 3.1: 10M-coordinate modes need 40 MB of pointers).
+
+    Runs ceil(log_budget(nbins)) stable counting-sort passes, least-significant
+    digit first, with at most `pointer_budget` pointers live per pass — the
+    direct analogue of splitting the sort into on-chip-sized rounds."""
+    ndigits = max(1, math.ceil(math.log(max(nbins, 2)) / math.log(pointer_budget)))
+    coords = indices[:, mode]
+    order = jnp.arange(coords.shape[0])
+    key = coords
+    for _ in range(ndigits):
+        digit = key % pointer_budget
+        p = jnp.argsort(digit, stable=True)  # counting-sort pass with <= budget bins
+        order = order[p]
+        key = key[p] // pointer_budget
+    return indices[order], values[order], order
+
+
+# ---------------------------------------------------------------------------
+# Tile-level block plan for the Pallas kernel (the "memory layout")
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class BlockPlan:
+    """Kernel memory layout: the remapped non-zero stream plus per-block tile
+    metadata.  All arrays host-side numpy; `to_device` happens in ops.py.
+
+    Layout contract (consumed by kernels/mttkrp_pallas.py):
+      * non-zeros are grouped into blocks of `blk` elements;
+      * blocks are sorted by (output tile, then input tile pair) — Approach 1
+        at tile granularity, so each output tile's blocks are contiguous;
+      * within a block every element's coordinates fall inside the block's
+        (it, jt, kt) tiles; local indices are precomputed;
+      * padding elements have value 0 (and local index 0).
+    """
+
+    vals: np.ndarray  # (nblocks*blk,) f32
+    iloc: np.ndarray  # (nblocks*blk,) int32 — output-row index within tile
+    jloc: np.ndarray  # (nblocks*blk,) int32
+    kloc: np.ndarray  # (nblocks*blk,) int32
+    block_it: np.ndarray  # (nblocks,) int32
+    block_jt: np.ndarray  # (nblocks,) int32
+    block_kt: np.ndarray  # (nblocks,) int32
+    tile_i: int
+    tile_j: int
+    tile_k: int
+    blk: int
+    out_rows: int  # padded I_out (multiple of tile_i)
+    rows_j: int  # padded I_j
+    rows_k: int  # padded I_k
+    mode: int
+    in_modes: tuple[int, int]
+    nnz: int  # true nnz before padding
+
+    @property
+    def nblocks(self) -> int:
+        return self.block_it.shape[0]
+
+    # --- locality statistics (feed the PMS / Cache-Engine model) ---
+    def tile_fills(self) -> dict[str, int]:
+        """Number of HBM->VMEM tile fetches Pallas will issue: a tile is
+        re-fetched only when the block's tile id *changes* between consecutive
+        grid steps (Pallas skips the copy when the index map is unchanged —
+        the run-length structure of the plan IS the cache)."""
+
+        def fills(ids: np.ndarray) -> int:
+            if ids.size == 0:
+                return 0
+            return int(1 + np.count_nonzero(ids[1:] != ids[:-1]))
+
+        return {
+            "A": fills(self.block_it),
+            "B": fills(self.block_jt),
+            "C": fills(self.block_kt),
+        }
+
+    def padding_fraction(self) -> float:
+        return 1.0 - self.nnz / float(self.vals.shape[0]) if self.vals.size else 0.0
+
+    def a_tile_single_flush(self) -> bool:
+        """Approach-1 invariant: each output tile's blocks are contiguous."""
+        it = self.block_it
+        seen_last = {}
+        for pos, t in enumerate(it):
+            if t in seen_last and seen_last[t] != pos - 1:
+                return False
+            seen_last[t] = pos
+        return True
+
+
+def _ceil_to(x: int, m: int) -> int:
+    return ((x + m - 1) // m) * m
+
+
+def plan_blocks(
+    st: SparseTensor,
+    mode: int,
+    *,
+    tile_i: int = 256,
+    tile_j: int = 256,
+    tile_k: int = 256,
+    blk: int = 256,
+) -> BlockPlan:
+    """Two-level tile remap (host-side preprocessing == the Tensor Remapper +
+    memory-layout generator).  3-mode tensors only — the Pallas kernel is the
+    3-mode hot path; N-mode tensors use the pure-JAX path (core/mttkrp.py)."""
+    assert st.nmodes == 3, "kernel block plan supports 3-mode tensors"
+    in_modes = tuple(m for m in range(3) if m != mode)
+    i = st.indices[:, mode].astype(np.int64)
+    j = st.indices[:, in_modes[0]].astype(np.int64)
+    k = st.indices[:, in_modes[1]].astype(np.int64)
+    v = st.values
+
+    it, jt, kt = i // tile_i, j // tile_j, k // tile_k
+    # Remap: sort by (output tile, input tile pair). lexsort's last key is
+    # primary. Stable => preserves prior order within a tile triple.
+    order = np.lexsort((kt, jt, it))
+    i, j, k, v = i[order], j[order], k[order], v[order]
+    it, jt, kt = it[order], jt[order], kt[order]
+
+    # Group boundaries over identical (it, jt, kt) triples.
+    key = (it * ((max(st.shape[in_modes[0]] // tile_j, 0)) + 2) + jt) * (
+        (st.shape[in_modes[1]] // tile_k) + 2
+    ) + kt
+    boundaries = np.flatnonzero(np.concatenate([[True], key[1:] != key[:-1]]))
+    group_sizes = np.diff(np.concatenate([boundaries, [key.size]]))
+
+    # Pad each group to a multiple of blk and emit per-block metadata.
+    padded_sizes = np.maximum(_ceil_to(1, blk), ((group_sizes + blk - 1) // blk) * blk)
+    total = int(padded_sizes.sum())
+    nblocks = total // blk
+
+    vals = np.zeros((total,), np.float32)
+    iloc = np.zeros((total,), np.int32)
+    jloc = np.zeros((total,), np.int32)
+    kloc = np.zeros((total,), np.int32)
+    block_it = np.empty((nblocks,), np.int32)
+    block_jt = np.empty((nblocks,), np.int32)
+    block_kt = np.empty((nblocks,), np.int32)
+
+    src = 0
+    dst = 0
+    b = 0
+    for g, (gsize, psize) in enumerate(zip(group_sizes, padded_sizes)):
+        s, e = src, src + gsize
+        vals[dst : dst + gsize] = v[s:e]
+        iloc[dst : dst + gsize] = (i[s:e] - it[s] * tile_i).astype(np.int32)
+        jloc[dst : dst + gsize] = (j[s:e] - jt[s] * tile_j).astype(np.int32)
+        kloc[dst : dst + gsize] = (k[s:e] - kt[s] * tile_k).astype(np.int32)
+        nb = psize // blk
+        block_it[b : b + nb] = it[s]
+        block_jt[b : b + nb] = jt[s]
+        block_kt[b : b + nb] = kt[s]
+        src = e
+        dst += psize
+        b += nb
+
+    return BlockPlan(
+        vals=vals,
+        iloc=iloc,
+        jloc=jloc,
+        kloc=kloc,
+        block_it=block_it,
+        block_jt=block_jt,
+        block_kt=block_kt,
+        tile_i=tile_i,
+        tile_j=tile_j,
+        tile_k=tile_k,
+        blk=blk,
+        out_rows=_ceil_to(st.shape[mode], tile_i),
+        rows_j=_ceil_to(st.shape[in_modes[0]], tile_j),
+        rows_k=_ceil_to(st.shape[in_modes[1]], tile_k),
+        mode=mode,
+        in_modes=in_modes,
+        nnz=st.nnz,
+    )

@@ -1,0 +1,3 @@
+"""Data pipeline: deterministic synthetic token/tensor streams with
+prefetch."""
+from .pipeline import TokenPipeline, make_batch_iterator

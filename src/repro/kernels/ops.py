@@ -1,0 +1,123 @@
+"""Jit'd wrappers for the MTTKRP kernels: plan construction + padding +
+dispatch between the Pallas kernel, its interpret-mode validation path, and
+the pure-JAX approaches.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..core.coo import SparseTensor
+from ..core.memctrl import MemoryControllerConfig, TPUSpec
+from ..core.pms import search as pms_search
+from ..core.remap import BlockPlan, plan_blocks
+from ..core.mttkrp import mttkrp as mttkrp_jax
+from .mttkrp_pallas import mttkrp_pallas_call, pad_factor, rank_padded
+
+__all__ = ["PlannedMTTKRP", "make_planned_mttkrp", "mttkrp_auto"]
+
+
+@dataclasses.dataclass
+class PlannedMTTKRP:
+    """A compiled memory-controller instance for one (tensor, mode): the
+    device-resident BlockPlan layout + a callable running the Pallas kernel."""
+
+    plan: BlockPlan
+    rank: int
+    interpret: bool
+    _dev: dict = dataclasses.field(default_factory=dict)
+
+    def __post_init__(self):
+        p = self.plan
+        nb, blk = p.nblocks, p.blk
+        self._dev = dict(
+            block_it=jnp.asarray(p.block_it),
+            block_jt=jnp.asarray(p.block_jt),
+            block_kt=jnp.asarray(p.block_kt),
+            vals=jnp.asarray(p.vals).reshape(nb, blk),
+            iloc=jnp.asarray(p.iloc).reshape(nb, blk),
+            jloc=jnp.asarray(p.jloc).reshape(nb, blk),
+            kloc=jnp.asarray(p.kloc).reshape(nb, blk),
+        )
+
+    def __call__(self, factor_j: jax.Array, factor_k: jax.Array) -> jax.Array:
+        """factors for the two *input* modes (plan.in_modes order).
+        Returns (out_rows_unpadded, rank)."""
+        p = self.plan
+        rp = rank_padded(self.rank)
+        b_pad = pad_factor(factor_j, p.rows_j, rp)
+        c_pad = pad_factor(factor_k, p.rows_k, rp)
+        out = mttkrp_pallas_call(
+            self._dev["block_it"],
+            self._dev["block_jt"],
+            self._dev["block_kt"],
+            self._dev["vals"],
+            self._dev["iloc"],
+            self._dev["jloc"],
+            self._dev["kloc"],
+            b_pad,
+            c_pad,
+            tile_i=p.tile_i,
+            tile_j=p.tile_j,
+            tile_k=p.tile_k,
+            blk=p.blk,
+            out_rows=p.out_rows,
+            interpret=self.interpret,
+        )
+        return out[: p.out_rows, : self.rank]
+
+    def output(self, factors: Sequence[jax.Array], true_rows: int) -> jax.Array:
+        fj = factors[self.plan.in_modes[0]]
+        fk = factors[self.plan.in_modes[1]]
+        return self(fj, fk)[:true_rows]
+
+
+def make_planned_mttkrp(
+    st: SparseTensor,
+    mode: int,
+    rank: int,
+    *,
+    cfg: MemoryControllerConfig | None = None,
+    auto_tune: bool = False,
+    spec: TPUSpec = TPUSpec(),
+    interpret: bool = True,
+) -> PlannedMTTKRP:
+    """Build the memory layout (Tensor Remapper) + kernel instance.  With
+    auto_tune=True the PMS picks the controller parameters (Sec. 5.3)."""
+    if auto_tune:
+        best = pms_search(st, mode, rank, spec=spec, top_k=1)[0]
+        cfg = best.cfg
+    cfg = cfg or MemoryControllerConfig()
+    plan = plan_blocks(
+        st,
+        mode,
+        tile_i=cfg.cache.tile_i,
+        tile_j=cfg.cache.tile_j,
+        tile_k=cfg.cache.tile_k,
+        blk=cfg.dma.blk,
+    )
+    return PlannedMTTKRP(plan=plan, rank=rank, interpret=interpret)
+
+
+def mttkrp_auto(
+    st: SparseTensor,
+    factors: Sequence[jax.Array],
+    mode: int,
+    *,
+    method: str = "pallas",
+    interpret: bool = True,
+    cfg: MemoryControllerConfig | None = None,
+) -> jax.Array:
+    """One-shot dispatcher used by tests/benchmarks: 'pallas' | 'approach1' |
+    'approach2'."""
+    rank = int(factors[0].shape[1])
+    if method == "pallas":
+        op = make_planned_mttkrp(st, mode, rank, cfg=cfg, interpret=interpret)
+        return op.output(factors, st.shape[mode])
+    idx, val = jnp.asarray(st.indices), jnp.asarray(st.values)
+    return mttkrp_jax(idx, val, factors, mode, st.shape[mode], method=method)

@@ -1,0 +1,73 @@
+"""Pure-jnp oracles for the MTTKRP kernels.
+
+Two independent references:
+  * `mttkrp_ref`        — gather -> Hadamard -> segment_sum (mirrors Alg. 2).
+  * `mttkrp_ref_dense`  — densify + einsum; O(I*J*K*R), tiny shapes only, used
+                          to cross-check the sparse reference itself.
+"""
+from __future__ import annotations
+
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = ["mttkrp_ref", "mttkrp_ref_dense", "mttkrp_plan_ref"]
+
+
+def mttkrp_ref(
+    indices: jax.Array,
+    values: jax.Array,
+    factors: Sequence[jax.Array],
+    mode: int,
+    out_rows: int,
+) -> jax.Array:
+    prod = None
+    for n, f in enumerate(factors):
+        if n == mode:
+            continue
+        rows = f[indices[:, n]]
+        prod = rows if prod is None else prod * rows
+    contrib = prod * values[:, None].astype(prod.dtype)
+    return jax.ops.segment_sum(contrib, indices[:, mode], num_segments=out_rows)
+
+
+def mttkrp_ref_dense(
+    indices: np.ndarray,
+    values: np.ndarray,
+    factors: Sequence[np.ndarray],
+    mode: int,
+    out_rows: int,
+) -> np.ndarray:
+    """Densify-and-einsum cross-check (3-mode, duplicate-accumulating)."""
+    assert len(factors) == 3
+    shape = tuple(int(f.shape[0]) for f in factors)
+    dense = np.zeros(shape, np.float64)
+    np.add.at(dense, tuple(indices[:, m] for m in range(3)), values.astype(np.float64))
+    ins = [n for n in range(3) if n != mode]
+    letters = "ijk"
+    spec = f"ijk,{letters[ins[0]]}r,{letters[ins[1]]}r->{letters[mode]}r"
+    out = np.einsum(spec, dense, factors[ins[0]].astype(np.float64), factors[ins[1]].astype(np.float64))
+    return out[:out_rows].astype(np.float32)
+
+
+def mttkrp_plan_ref(plan, factors_padded: Sequence[jax.Array], rank_padded: int) -> jax.Array:
+    """Oracle operating on the *kernel's* input layout (BlockPlan): computes
+    exactly what the Pallas kernel should produce, including padded rows.
+    Returns (out_rows_padded, rank_padded)."""
+    b_pad, c_pad = factors_padded
+    blk = plan.blk
+    nb = plan.nblocks
+    vals = jnp.asarray(plan.vals)
+    iloc = jnp.asarray(plan.iloc)
+    jloc = jnp.asarray(plan.jloc)
+    kloc = jnp.asarray(plan.kloc)
+    git = jnp.repeat(jnp.asarray(plan.block_it), blk)
+    gjt = jnp.repeat(jnp.asarray(plan.block_jt), blk)
+    gkt = jnp.repeat(jnp.asarray(plan.block_kt), blk)
+    gi = git * plan.tile_i + iloc
+    gj = gjt * plan.tile_j + jloc
+    gk = gkt * plan.tile_k + kloc
+    contrib = vals[:, None] * b_pad[gj] * c_pad[gk]
+    return jax.ops.segment_sum(contrib, gi, num_segments=plan.out_rows)

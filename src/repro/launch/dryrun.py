@@ -1,0 +1,374 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: prove every (arch x shape x mesh) cell lowers, SPMD-
+partitions, and fits per-device HBM — without hardware.
+
+Per cell this script:
+  1. builds the production mesh (single-pod 16x16 / multi-pod 2x16x16 of
+     placeholder host devices — the two lines above MUST precede any jax
+     import, device count locks at first init);
+  2. lowers + compiles the cell's step (train_step / prefill / decode_step)
+     against ShapeDtypeStruct stand-ins (no allocation at full scale);
+  3. records compiled.memory_analysis() (fits-in-HBM proof),
+     compiled.cost_analysis(), and the collective-op schedule parsed from the
+     partitioned HLO;
+  4. optionally (--probe) lowers unrolled depth-p / depth-2p cost probes —
+     XLA counts a while-loop body once, so scanned-module cost_analysis
+     undercounts; probes give exact per-period FLOPs/bytes/collective terms
+     that benchmarks/roofline.py extrapolates (see EXPERIMENTS.md §Roofline
+     methodology).
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch qwen3-0.6b \
+      --shape train_4k [--multi-pod] [--probe] [--out artifacts/dryrun]
+  PYTHONPATH=src python -m repro.launch.dryrun --matrix [--multi-pod]
+"""
+import argparse
+import dataclasses
+import json
+import re
+import sys
+import time
+from functools import partial
+
+
+# ---------------------------------------------------------------------------
+# cell policy
+# ---------------------------------------------------------------------------
+
+FULL_ATTENTION = {
+    "qwen3-0.6b", "qwen2-1.5b", "minitron-4b", "phi4-mini-3.8b",
+    "phi3.5-moe-42b-a6.6b", "grok-1-314b", "whisper-large-v3",
+    "llama-3.2-vision-11b",
+}
+
+
+def skip_reason(arch: str, shape: str) -> str | None:
+    if shape == "long_500k" and arch in FULL_ATTENTION:
+        return "long_500k needs sub-quadratic attention; skipped for pure full-attention archs (DESIGN.md §5)"
+    return None
+
+
+def default_microbatches(cfg, shape_cfg, mesh) -> int:
+    """Gradient-accumulation depth: keep one-ish sequence per DP group per
+    microbatch for wide models (activation-memory lever)."""
+    if shape_cfg.kind != "train":
+        return 1
+    from .mesh import dp_size
+
+    per_dp = max(1, shape_cfg.global_batch // dp_size(mesh))
+    target = 1 if cfg.d_model >= 3072 else 4
+    return max(1, per_dp // target)
+
+
+# ---------------------------------------------------------------------------
+# HLO collective parsing
+# ---------------------------------------------------------------------------
+
+_COLL_RE = re.compile(
+    r"=\s*(\([^)]*\)|\S+)\s+"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"[-a-z]*\("
+)
+_SHAPE_RE = re.compile(r"([a-z][a-z0-9]*)\[([0-9,]*)\]")
+
+_DTYPE_BYTES = {
+    "f32": 4, "bf16": 2, "f16": 2, "s32": 4, "u32": 4, "s8": 1, "u8": 1,
+    "s64": 8, "u64": 8, "f64": 8, "pred": 1, "s16": 2, "u16": 2, "f8e4m3": 1,
+    "f8e5m2": 1,
+}
+
+
+def _shape_bytes(sig: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(sig):
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES.get(dt, 4)
+    return total
+
+
+def parse_collectives(hlo_text: str) -> dict:
+    """Sum output bytes per collective kind over the partitioned module.
+    NOTE: ops inside while bodies are counted once (see probe methodology)."""
+    per_kind: dict[str, dict] = {}
+    for m in _COLL_RE.finditer(hlo_text):
+        sig, kind = m.group(1), m.group(2)
+        b = _shape_bytes(sig)
+        d = per_kind.setdefault(kind, {"count": 0, "bytes": 0})
+        d["count"] += 1
+        d["bytes"] += b
+    return per_kind
+
+
+# ---------------------------------------------------------------------------
+# lowering
+# ---------------------------------------------------------------------------
+
+
+def auto_remat_group(n_reps: int) -> int:
+    """Largest divisor of n_reps <= sqrt(n_reps) (sqrt-remat schedule)."""
+    if n_reps < 16:
+        return 0
+    best = 0
+    d = 1
+    while d * d <= n_reps:
+        if n_reps % d == 0:
+            best = d
+        d += 1
+    return best if best > 1 else 0
+
+
+def build_cell(arch: str, shape_name: str, mesh, *, num_microbatches=None, sp=False,
+               compress_grads=False, attn_chunk=2048, probe_depth=None, remat=None,
+               remat_group=None, barrier_xs=None):
+    """Returns (fn, args_abstract, in_shardings, donate) for one cell."""
+    import jax
+    import jax.numpy as jnp
+    from jax.sharding import NamedSharding, PartitionSpec as P
+
+    from ..configs import get_config, SHAPES
+    from ..dist.sharding import (batch_pspecs, batch_specs, make_plan,
+                                 param_pspecs, valid_spec)
+    from ..models import transformer as T
+    from ..serve.engine import cache_pspecs, cache_specs
+    from ..train.optimizer import AdamWConfig, adamw_init
+    from ..train.train_step import TrainState, make_train_step
+
+    cfg = get_config(arch)
+    if SHAPES[shape_name].kind != "train":
+        # serving uses bf16 checkpoints: halves parameter args + per-layer
+        # weight traffic (fp32 master is a training-only concern)
+        cfg = dataclasses.replace(cfg, param_dtype="bfloat16")
+    if probe_depth is not None:  # unrolled shallow probe for exact costs
+        period = cfg.period
+        changes = dict(n_layers=probe_depth * period, scan_unroll=True)
+        if cfg.encoder_layers:
+            changes["encoder_layers"] = probe_depth
+        cfg = dataclasses.replace(cfg, **changes)
+    if remat is not None:
+        cfg = dataclasses.replace(cfg, remat=remat)
+    if probe_depth is None:
+        rg = remat_group if remat_group is not None else auto_remat_group(cfg.n_layers // cfg.period)
+        cfg = dataclasses.replace(cfg, remat_group=rg)
+    if barrier_xs is not None:
+        cfg = dataclasses.replace(cfg, barrier_xs=barrier_xs)
+    shape_cfg = SHAPES[shape_name]
+    plan = make_plan(mesh, cfg, sp=sp)
+    if (shape_cfg.kind == "prefill" and cfg.n_heads
+            and cfg.n_heads % mesh.shape["model"] != 0):
+        # heads can't shard over TP -> scores are batch-sharded only; cap the
+        # query chunk so the per-chunk f32 score buffer stays ~2 GiB
+        attn_chunk = min(attn_chunk, 1024)
+    opt_cfg = AdamWConfig(
+        state_dtype="bfloat16" if cfg.fsdp else "float32",
+        update_slices=int(os.environ.get("REPRO_UPDATE_SLICES", "1")),
+        factored_v=cfg.fsdp,  # Adafactor-style v for the HBM-bound archs
+    )
+
+    def named(tree_specs):
+        return jax.tree.map(lambda s: NamedSharding(mesh, s), tree_specs,
+                            is_leaf=lambda x: isinstance(x, P))
+
+    params_abs = T.abstract_params(cfg)
+    p_specs = param_pspecs(params_abs, plan)
+    p_specs = jax.tree.map(lambda a, s: valid_spec(a.shape, s, mesh), params_abs, p_specs,
+                           is_leaf=lambda x: isinstance(x, P))
+    batch_abs = batch_specs(cfg, shape_cfg, plan)
+    b_specs = {k: valid_spec(batch_abs[k].shape, s, mesh)
+               for k, s in batch_pspecs(cfg, shape_cfg, plan).items()}
+
+    if shape_cfg.kind == "train":
+        nmb = num_microbatches or default_microbatches(cfg, shape_cfg, mesh)
+        state_abs = jax.eval_shape(
+            lambda: TrainState(
+                params=T.init_params(jax.random.PRNGKey(0), cfg),
+                opt=adamw_init(params_abs, opt_cfg),
+                rng=jax.random.PRNGKey(0),
+            )
+        )
+        from ..train.optimizer import opt_pspecs
+
+        state_specs = TrainState(
+            params=p_specs,
+            opt=opt_pspecs(params_abs, p_specs, opt_cfg),
+            rng=P(),
+        )
+        step_fn = make_train_step(cfg, opt_cfg, plan, num_microbatches=nmb,
+                                  attn_chunk=attn_chunk, compress_grads=compress_grads)
+        fn = jax.jit(step_fn,
+                     in_shardings=(named(state_specs), named(b_specs)),
+                     donate_argnums=(0,))
+        return fn, (state_abs, batch_abs), dict(num_microbatches=nmb, cfg=cfg)
+
+    if shape_cfg.kind == "prefill":
+        def prefill_fn(params, batch):
+            return T.prefill(params, batch, cfg, cache_len=shape_cfg.seq_len,
+                             plan=plan, attn_chunk=attn_chunk)
+
+        fn = jax.jit(prefill_fn, in_shardings=(named(p_specs), named(b_specs)))
+        return fn, (params_abs, batch_abs), dict(cfg=cfg)
+
+    # decode: one new token against a seq_len cache
+    B = shape_cfg.global_batch
+    caches_abs = cache_specs(cfg, B, shape_cfg.seq_len)
+    c_specs = cache_pspecs(cfg, plan)
+    c_specs = jax.tree.map(lambda a, s: valid_spec(a.shape, s, mesh), caches_abs, c_specs,
+                           is_leaf=lambda x: isinstance(x, P))
+    tok_abs = batch_abs["tokens"]
+    pos_abs = batch_abs["pos"]
+    mem_abs = {k: v for k, v in batch_abs.items() if k in ("frames", "images")}
+
+    def decode_fn(params, tokens, pos, caches, memory):
+        return T.decode_step(params, tokens, pos, caches, memory, cfg, plan)
+
+    fn = jax.jit(
+        decode_fn,
+        in_shardings=(
+            named(p_specs),
+            NamedSharding(mesh, valid_spec(tok_abs.shape, P(plan.dp or None, None), mesh)),
+            NamedSharding(mesh, valid_spec(pos_abs.shape, P(plan.dp or None), mesh)),
+            named(c_specs),
+            named({k: b_specs[k] for k in mem_abs}),
+        ),
+        donate_argnums=(3,),  # caches update in place
+    )
+    return fn, (params_abs, tok_abs, pos_abs, caches_abs, mem_abs), dict(cfg=cfg)
+
+
+def run_cell(arch: str, shape_name: str, *, multi_pod: bool, probe: bool = False,
+             out_dir: str = "artifacts/dryrun", **overrides) -> dict:
+    import jax
+    from .mesh import make_production_mesh
+
+    mesh_name = "multi" if multi_pod else "single"
+    rec: dict = {"arch": arch, "shape": shape_name, "mesh": mesh_name,
+                 "nchips": 512 if multi_pod else 256}
+    reason = skip_reason(arch, shape_name)
+    if reason:
+        rec["skipped"] = reason
+        return rec
+
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    t0 = time.time()
+    with mesh:
+        fn, args, info = build_cell(arch, shape_name, mesh, **overrides)
+        lowered = fn.lower(*args)
+        t_lower = time.time() - t0
+        t0 = time.time()
+        compiled = lowered.compile()
+        t_compile = time.time() - t0
+
+        ma = compiled.memory_analysis()
+        ca = compiled.cost_analysis() or {}
+        hlo = compiled.as_text()
+        rec.update(
+            ok=True,
+            lower_s=round(t_lower, 1),
+            compile_s=round(t_compile, 1),
+            num_microbatches=info.get("num_microbatches"),
+            memory=dict(
+                argument_bytes=int(ma.argument_size_in_bytes),
+                output_bytes=int(ma.output_size_in_bytes),
+                temp_bytes=int(ma.temp_size_in_bytes),
+                alias_bytes=int(ma.alias_size_in_bytes),
+                peak_bytes=int(ma.argument_size_in_bytes + ma.output_size_in_bytes
+                               + ma.temp_size_in_bytes - ma.alias_size_in_bytes),
+            ),
+            cost=dict(
+                flops=float(ca.get("flops", -1.0)),
+                bytes_accessed=float(ca.get("bytes accessed", -1.0)),
+            ),
+            collectives=parse_collectives(hlo),
+        )
+
+    if probe:  # exact per-depth costs: unrolled depth-1 / depth-2 periods
+        rec["probes"] = {}
+        for depth in (1, 2):
+            with mesh:
+                pfn, pargs, pinfo = build_cell(
+                    arch, shape_name, mesh, probe_depth=depth,
+                    **{**overrides, "num_microbatches": 1},
+                )
+                pcompiled = pfn.lower(*pargs).compile()
+                pca = pcompiled.cost_analysis() or {}
+                rec["probes"][f"depth{depth}"] = dict(
+                    flops=float(pca.get("flops", -1.0)),
+                    bytes_accessed=float(pca.get("bytes accessed", -1.0)),
+                    transcendentals=float(pca.get("transcendentals", 0.0)),
+                    collectives=parse_collectives(pcompiled.as_text()),
+                )
+        rec["probe_meta"] = {
+            "period": info["cfg"].period if "cfg" in info else None,
+            "n_reps_full": get_n_reps(arch),
+        }
+
+    os.makedirs(out_dir, exist_ok=True)
+    path = os.path.join(out_dir, f"{arch}__{shape_name}__{mesh_name}.json")
+    with open(path, "w") as f:
+        json.dump(rec, f, indent=1, default=str)
+    rec["artifact"] = path
+    return rec
+
+
+def get_n_reps(arch: str) -> int:
+    from ..configs import get_config
+
+    cfg = get_config(arch)
+    return cfg.n_layers // cfg.period
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--arch")
+    ap.add_argument("--shape")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--probe", action="store_true", help="also lower unrolled cost probes")
+    ap.add_argument("--matrix", action="store_true", help="run every (arch x shape)")
+    ap.add_argument("--out", default="artifacts/dryrun")
+    ap.add_argument("--microbatches", type=int, default=None)
+    ap.add_argument("--sp", action="store_true", help="sequence-parallel activations")
+    ap.add_argument("--compress-grads", action="store_true")
+    ap.add_argument("--attn-chunk", type=int, default=2048)
+    ap.add_argument("--remat-group", type=int, default=None)
+    ap.add_argument("--barrier-xs", action="store_true", default=None)
+    args = ap.parse_args(argv)
+
+    from ..configs import SHAPES, list_configs
+
+    cells = (
+        [(a, s) for a in list_configs() for s in SHAPES]
+        if args.matrix
+        else [(args.arch, args.shape)]
+    )
+    failures = 0
+    for arch, shape in cells:
+        try:
+            rec = run_cell(
+                arch, shape, multi_pod=args.multi_pod, probe=args.probe,
+                out_dir=args.out, num_microbatches=args.microbatches,
+                sp=args.sp, compress_grads=args.compress_grads,
+                attn_chunk=args.attn_chunk, remat_group=args.remat_group,
+                barrier_xs=args.barrier_xs,
+            )
+            if rec.get("skipped"):
+                print(f"[dryrun] SKIP {arch} {shape}: {rec['skipped']}")
+            else:
+                m = rec["memory"]
+                print(
+                    f"[dryrun] OK {arch} {shape} {rec['mesh']}: "
+                    f"peak/device={m['peak_bytes']/2**30:.2f} GiB "
+                    f"args={m['argument_bytes']/2**30:.2f} temp={m['temp_bytes']/2**30:.2f} "
+                    f"compile={rec['compile_s']}s colls={sum(c['count'] for c in rec['collectives'].values())}"
+                )
+        except Exception as e:  # a failing cell is a bug — surface and count
+            failures += 1
+            print(f"[dryrun] FAIL {arch} {shape}: {type(e).__name__}: {e}")
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,37 @@
+"""Production mesh definitions (TPU v5e pods).
+
+Functions, not module-level constants — importing this module never touches
+jax device state (the dry-run must set XLA_FLAGS before first jax init).
+"""
+from __future__ import annotations
+
+import jax
+
+__all__ = ["make_production_mesh", "make_host_mesh", "dp_size", "MESH_SHAPES"]
+
+MESH_SHAPES = {
+    "single": ((16, 16), ("data", "model")),  # one v5e pod, 256 chips
+    "multi": ((2, 16, 16), ("pod", "data", "model")),  # 2 pods, 512 chips
+}
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_host_mesh(data: int = 1, model: int = 1):
+    """Small mesh over whatever devices exist (tests / examples)."""
+    n = len(jax.devices())
+    data = min(data, n)
+    model = min(model, max(n // data, 1))
+    return jax.make_mesh((data, model), ("data", "model"))
+
+
+def dp_size(mesh) -> int:
+    s = 1
+    for name in mesh.axis_names:
+        if name != "model":
+            s *= mesh.shape[name]
+    return s

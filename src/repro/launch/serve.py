@@ -1,0 +1,82 @@
+"""Batched serving driver: prefill a batch of synthetic prompts, then decode
+greedily, reporting per-phase token throughput.
+
+Example (reduced config, CPU):
+  PYTHONPATH=src python -m repro.launch.serve --arch qwen3-0.6b --reduced \
+      --batch 4 --prompt-len 64 --new-tokens 32
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import numpy as np
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=64)
+    ap.add_argument("--new-tokens", type=int, default=32)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--mesh-data", type=int, default=1)
+    ap.add_argument("--mesh-model", type=int, default=1)
+    ap.add_argument("--attn-chunk", type=int, default=2048)
+    args = ap.parse_args(argv)
+
+    import jax
+    import jax.numpy as jnp
+
+    from ..configs import get_config
+    from ..dist.sharding import make_plan
+    from ..launch.mesh import make_host_mesh
+    from ..models import transformer as T
+    from ..serve.engine import make_decode_step, make_prefill_step
+
+    cfg = get_config(args.arch)
+    if args.reduced:
+        cfg = cfg.reduced()
+    mesh = make_host_mesh(data=args.mesh_data, model=args.mesh_model)
+    plan = make_plan(mesh, cfg)
+    key = jax.random.PRNGKey(args.seed)
+    B, S = args.batch, args.prompt_len
+
+    with mesh:
+        params = T.init_params(key, cfg)
+        batch = {"tokens": jax.random.randint(key, (B, S), 0, cfg.vocab, jnp.int32)}
+        if cfg.family == "audio":
+            batch["frames"] = jax.random.normal(key, (B, cfg.encoder_seq, cfg.d_model)) * 0.1
+        if cfg.family == "vlm":
+            batch["images"] = jax.random.normal(key, (B, cfg.img_tokens, cfg.d_model)) * 0.1
+
+        cache_len = S + args.new_tokens
+        prefill = jax.jit(make_prefill_step(cfg, plan, cache_len=cache_len, attn_chunk=args.attn_chunk))
+        decode = jax.jit(make_decode_step(cfg, plan), donate_argnums=(3,))
+
+        t0 = time.time()
+        logits, caches = jax.block_until_ready(prefill(params, batch))
+        t_prefill = time.time() - t0
+        cur = jnp.argmax(logits, -1).astype(jnp.int32)[:, None]
+        pos = jnp.full((B,), S, jnp.int32)
+        out = [cur]
+        t0 = time.time()
+        for i in range(args.new_tokens - 1):
+            cur, _, caches = decode(params, cur, pos, caches, batch)
+            out.append(cur)
+            pos = pos + 1
+        jax.block_until_ready(cur)
+        t_decode = time.time() - t0
+
+    toks = np.asarray(jnp.concatenate(out, 1))
+    print(f"[serve] arch={cfg.name} batch={B} prompt={S} new={args.new_tokens}")
+    print(f"[serve] prefill: {B*S/t_prefill:,.0f} tok/s ({t_prefill*1e3:.0f} ms)")
+    print(f"[serve] decode:  {B*(args.new_tokens-1)/max(t_decode,1e-9):,.0f} tok/s "
+          f"({t_decode/max(args.new_tokens-1,1)*1e3:.1f} ms/step)")
+    print(f"[serve] sample continuation ids: {toks[0][:12].tolist()}")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

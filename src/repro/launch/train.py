@@ -1,0 +1,169 @@
+"""Fault-tolerant training driver.
+
+Supervisor loop (the 1000-node posture, exercised at laptop scale):
+  * atomic keep-last-k checkpoints (train/checkpoint.py), async by default;
+  * failure detection: any exception in the step loop (or an injected
+    ``--fail-at-step``, used by tests) triggers a supervised restart from the
+    latest checkpoint — up to ``--max-restarts``;
+  * elastic re-mesh: on restart the mesh is rebuilt from the devices
+    currently visible; checkpoints reshard on restore (device_put with the
+    new sharding), so a shrink/grow restart is transparent;
+  * straggler watchdog: step times exceeding ``watchdog_factor`` x the
+    running median are logged as straggler events (on real fleets this feeds
+    the scheduler; here it exercises the accounting);
+  * deterministic data: batch i is a pure function of (seed, i), so restarts
+    resume the stream exactly (no replays / skips).
+
+Example (reduced config, CPU):
+  PYTHONPATH=src python -m repro.launch.train --arch qwen3-0.6b --reduced \
+      --steps 30 --batch 8 --seq 128 --ckpt-dir /tmp/ckpt
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import statistics
+import time
+
+import numpy as np
+
+
+def build(args, mesh):
+    import jax
+    import jax.numpy as jnp
+    from jax.sharding import NamedSharding, PartitionSpec as P
+
+    from ..configs import get_config
+    from ..data.pipeline import TokenPipeline, make_batch_iterator
+    from ..dist.sharding import make_plan, param_pspecs, valid_spec
+    from ..train.optimizer import AdamWConfig
+    from ..train.train_step import TrainState, init_train_state, make_train_step
+
+    cfg = get_config(args.arch)
+    if args.reduced:
+        cfg = cfg.reduced()
+    cfg = dataclasses.replace(cfg, remat=not args.no_remat)
+    plan = make_plan(mesh, cfg)
+    opt_cfg = AdamWConfig(
+        lr=args.lr, warmup_steps=args.warmup, total_steps=args.steps,
+        state_dtype="bfloat16" if cfg.fsdp else "float32",
+    )
+
+    def shardings_of(state):
+        from ..train.optimizer import opt_pspecs
+
+        pspecs = param_pspecs(state.params, plan)
+        pspecs = jax.tree.map(
+            lambda a, s: valid_spec(a.shape, s, mesh), state.params, pspecs
+        )
+        specs = TrainState(
+            params=pspecs, opt=opt_pspecs(state.params, pspecs, opt_cfg), rng=P()
+        )
+        return jax.tree.map(
+            lambda s: NamedSharding(mesh, s), specs,
+            is_leaf=lambda x: isinstance(x, P),
+        )
+
+    step_fn = make_train_step(
+        cfg, opt_cfg, plan, num_microbatches=args.microbatches,
+        attn_chunk=args.attn_chunk, compress_grads=args.compress_grads,
+    )
+    pipe = TokenPipeline(vocab=cfg.vocab, seq_len=args.seq, global_batch=args.batch, seed=args.seed)
+    return cfg, plan, opt_cfg, step_fn, pipe, shardings_of
+
+
+def train_once(args, start_attempt: int) -> int:
+    """One supervised attempt.  Returns the step reached.  Raises to signal
+    a failure the supervisor should handle."""
+    import jax
+    import jax.numpy as jnp
+
+    from ..data.pipeline import make_batch_iterator
+    from ..launch.mesh import make_host_mesh
+    from ..train.checkpoint import CheckpointManager
+
+    mesh = make_host_mesh(data=args.mesh_data, model=args.mesh_model)
+    cfg, plan, opt_cfg, step_fn, pipe, shardings_of = build(args, mesh)
+    ckpt = CheckpointManager(args.ckpt_dir, keep=args.keep) if args.ckpt_dir else None
+
+    with mesh:
+        from ..train.train_step import init_train_state
+
+        state = init_train_state(jax.random.PRNGKey(args.seed), cfg, opt_cfg)
+        shardings = shardings_of(state)
+        state = jax.device_put(state, shardings)
+        start = 0
+        if ckpt and ckpt.latest_step() is not None:
+            start, state = ckpt.restore(shardings=shardings)  # elastic reshard
+            print(f"[train] restored step {start} (attempt {start_attempt})")
+
+        jstep = jax.jit(step_fn, donate_argnums=(0,))
+        step_times: list[float] = []
+        it = make_batch_iterator(pipe, start_index=start, depth=args.prefetch)
+        for step in range(start, args.steps):
+            if args.fail_at_step == step and start_attempt == 0:
+                raise RuntimeError("injected node failure (--fail-at-step)")
+            t0 = time.time()
+            batch = jax.tree.map(jnp.asarray, next(it))
+            state, metrics = jstep(state, batch)
+            loss = float(metrics["loss"])  # sync point
+            dt = time.time() - t0
+            step_times.append(dt)
+            if len(step_times) >= 5:
+                med = statistics.median(step_times[-50:])
+                if dt > args.watchdog_factor * med:
+                    print(f"[watchdog] straggler: step {step} took {dt:.2f}s (median {med:.2f}s)")
+            if step % args.log_every == 0:
+                print(f"[train] step {step:5d} loss={loss:.4f} lr={float(metrics['lr']):.2e} "
+                      f"gnorm={float(metrics['grad_norm']):.2f} {dt*1e3:.0f}ms")
+            if ckpt and (step + 1) % args.ckpt_every == 0:
+                ckpt.save(step + 1, state, blocking=False)
+        it.close()
+        if ckpt:
+            ckpt.save(args.steps, state, blocking=True)
+    return args.steps
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--warmup", type=int, default=20)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--microbatches", type=int, default=1)
+    ap.add_argument("--attn-chunk", type=int, default=2048)
+    ap.add_argument("--mesh-data", type=int, default=1)
+    ap.add_argument("--mesh-model", type=int, default=1)
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--ckpt-every", type=int, default=20)
+    ap.add_argument("--keep", type=int, default=3)
+    ap.add_argument("--prefetch", type=int, default=2)
+    ap.add_argument("--log-every", type=int, default=5)
+    ap.add_argument("--compress-grads", action="store_true")
+    ap.add_argument("--no-remat", action="store_true")
+    ap.add_argument("--watchdog-factor", type=float, default=3.0)
+    ap.add_argument("--fail-at-step", type=int, default=-1, help="inject a failure (tests)")
+    ap.add_argument("--max-restarts", type=int, default=2)
+    args = ap.parse_args(argv)
+
+    for attempt in range(args.max_restarts + 1):
+        try:
+            reached = train_once(args, attempt)
+            print(f"[train] done at step {reached}")
+            return 0
+        except (RuntimeError, OSError) as e:
+            print(f"[supervisor] attempt {attempt} failed: {e}")
+            if attempt == args.max_restarts:
+                print("[supervisor] max restarts exceeded")
+                return 1
+            if not args.ckpt_dir:
+                print("[supervisor] no checkpoint dir; cold restart")
+    return 1
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

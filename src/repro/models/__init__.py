@@ -1,0 +1,1 @@
+"""Model substrate: composable JAX layers for the assigned architectures."""

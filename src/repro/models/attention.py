@@ -1,0 +1,279 @@
+"""Attention: GQA self-attention (train/prefill + cached decode) and
+cross-attention (whisper enc-dec, vlm image layers).
+
+Memory posture (the paper's lens applied to attention): scores are never
+materialized at (S x S).  `causal_attention` walks query chunks with a
+*static* growing KV slice — block-lower-triangular, so HLO FLOPs match the
+causal work (~S^2/2) instead of the dense S^2, and peak score memory is
+(B, H, chunk, S).
+
+Sharding: scores are computed FLAT over heads (KV broadcast to H heads —
+identical math to grouped GQA) so the model axis can shard them: the
+(B, KVH, G, Sq, Sk) grouped layout cannot shard KVH=8 over 16-way TP and
+replicates multi-GiB score buffers (measured 25 GiB/device on grok-1
+prefill_32k).  `ShardingPlan.scores()` prefers the head dim and falls back
+to the query-chunk dim when H doesn't divide the axis (qwen2's 12 heads,
+whisper's 20).
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from ..dist.sharding import NOPLAN, ShardingPlan, shard
+from .layers import Params, dense_init, rmsnorm, apply_rope, rope_angles
+
+NEG_INF = -1e30
+
+
+def attn_init(
+    key: jax.Array,
+    d: int,
+    n_heads: int,
+    n_kv: int,
+    hd: int,
+    *,
+    qkv_bias: bool = False,
+    qk_norm: bool = False,
+    dtype=jnp.float32,
+) -> Params:
+    ks = jax.random.split(key, 4)
+    p: Params = {
+        "wq": dense_init(ks[0], d, n_heads * hd, dtype),
+        "wk": dense_init(ks[1], d, n_kv * hd, dtype),
+        "wv": dense_init(ks[2], d, n_kv * hd, dtype),
+        "wo": dense_init(ks[3], n_heads * hd, d, dtype),
+    }
+    if qkv_bias:
+        p["bq"] = jnp.zeros((n_heads * hd,), dtype)
+        p["bk"] = jnp.zeros((n_kv * hd,), dtype)
+        p["bv"] = jnp.zeros((n_kv * hd,), dtype)
+    if qk_norm:
+        p["q_norm"] = {"scale": jnp.ones((hd,), dtype)}
+        p["k_norm"] = {"scale": jnp.ones((hd,), dtype)}
+    return p
+
+
+def qkv_project(
+    p: Params,
+    x: jax.Array,
+    n_heads: int,
+    n_kv: int,
+    hd: int,
+    *,
+    eps: float = 1e-6,
+) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """Project + reshape (+ optional per-head qk rmsnorm, qwen3-style)."""
+    B, S, _ = x.shape
+    q = x @ p["wq"].astype(x.dtype)
+    k = x @ p["wk"].astype(x.dtype)
+    v = x @ p["wv"].astype(x.dtype)
+    if "bq" in p:
+        q = q + p["bq"].astype(x.dtype)
+        k = k + p["bk"].astype(x.dtype)
+        v = v + p["bv"].astype(x.dtype)
+    q = q.reshape(B, S, n_heads, hd)
+    k = k.reshape(B, S, n_kv, hd)
+    v = v.reshape(B, S, n_kv, hd)
+    if "q_norm" in p:
+        q = rmsnorm(p["q_norm"], q, eps)
+        k = rmsnorm(p["k_norm"], k, eps)
+    return q, k, v
+
+
+def _repeat_kv(t: jax.Array, G: int) -> jax.Array:
+    """(B, S, KVH, hd) -> (B, S, KVH*G, hd); head h reads kv-head h // G
+    (matches the (KVH, G) reshape convention of grouped GQA)."""
+    return jnp.repeat(t, G, axis=2) if G > 1 else t
+
+
+def _attend(
+    q: jax.Array,  # (B, Sq, H, hd)
+    k: jax.Array,  # (B, Sk, KVH, hd)
+    v: jax.Array,
+    mask: jax.Array | None,  # broadcastable to (B, 1, Sq, Sk); True = visible
+    plan: ShardingPlan,
+) -> jax.Array:
+    """Flat-head attention core.  Returns (B, Sq, H, hd)."""
+    H, hd = q.shape[2], q.shape[3]
+    G = H // k.shape[2]
+    kr = _repeat_kv(k, G)
+    vr = _repeat_kv(v, G)
+    s = jnp.einsum("bqhe,bshe->bhqs", q, kr, preferred_element_type=jnp.float32)
+    s = s * (hd**-0.5)
+    s = shard(s, plan.scores(H), plan)
+    if mask is not None:
+        s = jnp.where(mask, s, NEG_INF)
+    w = jax.nn.softmax(s, axis=-1).astype(q.dtype)
+    return jnp.einsum("bhqs,bshe->bqhe", w, vr)
+
+
+def causal_attention(
+    q: jax.Array,  # (B, S, H, hd)
+    k: jax.Array,  # (B, S, KVH, hd)
+    v: jax.Array,
+    *,
+    chunk: int = 2048,
+    plan: ShardingPlan = NOPLAN,
+) -> jax.Array:
+    """Block-lower-triangular causal attention.  Query chunk c attends to the
+    static slice kv[: (c+1)*chunk]; softmax is exact per row (the full visible
+    prefix is present), so no online-softmax carry is needed."""
+    B, S, H, hd = q.shape
+    chunk = min(chunk, S)
+    assert S % chunk == 0, (S, chunk)
+    nchunks = S // chunk
+
+    qpos = jnp.arange(chunk)
+    diag_mask = qpos[:, None] >= jnp.arange(chunk)[None, :]  # (chunk, chunk)
+
+    outs = []
+    for c in range(nchunks):
+        qs = jax.lax.slice_in_dim(q, c * chunk, (c + 1) * chunk, axis=1)
+        kv_len = (c + 1) * chunk
+        ks = jax.lax.slice_in_dim(k, 0, kv_len, axis=1)
+        vs = jax.lax.slice_in_dim(v, 0, kv_len, axis=1)
+        # mask only the diagonal block; earlier blocks are fully visible
+        mask = jnp.concatenate([jnp.ones((chunk, c * chunk), bool), diag_mask], axis=1)
+        outs.append(_attend(qs, ks, vs, mask[None, None], plan))
+    return jnp.concatenate(outs, axis=1)
+
+
+def full_attention(
+    q: jax.Array,  # (B, Sq, H, hd)
+    k: jax.Array,  # (B, Sk, KVH, hd)
+    v: jax.Array,
+    mask: jax.Array | None = None,  # (Sq, Sk), True = visible
+    plan: ShardingPlan = NOPLAN,
+) -> jax.Array:
+    """Unchunked attention (encoder / cross-attention / short sequences)."""
+    return _attend(q, k, v, None if mask is None else mask[None, None], plan)
+
+
+def decode_attention(
+    q: jax.Array,  # (B, 1, H, hd) — the new token's query
+    k_cache: jax.Array,  # (B, S, KVH, hd)
+    v_cache: jax.Array,
+    pos: jax.Array,  # (B,) int32 — index of the new token in the cache
+    plan: ShardingPlan = NOPLAN,
+) -> jax.Array:
+    """One-token attention over the KV cache, masked to positions <= pos."""
+    S = k_cache.shape[1]
+    visible = jnp.arange(S)[None, :] <= pos[:, None]  # (B, S)
+    return _attend(q, k_cache, v_cache, visible[:, None, None, :], plan)
+
+
+# ---------------------------------------------------------------------------
+# Self-attention block entry points used by transformer.py
+# ---------------------------------------------------------------------------
+
+
+def self_attention_train(
+    p: Params,
+    x: jax.Array,
+    cfg,
+    positions: jax.Array | None = None,
+    *,
+    chunk: int = 2048,
+    causal: bool = True,
+    plan: ShardingPlan = NOPLAN,
+) -> jax.Array:
+    """Full-sequence self-attention (train / prefill)."""
+    B, S, _ = x.shape
+    H, KVH, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    q, k, v = qkv_project(p, x, H, KVH, hd, eps=cfg.norm_eps)
+    if positions is None:
+        positions = jnp.arange(S)
+    if cfg.rope_theta > 0:
+        cos, sin = rope_angles(positions, hd, cfg.rope_theta)
+        q = apply_rope(q, cos, sin)
+        k = apply_rope(k, cos, sin)
+    if causal:
+        out = causal_attention(q, k, v, chunk=chunk, plan=plan)
+    else:
+        out = full_attention(q, k, v, plan=plan)
+    return out.reshape(B, S, H * hd) @ p["wo"].astype(x.dtype)
+
+
+def self_attention_prefill(
+    p: Params, x: jax.Array, cfg, *, chunk: int = 2048, plan: ShardingPlan = NOPLAN
+) -> tuple[jax.Array, dict[str, jax.Array]]:
+    """Prefill: causal attention + return the (rope'd) KV for the cache."""
+    B, S, _ = x.shape
+    H, KVH, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    q, k, v = qkv_project(p, x, H, KVH, hd, eps=cfg.norm_eps)
+    positions = jnp.arange(S)
+    if cfg.rope_theta > 0:
+        cos, sin = rope_angles(positions, hd, cfg.rope_theta)
+        q = apply_rope(q, cos, sin)
+        k = apply_rope(k, cos, sin)
+    out = causal_attention(q, k, v, chunk=chunk, plan=plan)
+    y = out.reshape(B, S, H * hd) @ p["wo"].astype(x.dtype)
+    return y, {"k": k, "v": v}
+
+
+def self_attention_decode(
+    p: Params,
+    x: jax.Array,  # (B, 1, D)
+    cache: dict[str, jax.Array],  # k/v (B, S, KVH, hd)
+    pos: jax.Array,  # (B,) int32
+    cfg,
+    plan: ShardingPlan = NOPLAN,
+) -> tuple[jax.Array, dict[str, jax.Array]]:
+    """One decode step: write the new KV at `pos`, attend over [0, pos]."""
+    B = x.shape[0]
+    H, KVH, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    q, k, v = qkv_project(p, x, H, KVH, hd, eps=cfg.norm_eps)
+    if cfg.rope_theta > 0:
+        cos, sin = rope_angles(pos[:, None], hd, cfg.rope_theta)  # (B,1,hd/2)
+        q = apply_rope(q, cos, sin)
+        k = apply_rope(k, cos, sin)
+    # Replicate the (tiny) new KV over the model axis BEFORE the scatter:
+    # head-partial k_new broadcast against the seq-sharded cache otherwise
+    # forces SPMD's "involuntary full rematerialization" of a cache-sized
+    # buffer (measured GiB-scale on grok-1 decode_32k).
+    from jax.sharding import PartitionSpec as P
+
+    k = shard(k, P(plan.dp or None, None, None, None), plan)
+    v = shard(v, P(plan.dp or None, None, None, None), plan)
+    # Scatter the new token's KV into the cache at per-batch positions.
+    onehot = (jnp.arange(cache["k"].shape[1])[None, :] == pos[:, None]).astype(k.dtype)
+    k_cache = cache["k"] * (1 - onehot)[..., None, None] + onehot[..., None, None] * k
+    v_cache = cache["v"] * (1 - onehot)[..., None, None] + onehot[..., None, None] * v
+    out = decode_attention(q, k_cache, v_cache, pos, plan=plan)
+    y = out.reshape(B, 1, H * hd) @ p["wo"].astype(x.dtype)
+    return y, {"k": k_cache, "v": v_cache}
+
+
+# ---------------------------------------------------------------------------
+# Cross-attention (whisper decoder / llama-vision image layers)
+# ---------------------------------------------------------------------------
+
+
+def xattn_init(key: jax.Array, d: int, n_heads: int, n_kv: int, hd: int, dtype=jnp.float32) -> Params:
+    return attn_init(key, d, n_heads, n_kv, hd, dtype=dtype)
+
+
+def cross_attention(
+    p: Params,
+    x: jax.Array,  # (B, Sq, D) queries (text/decoder stream)
+    kv_src: jax.Array | None,  # (B, Skv, D) memory (encoder / image tokens)
+    cfg,
+    cached_kv: dict[str, jax.Array] | None = None,
+    plan: ShardingPlan = NOPLAN,
+) -> tuple[jax.Array, dict[str, jax.Array]]:
+    """Non-causal attention into a memory stream.  Pass `cached_kv` during
+    decode to skip reprojecting the (static) memory."""
+    B, Sq, _ = x.shape
+    H, KVH, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    q = (x @ p["wq"].astype(x.dtype)).reshape(B, Sq, H, hd)
+    if cached_kv is None:
+        assert kv_src is not None
+        Skv = kv_src.shape[1]
+        k = (kv_src @ p["wk"].astype(x.dtype)).reshape(B, Skv, KVH, hd)
+        v = (kv_src @ p["wv"].astype(x.dtype)).reshape(B, Skv, KVH, hd)
+        cached_kv = {"k": k, "v": v}
+    out = full_attention(q, cached_kv["k"], cached_kv["v"], plan=plan)
+    return out.reshape(B, Sq, H * hd) @ p["wo"].astype(x.dtype), cached_kv

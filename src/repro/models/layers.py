@@ -1,0 +1,170 @@
+"""Primitive layers shared by every architecture: norms, projections,
+embeddings, RoPE, MLPs.
+
+Conventions (used repo-wide):
+  * Parameters are nested dicts of jax.Arrays; every leaf is created through
+    `init` functions taking an explicit PRNG key, so `jax.eval_shape` over the
+    init gives the abstract parameter tree the dry-run lowers against.
+  * Compute dtype (bf16 on TPU) is applied at use; params stay in param_dtype.
+  * No framework (flax/haiku) — pure functions over pytrees, pjit-friendly.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+Params = dict[str, Any]
+
+
+def dtype_of(name: str):
+    return {"float32": jnp.float32, "bfloat16": jnp.bfloat16, "float16": jnp.float16}[name]
+
+
+# ---------------------------------------------------------------------------
+# init helpers
+# ---------------------------------------------------------------------------
+
+
+def dense_init(key: jax.Array, d_in: int, d_out: int, dtype=jnp.float32, scale: float | None = None) -> jax.Array:
+    """Truncated-normal fan-in init (LLM standard)."""
+    s = scale if scale is not None else 1.0 / np.sqrt(d_in)
+    return (jax.random.truncated_normal(key, -2.0, 2.0, (d_in, d_out), jnp.float32) * s).astype(dtype)
+
+
+def embed_init(key: jax.Array, vocab: int, d: int, dtype=jnp.float32) -> jax.Array:
+    return (jax.random.normal(key, (vocab, d), jnp.float32) * 0.02).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# norms
+# ---------------------------------------------------------------------------
+
+
+def rmsnorm_init(d: int, dtype=jnp.float32) -> Params:
+    return {"scale": jnp.ones((d,), dtype)}
+
+
+def rmsnorm(p: Params, x: jax.Array, eps: float = 1e-6) -> jax.Array:
+    dt = x.dtype
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    y = xf * jax.lax.rsqrt(var + eps)
+    return (y * p["scale"].astype(jnp.float32)).astype(dt)
+
+
+def layernorm_init(d: int, dtype=jnp.float32) -> Params:
+    return {"scale": jnp.ones((d,), dtype), "bias": jnp.zeros((d,), dtype)}
+
+
+def layernorm(p: Params, x: jax.Array, eps: float = 1e-5) -> jax.Array:
+    dt = x.dtype
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.mean((xf - mu) ** 2, axis=-1, keepdims=True)
+    y = (xf - mu) * jax.lax.rsqrt(var + eps)
+    return (y * p["scale"].astype(jnp.float32) + p["bias"].astype(jnp.float32)).astype(dt)
+
+
+def norm_init(kind: str, d: int, dtype=jnp.float32) -> Params:
+    return rmsnorm_init(d, dtype) if kind == "rms" else layernorm_init(d, dtype)
+
+
+def norm_apply(kind: str, p: Params, x: jax.Array, eps: float) -> jax.Array:
+    return rmsnorm(p, x, eps) if kind == "rms" else layernorm(p, x, eps)
+
+
+# ---------------------------------------------------------------------------
+# linear / embedding
+# ---------------------------------------------------------------------------
+
+
+def linear_init(key: jax.Array, d_in: int, d_out: int, bias: bool = False, dtype=jnp.float32) -> Params:
+    p = {"w": dense_init(key, d_in, d_out, dtype)}
+    if bias:
+        p["b"] = jnp.zeros((d_out,), dtype)
+    return p
+
+
+def linear(p: Params, x: jax.Array) -> jax.Array:
+    y = x @ p["w"].astype(x.dtype)
+    if "b" in p:
+        y = y + p["b"].astype(x.dtype)
+    return y
+
+
+def embed(table: jax.Array, ids: jax.Array, compute_dtype) -> jax.Array:
+    """Token embedding gather — the dense-arch instance of the paper's
+    Cache-Engine access pattern (random row fetch with power-law reuse)."""
+    return jnp.take(table, ids, axis=0).astype(compute_dtype)
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+
+
+def rope_angles(positions: jax.Array, head_dim: int, theta: float) -> tuple[jax.Array, jax.Array]:
+    """(pos..., hd/2) cos/sin tables, fp32."""
+    half = head_dim // 2
+    freqs = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    ang = positions.astype(jnp.float32)[..., None] * freqs  # (..., half)
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def apply_rope(x: jax.Array, cos: jax.Array, sin: jax.Array) -> jax.Array:
+    """x: (..., seq, heads, hd); cos/sin: (..., seq, hd/2) broadcast over heads.
+    Rotate-half convention (llama/qwen)."""
+    half = x.shape[-1] // 2
+    x1, x2 = x[..., :half], x[..., half:]
+    c = cos[..., None, :].astype(x.dtype)
+    s = sin[..., None, :].astype(x.dtype)
+    return jnp.concatenate([x1 * c - x2 * s, x2 * c + x1 * s], axis=-1)
+
+
+def sinusoid_positions(seq: int, d: int) -> jax.Array:
+    """Classic sinusoidal position table (whisper adaptation), (seq, d) f32."""
+    pos = np.arange(seq)[:, None]
+    dim = np.arange(d // 2)[None, :]
+    ang = pos / np.power(10_000.0, 2 * dim / d)
+    out = np.concatenate([np.sin(ang), np.cos(ang)], axis=1)
+    return jnp.asarray(out, jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# MLP (SwiGLU / GELU)
+# ---------------------------------------------------------------------------
+
+
+GLU_ACTS = {"silu": jax.nn.silu, "gelu_glu": jax.nn.gelu}  # 3-matrix gated MLPs
+
+
+def is_glu(act: str) -> bool:
+    return act in GLU_ACTS
+
+
+def mlp_init(key: jax.Array, d: int, d_ff: int, act: str, dtype=jnp.float32) -> Params:
+    ks = jax.random.split(key, 3)
+    if is_glu(act):  # gated: gate, up, down (SwiGLU / GeGLU)
+        return {
+            "wg": dense_init(ks[0], d, d_ff, dtype),
+            "wu": dense_init(ks[1], d, d_ff, dtype),
+            "wd": dense_init(ks[2], d_ff, d, dtype),
+        }
+    return {  # classic 2-matrix GELU MLP
+        "wu": dense_init(ks[0], d, d_ff, dtype),
+        "wd": dense_init(ks[1], d_ff, d, dtype),
+        "bu": jnp.zeros((d_ff,), dtype),
+        "bd": jnp.zeros((d,), dtype),
+    }
+
+
+def mlp(p: Params, x: jax.Array, act: str) -> jax.Array:
+    if is_glu(act):
+        g = GLU_ACTS[act](x @ p["wg"].astype(x.dtype))
+        u = x @ p["wu"].astype(x.dtype)
+        return (g * u) @ p["wd"].astype(x.dtype)
+    h = jax.nn.gelu(x @ p["wu"].astype(x.dtype) + p["bu"].astype(x.dtype))
+    return h @ p["wd"].astype(x.dtype) + p["bd"].astype(x.dtype)

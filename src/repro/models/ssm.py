@@ -1,0 +1,318 @@
+"""Mamba2 / SSD (state-space duality) blocks — arXiv:2405.21060.
+
+Three execution paths over the same parameters:
+  * ``ssd_chunked``   — production path: chunked matmul form (intra-chunk
+                        attention-like matmuls on the MXU + an inter-chunk
+                        `lax.scan` over per-chunk states).  Sub-quadratic:
+                        O(S·Q) score work + O(S/Q) state hops, the reason the
+                        ssm/hybrid archs run the ``long_500k`` shape.
+  * ``ssd_reference`` — naive per-token recurrence (lax.scan over S); the
+                        oracle the chunked path is tested against.
+  * ``ssd_decode_step`` — one-token state update for serving.
+
+Layout: x (B, S, H, P) heads x head_dim; B/C (B, S, G, N) groups x state;
+dt (B, S, H).  State h is (B, H, P, N), fp32 throughout the recurrence.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from .layers import Params, dense_init, rmsnorm
+
+__all__ = [
+    "ssd_reference",
+    "ssd_chunked",
+    "ssd_decode_step",
+    "mamba_init",
+    "mamba_train",
+    "mamba_decode",
+    "mamba_init_cache",
+    "causal_conv1d",
+    "conv1d_decode_step",
+]
+
+
+# ---------------------------------------------------------------------------
+# SSD core
+# ---------------------------------------------------------------------------
+
+
+def _expand_groups(bc: jax.Array, H: int) -> jax.Array:
+    """(B, S, G, N) -> (B, S, H, N): broadcast each group over its heads."""
+    G = bc.shape[2]
+    return jnp.repeat(bc, H // G, axis=2)
+
+
+def ssd_reference(
+    x: jax.Array,  # (B, S, H, P)
+    dt: jax.Array,  # (B, S, H)  (post-softplus)
+    A: jax.Array,  # (H,) negative reals
+    Bm: jax.Array,  # (B, S, G, N)
+    Cm: jax.Array,  # (B, S, G, N)
+    D: jax.Array | None = None,  # (H,)
+    h0: jax.Array | None = None,  # (B, H, P, N)
+) -> tuple[jax.Array, jax.Array]:
+    """Token-by-token recurrence: h_t = exp(dt_t A) h_{t-1} + dt_t x_t B_t^T;
+    y_t = C_t h_t (+ D x_t).  Returns (y (B,S,H,P), h_final)."""
+    Bsz, S, H, P = x.shape
+    Bh = _expand_groups(Bm, H).astype(jnp.float32)
+    Ch = _expand_groups(Cm, H).astype(jnp.float32)
+    xf = x.astype(jnp.float32)
+    dtf = dt.astype(jnp.float32)
+    a = jnp.exp(dtf * A[None, None, :])  # (B, S, H)
+    h = jnp.zeros((Bsz, H, P, x.shape[-1] * 0 + Bm.shape[-1]), jnp.float32) if h0 is None else h0.astype(jnp.float32)
+
+    def step(h, inp):
+        xt, at, dtt, bt, ct = inp  # (B,H,P) (B,H) (B,H) (B,H,N) (B,H,N)
+        h = at[..., None, None] * h + jnp.einsum("bhp,bhn->bhpn", dtt[..., None] * xt, bt)
+        y = jnp.einsum("bhpn,bhn->bhp", h, ct)
+        return h, y
+
+    xs = (
+        xf.transpose(1, 0, 2, 3),
+        a.transpose(1, 0, 2),
+        dtf.transpose(1, 0, 2),
+        Bh.transpose(1, 0, 2, 3),
+        Ch.transpose(1, 0, 2, 3),
+    )
+    h, ys = jax.lax.scan(step, h, xs)
+    y = ys.transpose(1, 0, 2, 3)  # (B, S, H, P)
+    if D is not None:
+        y = y + xf * D[None, None, :, None]
+    return y.astype(x.dtype), h
+
+
+def ssd_chunked(
+    x: jax.Array,  # (B, S, H, P)
+    dt: jax.Array,  # (B, S, H)
+    A: jax.Array,  # (H,)
+    Bm: jax.Array,  # (B, S, G, N)
+    Cm: jax.Array,  # (B, S, G, N)
+    D: jax.Array | None = None,
+    h0: jax.Array | None = None,
+    *,
+    chunk: int = 256,
+) -> tuple[jax.Array, jax.Array]:
+    """Chunked SSD (Mamba2 Alg. 1 structure).  Per chunk of length Q:
+
+      intra:  Y1[t] = sum_{s<=t} (C_t.B_s) dt_s exp(l_t - l_s) x_s      (matmuls)
+      state:  S_c   = sum_s exp(l_Q - l_s) dt_s x_s (x) B_s             (matmul)
+      inter:  H_c   = exp(l_Q) H_{c-1} + S_c                            (scan)
+              Y2[t] = C_t . (exp(l_t) H_{c-1})
+
+    All recurrences are over S/Q chunk states only.  fp32 internally."""
+    Bsz, S, H, P = x.shape
+    N = Bm.shape[-1]
+    Q = min(chunk, S)
+    if S % Q:  # pad tail with dt=0 steps: a=exp(0)=1, contribution 0 — the
+        pad = Q - S % Q  # state is untouched and padded outputs are discarded.
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        Bm = jnp.pad(Bm, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        Cm = jnp.pad(Cm, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        y, h = ssd_chunked(x, dt, A, Bm, Cm, D, h0, chunk=Q)
+        return y[:, :S], h
+    nc = S // Q
+
+    xf = x.astype(jnp.float32).reshape(Bsz, nc, Q, H, P)
+    dtf = dt.astype(jnp.float32).reshape(Bsz, nc, Q, H)
+    Bh = _expand_groups(Bm, H).astype(jnp.float32).reshape(Bsz, nc, Q, H, N)
+    Ch = _expand_groups(Cm, H).astype(jnp.float32).reshape(Bsz, nc, Q, H, N)
+
+    loga = dtf * A[None, None, None, :]  # (B, nc, Q, H) log decay per step
+    l = jnp.cumsum(loga, axis=2)  # inclusive cumulative log decay
+    ltot = l[:, :, -1]  # (B, nc, H) chunk total
+
+    # --- intra-chunk (attention-like, lower-triangular) ---
+    # M[t,s] = (C_t . B_s) * dt_s * exp(l_t - l_s), s <= t
+    cb = jnp.einsum("bcqhn,bcshn->bchqs", Ch, Bh)  # (B, nc, H, Q, Q)
+    # exp(l_t - l_s): build (B, nc, H, Q, Q)
+    lt = l.transpose(0, 1, 3, 2)  # (B, nc, H, Q)
+    delta = lt[..., :, None] - lt[..., None, :]  # l_t - l_s
+    tri = jnp.tril(jnp.ones((Q, Q), bool))
+    seg = jnp.where(tri[None, None, None], jnp.exp(delta), 0.0)
+    M = cb * seg * dtf.transpose(0, 1, 3, 2)[..., None, :]  # * dt_s
+    y_intra = jnp.einsum("bchqs,bcshp->bcqhp", M, xf)
+
+    # --- per-chunk states ---
+    # S_c = sum_s exp(ltot - l_s) dt_s x_s (x) B_s   -> (B, nc, H, P, N)
+    w = jnp.exp(ltot[:, :, None, :] - l) * dtf  # (B, nc, Q, H)
+    Sc = jnp.einsum("bcqh,bcqhp,bcqhn->bchpn", w, xf, Bh)
+
+    # --- inter-chunk scan over nc states ---
+    h_init = (
+        jnp.zeros((Bsz, H, P, N), jnp.float32) if h0 is None else h0.astype(jnp.float32)
+    )
+
+    def chunk_step(h, inp):
+        sc, lt_c = inp  # (B,H,P,N), (B,H)
+        h_out = h  # state *entering* this chunk
+        h = jnp.exp(lt_c)[..., None, None] * h + sc
+        return h, h_out
+
+    h_final, h_enter = jax.lax.scan(
+        chunk_step, h_init, (Sc.transpose(1, 0, 2, 3, 4), ltot.transpose(1, 0, 2))
+    )
+    h_enter = h_enter.transpose(1, 0, 2, 3, 4)  # (B, nc, H, P, N) state before chunk
+
+    # --- inter-chunk contribution ---
+    # Y2[t] = exp(l_t) * C_t . H_enter
+    y_inter = jnp.exp(l)[..., None] * jnp.einsum("bcqhn,bchpn->bcqhp", Ch, h_enter)
+
+    y = (y_intra + y_inter).reshape(Bsz, S, H, P)
+    if D is not None:
+        y = y + x.astype(jnp.float32) * D[None, None, :, None]
+    return y.astype(x.dtype), h_final
+
+
+def ssd_decode_step(
+    h: jax.Array,  # (B, H, P, N) fp32 state
+    x: jax.Array,  # (B, H, P)
+    dt: jax.Array,  # (B, H) post-softplus
+    A: jax.Array,  # (H,)
+    Bm: jax.Array,  # (B, G, N)
+    Cm: jax.Array,  # (B, G, N)
+    D: jax.Array | None = None,
+) -> tuple[jax.Array, jax.Array]:
+    """One-token SSD update. Returns (y (B,H,P), h_new)."""
+    H = x.shape[1]
+    G = Bm.shape[1]
+    Bh = jnp.repeat(Bm, H // G, axis=1).astype(jnp.float32)
+    Ch = jnp.repeat(Cm, H // G, axis=1).astype(jnp.float32)
+    xf = x.astype(jnp.float32)
+    dtf = dt.astype(jnp.float32)
+    a = jnp.exp(dtf * A[None, :])  # (B, H)
+    h = a[..., None, None] * h + jnp.einsum("bhp,bhn->bhpn", dtf[..., None] * xf, Bh)
+    y = jnp.einsum("bhpn,bhn->bhp", h, Ch)
+    if D is not None:
+        y = y + xf * D[None, :, None]
+    return y.astype(x.dtype), h
+
+
+# ---------------------------------------------------------------------------
+# causal depthwise conv1d (the Mamba front conv)
+# ---------------------------------------------------------------------------
+
+
+def causal_conv1d(x: jax.Array, w: jax.Array, b: jax.Array, state: jax.Array | None = None) -> tuple[jax.Array, jax.Array]:
+    """x (B, S, C), w (K, C), b (C).  Left-pad with `state` (B, K-1, C) (zeros
+    if None).  Returns (y (B,S,C) silu-activated, new_state = last K-1 inputs)."""
+    Bsz, S, C = x.shape
+    K = w.shape[0]
+    pad = jnp.zeros((Bsz, K - 1, C), x.dtype) if state is None else state.astype(x.dtype)
+    xp = jnp.concatenate([pad, x], axis=1)  # (B, S+K-1, C)
+    y = jnp.zeros((Bsz, S, C), jnp.float32)
+    for k in range(K):
+        y = y + xp[:, k : k + S].astype(jnp.float32) * w[k].astype(jnp.float32)
+    y = jax.nn.silu(y + b.astype(jnp.float32))
+    new_state = xp[:, S:]  # last K-1 raw inputs
+    return y.astype(x.dtype), new_state
+
+
+def conv1d_decode_step(x: jax.Array, w: jax.Array, b: jax.Array, state: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """x (B, C) one token; state (B, K-1, C). Returns (y (B,C), new_state)."""
+    K = w.shape[0]
+    window = jnp.concatenate([state, x[:, None]], axis=1)  # (B, K, C)
+    y = jnp.einsum("bkc,kc->bc", window.astype(jnp.float32), w.astype(jnp.float32))
+    y = jax.nn.silu(y + b.astype(jnp.float32))
+    return y.astype(x.dtype), window[:, 1:]
+
+
+# ---------------------------------------------------------------------------
+# full Mamba2 block
+# ---------------------------------------------------------------------------
+
+
+def mamba_init(key: jax.Array, d: int, ssm_cfg, dtype=jnp.float32) -> Params:
+    """Mamba2 block parameters.  in_proj fans out to
+    [z (d_in) | x (d_in) | B (G*N) | C (G*N) | dt (H)]; conv runs over
+    [x | B | C]; gated RMSNorm before out_proj (Mamba2 convention)."""
+    s = ssm_cfg
+    d_in = s.expand * d
+    H = d_in // s.head_dim
+    G, N = s.n_groups, s.d_state
+    conv_dim = d_in + 2 * G * N
+    ks = jax.random.split(key, 3)
+    dt_bias = jnp.log(jnp.expm1(jnp.exp(jax.random.uniform(ks[2], (H,), jnp.float32, jnp.log(1e-3), jnp.log(1e-1)))))
+    return {
+        "in_proj": dense_init(ks[0], d, 2 * d_in + 2 * G * N + H, dtype),
+        "conv_w": (jax.random.normal(ks[1], (s.d_conv, conv_dim), jnp.float32) * (1.0 / jnp.sqrt(s.d_conv * 1.0))).astype(dtype),
+        "conv_b": jnp.zeros((conv_dim,), dtype),
+        "A_log": jnp.log(jnp.arange(1, H + 1, dtype=jnp.float32)),  # A = -exp(A_log)
+        "D": jnp.ones((H,), jnp.float32),
+        "dt_bias": dt_bias.astype(jnp.float32),
+        "out_norm": {"scale": jnp.ones((d_in,), dtype)},
+        "out_proj": dense_init(ks[2], d_in, d, dtype),
+    }
+
+
+def _mamba_split(p: Params, xz: jax.Array, d_in: int, G: int, N: int, H: int):
+    z, rest = xz[..., :d_in], xz[..., d_in:]
+    xbc = rest[..., : d_in + 2 * G * N]
+    dt_raw = rest[..., d_in + 2 * G * N :]  # (..., H)
+    return z, xbc, dt_raw
+
+
+def mamba_train(p: Params, x: jax.Array, cfg, h0=None, conv0=None, *, return_state: bool = False):
+    """Full-sequence Mamba2 block.  x (B, S, D) -> (B, S, D).
+    With return_state=True also returns (h_final, conv_state) for prefill."""
+    s = cfg.ssm
+    d = x.shape[-1]
+    d_in = s.expand * d
+    H = d_in // s.head_dim
+    G, N = s.n_groups, s.d_state
+    Bsz, S, _ = x.shape
+
+    xz = x @ p["in_proj"].astype(x.dtype)  # (B, S, 2*d_in + 2GN + H)
+    z, xbc, dt_raw = _mamba_split(p, xz, d_in, G, N, H)
+    xbc, conv_state = causal_conv1d(xbc, p["conv_w"], p["conv_b"], conv0)
+    xs = xbc[..., :d_in].reshape(Bsz, S, H, s.head_dim)
+    Bm = xbc[..., d_in : d_in + G * N].reshape(Bsz, S, G, N)
+    Cm = xbc[..., d_in + G * N :].reshape(Bsz, S, G, N)
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + p["dt_bias"][None, None, :])
+    A = -jnp.exp(p["A_log"])
+    y, h = ssd_chunked(xs, dt, A, Bm, Cm, p["D"], h0, chunk=s.chunk)
+    y = y.reshape(Bsz, S, d_in)
+    y = rmsnorm(p["out_norm"], y * jax.nn.silu(z))  # gated norm
+    out = y @ p["out_proj"].astype(x.dtype)
+    if return_state:
+        return out, (h, conv_state)
+    return out
+
+
+def mamba_init_cache(batch: int, d: int, ssm_cfg, dtype=jnp.float32) -> dict[str, jax.Array]:
+    s = ssm_cfg
+    d_in = s.expand * d
+    H = d_in // s.head_dim
+    conv_dim = d_in + 2 * s.n_groups * s.d_state
+    return {
+        "h": jnp.zeros((batch, H, s.head_dim, s.d_state), jnp.float32),
+        "conv": jnp.zeros((batch, s.d_conv - 1, conv_dim), dtype),
+    }
+
+
+def mamba_decode(p: Params, x: jax.Array, cache: dict[str, jax.Array], cfg):
+    """One-token Mamba2 step.  x (B, 1, D) -> (B, 1, D), updated cache."""
+    s = cfg.ssm
+    d = x.shape[-1]
+    d_in = s.expand * d
+    H = d_in // s.head_dim
+    G, N = s.n_groups, s.d_state
+    Bsz = x.shape[0]
+
+    xz = x[:, 0] @ p["in_proj"].astype(x.dtype)  # (B, ...)
+    z, xbc, dt_raw = _mamba_split(p, xz, d_in, G, N, H)
+    xbc, conv_state = conv1d_decode_step(xbc, p["conv_w"], p["conv_b"], cache["conv"])
+    xs = xbc[..., :d_in].reshape(Bsz, H, s.head_dim)
+    Bm = xbc[..., d_in : d_in + G * N].reshape(Bsz, G, N)
+    Cm = xbc[..., d_in + G * N :].reshape(Bsz, G, N)
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + p["dt_bias"][None, :])
+    A = -jnp.exp(p["A_log"])
+    y, h = ssd_decode_step(cache["h"], xs, dt, A, Bm, Cm, p["D"])
+    y = y.reshape(Bsz, d_in)
+    y = rmsnorm(p["out_norm"], y * jax.nn.silu(z))
+    out = (y @ p["out_proj"].astype(x.dtype))[:, None]
+    return out, {"h": h, "conv": conv_state}

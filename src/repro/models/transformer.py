@@ -1,0 +1,562 @@
+"""Unified model: one composable stack covering every assigned family.
+
+  dense / moe          decoder-only LM (GQA attn + MLP/MoE)
+  ssm                  Mamba2 stack (attention-free)
+  hybrid (jamba)       Mamba + attn 7:1 interleave, MoE every other layer
+  audio (whisper)      enc-dec; encoder consumes stub frame embeddings
+  vlm (llama-vision)   decoder LM with cross-attn image layers (stub patches)
+
+Structure: the layer pattern repeats with period ``cfg.period``; parameters
+for each period *position* are stacked over ``n_layers // period`` repeats and
+the stack is a single ``lax.scan`` (bounded HLO regardless of depth).  With
+``cfg.remat`` the period body is ``jax.checkpoint``-ed.
+
+Entry points:
+  init_params / abstract_params          parameters (concrete / eval_shape)
+  apply_train -> (loss, metrics)         next-token CE (+ MoE aux losses)
+  prefill    -> (last_logits, caches)    full-prompt pass, caches filled
+  decode_step-> (logits, caches)         one token against the caches
+  init_caches                            zeroed decode state
+
+Caches are a tuple over period positions; each element's leaves carry a
+leading n_reps dim and ride through the same scan as the parameters.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..dist.sharding import NOPLAN, ShardingPlan, shard
+from .attention import (
+    attn_init,
+    cross_attention,
+    full_attention,
+    self_attention_decode,
+    self_attention_prefill,
+    self_attention_train,
+    xattn_init,
+)
+from .layers import (
+    Params,
+    dtype_of,
+    embed,
+    embed_init,
+    mlp,
+    mlp_init,
+    norm_apply,
+    norm_init,
+    sinusoid_positions,
+)
+from .moe import moe_apply, moe_init
+from .ssm import mamba_decode, mamba_init, mamba_init_cache, mamba_train
+
+__all__ = [
+    "init_params",
+    "abstract_params",
+    "apply_train",
+    "prefill",
+    "decode_step",
+    "init_caches",
+    "lm_logits",
+]
+
+
+def _norm_kind(cfg) -> str:
+    return getattr(cfg, "norm", "rms")
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+
+def _block_init(key: jax.Array, cfg, mixer: str, ffn: str, dtype) -> Params:
+    """One layer's parameters (pre-norm residual block)."""
+    ks = jax.random.split(key, 4)
+    d = cfg.d_model
+    nk = _norm_kind(cfg)
+    p: Params = {"norm1": norm_init(nk, d, dtype)}
+    if mixer == "attn":
+        p["attn"] = attn_init(
+            ks[0], d, cfg.n_heads, cfg.n_kv_heads, cfg.hd,
+            qkv_bias=cfg.qkv_bias, qk_norm=cfg.qk_norm, dtype=dtype,
+        )
+    elif mixer == "mamba":
+        p["mamba"] = mamba_init(ks[0], d, cfg.ssm, dtype)
+    elif mixer == "xattn":
+        p["xattn"] = xattn_init(ks[0], d, cfg.n_heads, cfg.n_kv_heads, cfg.hd, dtype)
+        p["gate_attn"] = jnp.zeros((), jnp.float32)
+        p["gate_ffn"] = jnp.zeros((), jnp.float32)
+    if cfg.family == "audio":  # whisper decoder: self-attn + cross-attn + mlp
+        p["xattn"] = xattn_init(ks[1], d, cfg.n_heads, cfg.n_kv_heads, cfg.hd, dtype)
+        p["norm_x"] = norm_init(nk, d, dtype)
+    if ffn != "none":
+        p["norm2"] = norm_init(nk, d, dtype)
+        if ffn == "moe":
+            p["moe"] = moe_init(ks[2], d, cfg.moe, cfg.act, dtype)
+        else:
+            p["mlp"] = mlp_init(ks[2], d, cfg.d_ff, cfg.act, dtype)
+    return p
+
+
+def _stack_blocks(keys: jax.Array, cfg, pattern, dtype) -> tuple[Params, ...]:
+    """Stacked per-position parameter trees: blocks[pos] leaves lead with
+    n_reps."""
+    period = len(pattern)
+    n_reps = cfg.n_layers // period
+    blocks = []
+    for pos, (mixer, ffn) in enumerate(pattern):
+        reps = [
+            _block_init(keys[r * period + pos], cfg, mixer, ffn, dtype)
+            for r in range(n_reps)
+        ]
+        blocks.append(jax.tree.map(lambda *xs: jnp.stack(xs), *reps))
+    return tuple(blocks)
+
+
+def _encoder_init(key: jax.Array, cfg, dtype) -> Params:
+    """Whisper-style encoder: full-attention + MLP blocks over frames."""
+    nk = _norm_kind(cfg)
+    keys = jax.random.split(key, cfg.encoder_layers)
+    d = cfg.d_model
+    reps = []
+    for k in keys:
+        ks = jax.random.split(k, 2)
+        reps.append(
+            {
+                "norm1": norm_init(nk, d, dtype),
+                "attn": attn_init(ks[0], d, cfg.n_heads, cfg.n_kv_heads, cfg.hd, dtype=dtype),
+                "norm2": norm_init(nk, d, dtype),
+                "mlp": mlp_init(ks[1], d, cfg.d_ff, cfg.act, dtype),
+            }
+        )
+    stacked = jax.tree.map(lambda *xs: jnp.stack(xs), *reps)
+    return {"blocks": stacked, "norm_post": norm_init(nk, d, dtype)}
+
+
+def init_params(key: jax.Array, cfg) -> Params:
+    dtype = dtype_of(cfg.param_dtype)
+    pattern = cfg.pattern_kinds()
+    keys = jax.random.split(key, cfg.n_layers + 4)
+    p: Params = {
+        "embed": embed_init(keys[-1], cfg.vocab_padded, cfg.d_model, dtype),
+        "blocks": _stack_blocks(keys[: cfg.n_layers], cfg, pattern, dtype),
+        "norm_f": norm_init(_norm_kind(cfg), cfg.d_model, dtype),
+    }
+    if not cfg.tie_embeddings:
+        p["lm_head"] = embed_init(keys[-2], cfg.vocab_padded, cfg.d_model, dtype)
+    if cfg.family == "audio":
+        p["encoder"] = _encoder_init(keys[-3], cfg, dtype)
+    return p
+
+
+def abstract_params(cfg) -> Params:
+    """eval_shape over init — the dry-run's parameter stand-in (no alloc)."""
+    return jax.eval_shape(lambda: init_params(jax.random.PRNGKey(0), cfg))
+
+
+# ---------------------------------------------------------------------------
+# block application (shared by train / prefill / decode)
+# ---------------------------------------------------------------------------
+
+
+def _apply_ffn(bp: Params, x: jax.Array, cfg, ffn: str, plan: ShardingPlan = NOPLAN):
+    """Residual FFN half-block. Returns (x, aux)."""
+    aux = {}
+    if ffn == "none":
+        return x, aux
+    h = norm_apply(_norm_kind(cfg), bp["norm2"], x, cfg.norm_eps)
+    if ffn == "moe":
+        out, aux = moe_apply(bp["moe"], h, cfg.moe, cfg.act, plan)
+    else:
+        out = mlp(bp["mlp"], h, cfg.act)
+    return x + out, aux
+
+
+def _apply_block_train(
+    bp: Params,
+    x: jax.Array,
+    cfg,
+    mixer: str,
+    ffn: str,
+    memory: jax.Array | None,
+    plan: ShardingPlan,
+    attn_chunk: int,
+):
+    nk = _norm_kind(cfg)
+    h = norm_apply(nk, bp["norm1"], x, cfg.norm_eps)
+    if mixer == "attn":
+        x = x + self_attention_train(bp["attn"], h, cfg, chunk=attn_chunk, plan=plan)
+    elif mixer == "mamba":
+        x = x + mamba_train(bp["mamba"], h, cfg)
+    elif mixer == "xattn":
+        y, _ = cross_attention(bp["xattn"], h, memory, cfg, plan=plan)
+        x = x + jnp.tanh(bp["gate_attn"]).astype(x.dtype) * y
+    if cfg.family == "audio":  # decoder cross-attn into encoder memory
+        hx = norm_apply(nk, bp["norm_x"], x, cfg.norm_eps)
+        y, _ = cross_attention(bp["xattn"], hx, memory, cfg, plan=plan)
+        x = x + y
+    x, aux = _apply_ffn(bp, x, cfg, ffn, plan)
+    x = shard(x, plan.hidden(), plan)
+    return x, aux
+
+
+def _scan_blocks(params: Params, x: jax.Array, cfg, fn):
+    """lax.scan over layer repeats; `fn(carry, per_rep_blocks)` applies one
+    period.  Returns (x, stacked_ys).
+
+    cfg.scan_unroll=True replaces the scan with a Python loop — used by the
+    roofline cost probes, because XLA's cost analysis counts a while-loop
+    body once regardless of trip count."""
+    blocks = params["blocks"]
+    return _scan_or_unroll(cfg, fn, x, blocks)
+
+
+def _scan_or_unroll(cfg, fn, carry, xs):
+    if getattr(cfg, "barrier_xs", False) and not getattr(cfg, "scan_unroll", False):
+        inner = fn
+
+        def fn(c, xs_slice):  # noqa: F811 — barrier wrapper around the body
+            xs_slice, c = jax.lax.optimization_barrier((xs_slice, c))
+            return inner(c, xs_slice)
+
+    body = jax.checkpoint(fn) if cfg.remat else fn
+    if getattr(cfg, "scan_unroll", False):
+        ys = []
+        n_reps = jax.tree.leaves(xs)[0].shape[0]
+        for r in range(n_reps):
+            per_rep = jax.tree.map(lambda a: a[r], xs)
+            carry, y = body(carry, per_rep)
+            ys.append(y)
+        stacked = jax.tree.map(lambda *zs: jnp.stack(zs), *ys) if ys else ()
+        return carry, stacked
+    grp = getattr(cfg, "remat_group", 0)
+    n_reps = jax.tree.leaves(xs)[0].shape[0]
+    if cfg.remat and grp > 1 and n_reps % grp == 0:
+        # sqrt-remat: outer scan over n_reps/grp checkpointed groups — only
+        # the group-boundary carries are saved for backward; the grp inner
+        # carries are recomputed transiently per group.
+        xs_g = jax.tree.map(lambda a: a.reshape((n_reps // grp, grp) + a.shape[1:]), xs)
+
+        def group_fn(c, grp_xs):
+            # inner layers are checkpointed too: the group recompute then
+            # keeps one layer's working set + grp boundary carries live
+            return jax.lax.scan(jax.checkpoint(fn), c, grp_xs)
+
+        carry, ys = jax.lax.scan(jax.checkpoint(group_fn), carry, xs_g)
+        return carry, jax.tree.map(lambda a: a.reshape((n_reps,) + a.shape[2:]), ys)
+    return jax.lax.scan(body, carry, xs)
+
+
+# ---------------------------------------------------------------------------
+# encoder (audio)
+# ---------------------------------------------------------------------------
+
+
+def encode_audio(params: Params, frames: jax.Array, cfg, plan: ShardingPlan = NOPLAN) -> jax.Array:
+    """Whisper encoder over precomputed frame embeddings (conv stub)."""
+    nk = _norm_kind(cfg)
+    enc = params["encoder"]
+    x = frames + sinusoid_positions(frames.shape[1], cfg.d_model).astype(frames.dtype)
+
+    def body(x, bp):
+        h = norm_apply(nk, bp["norm1"], x, cfg.norm_eps)
+        x = x + self_attention_train(bp["attn"], h, cfg, causal=False, plan=plan)
+        h = norm_apply(nk, bp["norm2"], x, cfg.norm_eps)
+        x = x + mlp(bp["mlp"], h, cfg.act)
+        return shard(x, plan.memory(), plan), None
+
+    x, _ = _scan_or_unroll(cfg, body, x, enc["blocks"])
+    return norm_apply(nk, enc["norm_post"], x, cfg.norm_eps)
+
+
+# ---------------------------------------------------------------------------
+# embedding / head
+# ---------------------------------------------------------------------------
+
+
+def _make_sharded_embed(plan: ShardingPlan, vocab: int, dtype):
+    """Embedding gather whose BACKWARD is a vocab-sharded one-hot matmul.
+
+    The natural gather backward is a scatter-add into a zeros(V, D) buffer;
+    XLA SPMD replicates that scatter, materializing the full dense embedding
+    gradient in f32 on every device (3 GiB for grok-1).  Expressing the
+    cotangent as one_hot(ids)^T @ g lets the dot partitioner keep V sharded."""
+
+    @jax.custom_vjp
+    def gather(table, ids):
+        return jnp.take(table, ids, axis=0)
+
+    def fwd(table, ids):
+        return gather(table, ids), ids
+
+    def bwd(ids, g):
+        oh = jax.nn.one_hot(ids.reshape(-1), vocab, dtype=g.dtype)  # (T, V)
+        oh = shard(oh, jax.sharding.PartitionSpec(None, plan.tp), plan)
+        gt = oh.T @ g.reshape(-1, g.shape[-1])
+        return gt.astype(dtype), None
+
+    gather.defvjp(fwd, bwd)
+    return gather
+
+
+def _embed_tokens(
+    params: Params, tokens: jax.Array, cfg, plan: ShardingPlan, pos: jax.Array | None = None
+) -> jax.Array:
+    """Token embedding (+ sinusoid positions for rope-free archs).  `pos`
+    (B,) selects per-batch positions during decode; None = arange(S)."""
+    cd = dtype_of(cfg.compute_dtype)
+    if plan.mesh is not None:
+        tab = params["embed"]
+        x = _make_sharded_embed(plan, tab.shape[0], tab.dtype)(tab, tokens).astype(cd)
+    else:
+        x = embed(params["embed"], tokens, cd)
+    if cfg.family == "audio" or cfg.rope_theta == 0:
+        if pos is None:
+            x = x + sinusoid_positions(tokens.shape[1], cfg.d_model).astype(cd)[None]
+        else:
+            tab = sinusoid_positions(1 << 16, cfg.d_model)
+            x = x + jnp.take(tab, jnp.minimum(pos, tab.shape[0] - 1), axis=0)[:, None].astype(cd)
+    return shard(x, plan.hidden(), plan)
+
+
+def lm_logits(params: Params, h: jax.Array, cfg, plan: ShardingPlan = NOPLAN) -> jax.Array:
+    """Final-norm + unembed.  The matmul runs in compute dtype (bf16 feeds
+    the MXU at full rate, half the weight traffic) with fp32 accumulation;
+    logits come out fp32 for the loss."""
+    h = norm_apply(_norm_kind(cfg), params["norm_f"], h, cfg.norm_eps)
+    w = params["lm_head"] if "lm_head" in params else params["embed"]
+    logits = jnp.einsum(
+        "bsd,vd->bsv", h, w.astype(h.dtype), preferred_element_type=jnp.float32
+    )
+    if cfg.vocab_padded != cfg.vocab:
+        if plan.mesh is None:  # host path: drop the pad columns
+            logits = logits[..., : cfg.vocab]
+        else:  # sharded path: mask them (slicing a TP-sharded dim resplits)
+            pad_mask = jnp.arange(cfg.vocab_padded) < cfg.vocab
+            logits = jnp.where(pad_mask, logits, -1e30)
+    return shard(logits, plan.logits(), plan)
+
+
+# ---------------------------------------------------------------------------
+# train
+# ---------------------------------------------------------------------------
+
+
+def _memory_of(params, batch, cfg, plan):
+    if cfg.family == "audio":
+        return encode_audio(params, batch["frames"], cfg, plan)
+    if cfg.family == "vlm":
+        return batch["images"]
+    return None
+
+
+def forward_hidden(
+    params: Params, batch: dict, cfg, plan: ShardingPlan = NOPLAN, *, attn_chunk: int = 2048
+) -> tuple[jax.Array, dict[str, jax.Array]]:
+    """Token stream -> (final hidden states (B, S, D), summed MoE aux)."""
+    pattern = cfg.pattern_kinds()
+    memory = _memory_of(params, batch, cfg, plan)
+    x = _embed_tokens(params, batch["tokens"], cfg, plan)
+
+    def period_fn(x, per_rep):
+        auxes = []
+        for pos, (mixer, ffn) in enumerate(pattern):
+            x, aux = _apply_block_train(per_rep[pos], x, cfg, mixer, ffn, memory, plan, attn_chunk)
+            auxes.append(aux)
+        lb = sum(a.get("load_balance", jnp.zeros(())) for a in auxes)
+        rz = sum(a.get("router_z", jnp.zeros(())) for a in auxes)
+        return x, {"load_balance": lb, "router_z": rz}
+
+    x, aux = _scan_blocks(params, x, cfg, period_fn)
+    return x, jax.tree.map(jnp.sum, aux)
+
+
+def cross_entropy(logits: jax.Array, labels: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """Masked next-token CE.  labels < 0 are ignored.  Returns (sum, count)."""
+    valid = labels >= 0
+    safe = jnp.maximum(labels, 0)
+    lse = jax.scipy.special.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, safe[..., None], axis=-1)[..., 0]
+    nll = jnp.where(valid, lse - gold, 0.0)
+    return nll.sum(), valid.sum()
+
+
+def apply_train(
+    params: Params, batch: dict, cfg, plan: ShardingPlan = NOPLAN, *, attn_chunk: int = 2048
+) -> tuple[jax.Array, dict[str, jax.Array]]:
+    """Full forward + masked CE loss (+ MoE aux).  The train_step microbatches
+    around this, so logits here exist only for one microbatch at a time."""
+    h, aux = forward_hidden(params, batch, cfg, plan, attn_chunk=attn_chunk)
+    logits = lm_logits(params, h, cfg, plan)
+    nll_sum, count = cross_entropy(logits, batch["labels"])
+    loss = nll_sum / jnp.maximum(count, 1)
+    metrics = {"ce": loss, "tokens": count}
+    loss = loss + 0.01 * aux.get("load_balance", 0.0) + 1e-3 * aux.get("router_z", 0.0)
+    metrics.update(aux)
+    return loss, metrics
+
+
+# ---------------------------------------------------------------------------
+# serve: caches, prefill, decode
+# ---------------------------------------------------------------------------
+
+
+def _block_cache_spec(cfg, mixer: str, batch: int, cache_len: int, mem_len: int, dtype):
+    """Zeroed cache for one layer of one period position."""
+    cache: dict[str, Any] = {}
+    if mixer == "attn":
+        kvh, hd = cfg.n_kv_heads, cfg.hd
+        cache["k"] = jnp.zeros((batch, cache_len, kvh, hd), dtype)
+        cache["v"] = jnp.zeros((batch, cache_len, kvh, hd), dtype)
+    elif mixer == "mamba":
+        cache.update(mamba_init_cache(batch, cfg.d_model, cfg.ssm, dtype))
+    elif mixer == "xattn":
+        kvh, hd = cfg.n_kv_heads, cfg.hd
+        cache["xk"] = jnp.zeros((batch, mem_len, kvh, hd), dtype)
+        cache["xv"] = jnp.zeros((batch, mem_len, kvh, hd), dtype)
+    if cfg.family == "audio":
+        kvh, hd = cfg.n_kv_heads, cfg.hd
+        cache["xk"] = jnp.zeros((batch, mem_len, kvh, hd), dtype)
+        cache["xv"] = jnp.zeros((batch, mem_len, kvh, hd), dtype)
+    return cache
+
+
+def init_caches(cfg, batch: int, cache_len: int, dtype=None) -> tuple:
+    """Tuple over period positions; leaves lead with n_reps."""
+    dtype = dtype or dtype_of(cfg.compute_dtype)
+    pattern = cfg.pattern_kinds()
+    n_reps = cfg.n_layers // len(pattern)
+    mem_len = cfg.encoder_seq if cfg.family == "audio" else (cfg.img_tokens or 1)
+    caches = []
+    for mixer, _ in pattern:
+        one = _block_cache_spec(cfg, mixer, batch, cache_len, mem_len, dtype)
+        caches.append(jax.tree.map(lambda x: jnp.broadcast_to(x, (n_reps,) + x.shape), one))
+    return tuple(caches)
+
+
+def _project_xkv(bp: Params, memory: jax.Array, cfg):
+    kvh, hd = cfg.n_kv_heads, cfg.hd
+    B, Skv, _ = memory.shape
+    k = (memory @ bp["xattn"]["wk"].astype(memory.dtype)).reshape(B, Skv, kvh, hd)
+    v = (memory @ bp["xattn"]["wv"].astype(memory.dtype)).reshape(B, Skv, kvh, hd)
+    return k, v
+
+
+def prefill(
+    params: Params,
+    batch: dict,
+    cfg,
+    cache_len: int | None = None,
+    plan: ShardingPlan = NOPLAN,
+    *,
+    attn_chunk: int = 2048,
+) -> tuple[jax.Array, tuple]:
+    """Process the whole prompt; return (last-position logits (B, V), caches).
+
+    KV caches are allocated at `cache_len` (>= prompt length) and written in
+    [0, S).  Mamba caches carry the post-prompt state."""
+    pattern = cfg.pattern_kinds()
+    tokens = batch["tokens"]
+    B, S = tokens.shape
+    cache_len = cache_len or S
+    memory = _memory_of(params, batch, cfg, plan)
+    x = _embed_tokens(params, tokens, cfg, plan)
+    cd = dtype_of(cfg.compute_dtype)
+    nk = _norm_kind(cfg)
+
+    def period_fn(x, per_rep):
+        new_caches = []
+        for pos, (mixer, ffn) in enumerate(pattern):
+            bp = per_rep[pos]
+            h = norm_apply(nk, bp["norm1"], x, cfg.norm_eps)
+            cache: dict[str, Any] = {}
+            if mixer == "attn":
+                y, kv = self_attention_prefill(bp["attn"], h, cfg, chunk=attn_chunk, plan=plan)
+                x = x + y
+                pad = cache_len - S
+                # two-step reshard into the cache layout: head-partial ->
+                # replicated-heads (cheap per-layer all-gather) -> seq-sharded
+                # (local slice); the direct reshard makes SPMD replicate a
+                # cache-sized buffer (16 GiB on grok-1 prefill_32k)
+                from jax.sharding import PartitionSpec as P
+
+                rep4 = P(plan.dp or None, None, None, None)
+                for key_, t in (("k", kv["k"]), ("v", kv["v"])):
+                    t = shard(t.astype(cd), rep4, plan)
+                    t = jnp.pad(t, ((0, 0), (0, pad), (0, 0), (0, 0)))
+                    cache[key_] = shard(t, plan.kv_cache(cfg.n_kv_heads), plan)
+            elif mixer == "mamba":
+                y, (hstate, conv) = mamba_train(bp["mamba"], h, cfg, return_state=True)
+                x = x + y
+                cache["h"] = shard(hstate, plan.ssm_state(), plan)
+                cache["conv"] = conv.astype(cd)
+            elif mixer == "xattn":
+                xk, xv = _project_xkv(bp, memory, cfg)
+                y, _ = cross_attention(bp["xattn"], h, None, cfg, {"k": xk, "v": xv}, plan=plan)
+                x = x + jnp.tanh(bp["gate_attn"]).astype(x.dtype) * y
+                cache["xk"], cache["xv"] = xk.astype(cd), xv.astype(cd)
+            if cfg.family == "audio":
+                xk, xv = _project_xkv(bp, memory, cfg)
+                hx = norm_apply(nk, bp["norm_x"], x, cfg.norm_eps)
+                y, _ = cross_attention(bp["xattn"], hx, None, cfg, {"k": xk, "v": xv}, plan=plan)
+                x = x + y
+                cache["xk"], cache["xv"] = xk.astype(cd), xv.astype(cd)
+            x, _ = _apply_ffn(bp, x, cfg, ffn, plan)
+            x = shard(x, plan.hidden(), plan)
+            new_caches.append(cache)
+        return x, tuple(new_caches)
+
+    x, caches = _scan_or_unroll(cfg, period_fn, x, params["blocks"])
+    last = x[:, -1:]
+    logits = lm_logits(params, last, cfg, plan)[:, 0]
+    return logits, caches
+
+
+def decode_step(
+    params: Params,
+    tokens: jax.Array,  # (B, 1)
+    pos: jax.Array,  # (B,)
+    caches: tuple,
+    batch: dict,
+    cfg,
+    plan: ShardingPlan = NOPLAN,
+) -> tuple[jax.Array, tuple]:
+    """One new token against the caches.  Returns (logits (B, V), caches)."""
+    pattern = cfg.pattern_kinds()
+    nk = _norm_kind(cfg)
+    x = _embed_tokens(params, tokens, cfg, plan, pos=pos)
+
+    def period_fn(x, inp):
+        per_rep, cache_in = inp
+        new_caches = []
+        for p_, (mixer, ffn) in enumerate(pattern):
+            bp, cache = per_rep[p_], cache_in[p_]
+            h = norm_apply(nk, bp["norm1"], x, cfg.norm_eps)
+            if mixer == "attn":
+                y, kv = self_attention_decode(bp["attn"], h, cache, pos, cfg, plan=plan)
+                x = x + y
+                cache = {**cache, "k": kv["k"], "v": kv["v"]}
+            elif mixer == "mamba":
+                y, cache = mamba_decode(bp["mamba"], h, cache, cfg)
+                x = x + y
+            elif mixer == "xattn":
+                y, _ = cross_attention(bp["xattn"], h, None, cfg, {"k": cache["xk"], "v": cache["xv"]}, plan=plan)
+                x = x + jnp.tanh(bp["gate_attn"]).astype(x.dtype) * y
+            if cfg.family == "audio":
+                hx = norm_apply(nk, bp["norm_x"], x, cfg.norm_eps)
+                y, _ = cross_attention(bp["xattn"], hx, None, cfg, {"k": cache["xk"], "v": cache["xv"]}, plan=plan)
+                x = x + y
+            x, _ = _apply_ffn(bp, x, cfg, ffn)
+            new_caches.append(cache)
+        return x, tuple(new_caches)
+
+    decode_cfg = dataclasses.replace(cfg, remat=False)  # no remat in decode
+    x, new_caches = _scan_or_unroll(decode_cfg, period_fn, x, (params["blocks"], caches))
+    logits = lm_logits(params, x, cfg, plan)[:, 0]
+    return logits, new_caches

@@ -1,0 +1,2 @@
+"""Serving substrate: cache specs + batched prefill/decode step builders."""
+from .engine import make_prefill_step, make_decode_step, cache_specs, generate

@@ -1,0 +1,93 @@
+"""Batched serving: prefill + decode step builders and a host-side
+generation loop.
+
+`cache_specs` mirrors models.transformer.init_caches as ShapeDtypeStructs (the
+decode dry-run's cache stand-in — a 500k-token cache is never allocated on
+the CPU host), with the matching PartitionSpecs from the ShardingPlan.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from ..dist.sharding import NOPLAN, ShardingPlan
+from ..models import transformer as T
+from ..models.layers import dtype_of
+
+__all__ = ["cache_specs", "cache_pspecs", "make_prefill_step", "make_decode_step", "generate"]
+
+
+def cache_specs(cfg, batch: int, cache_len: int) -> tuple:
+    """Abstract (ShapeDtypeStruct) version of init_caches — no allocation."""
+    return jax.eval_shape(lambda: T.init_caches(cfg, batch, cache_len))
+
+
+def cache_pspecs(cfg, plan: ShardingPlan) -> tuple:
+    """PartitionSpec tree matching init_caches: KV (B,S,KVH,hd), ssm state
+    (B,H,P,N), conv (B,K-1,C) — each with a leading n_reps (unsharded) dim."""
+    from jax.sharding import PartitionSpec as P
+
+    def spec_for(path, leaf):
+        name = path[-1].key if hasattr(path[-1], "key") else str(path[-1])
+        base: P
+        if name in ("k", "v", "xk", "xv"):
+            base = plan.kv_cache(cfg.n_kv_heads)
+        elif name == "h":
+            base = plan.ssm_state()
+        elif name == "conv":
+            base = plan.conv_state()
+        else:
+            base = P()
+        return P(None, *base)  # leading n_reps dim
+
+    abstract = cache_specs(cfg, 1, 8)
+    return jax.tree_util.tree_map_with_path(spec_for, abstract)
+
+
+def make_prefill_step(cfg, plan: ShardingPlan = NOPLAN, *, cache_len: int | None = None, attn_chunk: int = 2048) -> Callable:
+    def prefill_step(params, batch):
+        return T.prefill(params, batch, cfg, cache_len=cache_len, plan=plan, attn_chunk=attn_chunk)
+
+    return prefill_step
+
+
+def make_decode_step(cfg, plan: ShardingPlan = NOPLAN, *, sample: str = "greedy") -> Callable:
+    """decode_step(params, tokens (B,1), pos (B,), caches, batch) ->
+    (next_tokens (B,1), logits, caches)."""
+
+    def decode(params, tokens, pos, caches, batch):
+        logits, caches = T.decode_step(params, tokens, pos, caches, batch, cfg, plan)
+        nxt = jnp.argmax(logits, axis=-1).astype(jnp.int32)[:, None]
+        return nxt, logits, caches
+
+    return decode
+
+
+def generate(
+    params,
+    batch: dict,
+    cfg,
+    *,
+    max_new_tokens: int = 16,
+    cache_margin: int = 0,
+    plan: ShardingPlan = NOPLAN,
+    attn_chunk: int = 2048,
+) -> jax.Array:
+    """Greedy generation driver (host loop over jitted steps)."""
+    tokens = batch["tokens"]
+    B, S = tokens.shape
+    cache_len = S + max_new_tokens + cache_margin
+    prefill = jax.jit(make_prefill_step(cfg, plan, cache_len=cache_len, attn_chunk=attn_chunk))
+    decode = jax.jit(make_decode_step(cfg, plan))
+    logits, caches = prefill(params, batch)
+    cur = jnp.argmax(logits, -1).astype(jnp.int32)[:, None]
+    out = [cur]
+    pos = jnp.full((B,), S, jnp.int32)
+    for t in range(max_new_tokens - 1):
+        cur, _, caches = decode(params, cur, pos, caches, batch)
+        out.append(cur)
+        pos = pos + 1
+    return jnp.concatenate(out, axis=1)

@@ -1,0 +1,5 @@
+"""Training substrate: optimizer, microbatched train step, checkpointing,
+data pipeline."""
+from .optimizer import AdamWConfig, adamw_init, adamw_update
+from .train_step import TrainState, make_train_step, init_train_state
+from .checkpoint import CheckpointManager

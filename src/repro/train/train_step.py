@@ -1,0 +1,161 @@
+"""Microbatched, pjit-ready training step.
+
+Memory posture (the reason every assigned cell compiles on 16 GB chips):
+  * Gradient accumulation over ``num_microbatches`` via ``lax.scan`` — peak
+    activation memory is ONE microbatch's remat boundaries; the full (B, S)
+    batch never has live activations at once.
+  * Loss (and therefore logits (mb, S, V)) is computed inside the microbatch
+    scan — full-batch logits are never materialized (vocab 100k+ at 1M tokens
+    would be TBs).
+  * Optional int8 gradient compression with error feedback
+    (dist/compression.py) applied at the accumulation boundary.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from ..dist.sharding import NOPLAN, ShardingPlan, shard
+from ..models import transformer as T
+from .optimizer import AdamWConfig, adamw_init, adamw_update
+
+__all__ = ["TrainState", "init_train_state", "make_train_step"]
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class TrainState:
+    params: Any
+    opt: dict
+    rng: jax.Array
+
+    def tree_flatten(self):
+        return (self.params, self.opt, self.rng), None
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(*children)
+
+
+def init_train_state(key: jax.Array, cfg, opt_cfg: AdamWConfig) -> TrainState:
+    params = T.init_params(key, cfg)
+    return TrainState(params=params, opt=adamw_init(params, opt_cfg), rng=key)
+
+
+def _split_microbatches(batch: dict, n: int) -> dict:
+    """(B, ...) -> (n, B/n, ...) along the batch dim."""
+
+    def r(x):
+        B = x.shape[0]
+        assert B % n == 0, (B, n)
+        return x.reshape((n, B // n) + x.shape[1:])
+
+    return jax.tree.map(r, batch)
+
+
+def make_train_step(
+    cfg,
+    opt_cfg: AdamWConfig,
+    plan: ShardingPlan = NOPLAN,
+    *,
+    num_microbatches: int = 1,
+    attn_chunk: int = 2048,
+    compress_grads: bool = False,
+    accum_dtype: str | None = None,
+) -> Callable:
+    """Build ``train_step(state, batch) -> (state, metrics)``.
+
+    With num_microbatches > 1, grads are accumulated over a lax.scan whose
+    per-step working set is one microbatch (activation-memory lever).
+    accum_dtype defaults to bf16 for fsdp archs (halves the accumulation
+    carry; the 8-16-way sum stays well inside bf16's 8-bit mantissa budget
+    given per-microbatch grads are O(1e-2))."""
+    from ..dist.compression import compress_decompress
+
+    if accum_dtype is None:
+        accum_dtype = "bfloat16" if getattr(cfg, "fsdp", False) else "float32"
+    acc_dt = jnp.bfloat16 if accum_dtype == "bfloat16" else jnp.float32
+    cd = jnp.bfloat16 if cfg.compute_dtype == "bfloat16" else jnp.float32
+
+    def cast_params(params):
+        """Cast-then-gather: fp32 master -> compute dtype ONCE per step, on
+        the sharded stacks.  Every downstream FSDP all-gather, layer-scan xs
+        buffer, and backward grad stack then moves half the bytes; grads
+        arrive in compute dtype and only meet fp32 inside the optimizer
+        (EXPERIMENTS.md §Perf)."""
+        return jax.tree.map(
+            lambda p: p.astype(cd) if (p.dtype == jnp.float32 and p.ndim >= 2) else p,
+            params,
+        )
+
+    def loss_fn(params_c, mb):
+        loss, metrics = T.apply_train(params_c, mb, cfg, plan, attn_chunk=attn_chunk)
+        return loss, metrics
+
+    grad_fn = jax.value_and_grad(loss_fn, has_aux=True)
+
+    def param_shardings_of(params):
+        if plan.mesh is None:
+            return None
+        from jax.sharding import NamedSharding
+        from ..dist.sharding import param_pspecs, valid_spec
+
+        specs = param_pspecs(params, plan)
+        return jax.tree.map(
+            lambda t, s: NamedSharding(plan.mesh, valid_spec(t.shape, s, plan.mesh)),
+            params,
+            specs,
+        )
+
+    def constrain_like_params(tree, params):
+        """Pin gradient / accumulator sharding to the parameter sharding.
+        Without this, XLA's propagation is free to leave the grad tree
+        replicated over the data axes (measured: 24.8 GiB/device of
+        replicated grok-1 expert grads vs 2.4 GiB sharded)."""
+        sh = param_shardings_of(params)
+        if sh is None:
+            return tree
+        return jax.tree.map(jax.lax.with_sharding_constraint, tree, sh)
+
+    def train_step(state: TrainState, batch: dict) -> tuple[TrainState, dict]:
+        params = state.params
+        params_c = cast_params(params)
+
+        if num_microbatches == 1:
+            (loss, metrics), grads = grad_fn(params_c, batch)
+            grads = constrain_like_params(grads, params_c)
+        else:
+            mbs = _split_microbatches(batch, num_microbatches)
+            zero_g = constrain_like_params(
+                jax.tree.map(lambda p: jnp.zeros(p.shape, acc_dt), params_c), params_c
+            )
+
+            def acc(carry, mb):
+                g_acc, loss_acc = carry
+                (loss, metrics), g = grad_fn(params_c, mb)
+                g = constrain_like_params(g, params_c)
+                g_acc = jax.tree.map(lambda a, b: a + b.astype(acc_dt), g_acc, g)
+                return (g_acc, loss_acc + loss), metrics
+
+            (grads, loss_sum), metrics = jax.lax.scan(acc, (zero_g, 0.0), mbs)
+            grads = jax.tree.map(lambda g: g / num_microbatches, grads)
+            loss = loss_sum / num_microbatches
+            metrics = jax.tree.map(lambda m: m[-1], metrics)
+
+        if compress_grads:  # int8 + error feedback at the accumulation boundary
+            grads, state_opt = compress_decompress(grads, state.opt)
+        else:
+            state_opt = state.opt
+
+        new_params, new_opt, opt_metrics = adamw_update(
+            params, grads, state_opt, opt_cfg, shardings=param_shardings_of(params)
+        )
+        metrics = dict(metrics, loss=loss, **opt_metrics)
+        new_state = TrainState(params=new_params, opt=new_opt, rng=state.rng)
+        return new_state, metrics
+
+    return train_step

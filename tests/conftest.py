@@ -1,0 +1,32 @@
+"""Shared fixtures.  NOTE: no XLA_FLAGS here — tests run on the single real
+CPU device; only launch/dryrun.py forces 512 placeholder devices."""
+import jax
+import numpy as np
+import pytest
+
+from repro.core.coo import SparseTensor, synthetic_tensor, random_factors
+
+
+@pytest.fixture(scope="session")
+def key():
+    return jax.random.PRNGKey(0)
+
+
+@pytest.fixture(scope="session")
+def tiny_tensor() -> SparseTensor:
+    return synthetic_tensor((64, 48, 80), 2_000, seed=0, skew=0.8)
+
+
+@pytest.fixture(scope="session")
+def small_tensor() -> SparseTensor:
+    return synthetic_tensor((600, 500, 700), 20_000, seed=1, skew=1.0)
+
+
+@pytest.fixture(scope="session")
+def tensor4d() -> SparseTensor:
+    return synthetic_tensor((50, 40, 60, 30), 4_000, seed=2, skew=0.5)
+
+
+@pytest.fixture(scope="session")
+def tensor5d() -> SparseTensor:
+    return synthetic_tensor((20, 25, 30, 15, 18), 3_000, seed=3, skew=0.3)

@@ -1,0 +1,85 @@
+"""Attention: chunked-causal == dense-masked; GQA; rope; decode == train."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.models.attention import (
+    causal_attention,
+    decode_attention,
+    full_attention,
+)
+from repro.models.layers import apply_rope, rope_angles
+
+
+def _qkv(key, B, S, H, KVH, hd):
+    ks = jax.random.split(key, 3)
+    q = jax.random.normal(ks[0], (B, S, H, hd))
+    k = jax.random.normal(ks[1], (B, S, KVH, hd))
+    v = jax.random.normal(ks[2], (B, S, KVH, hd))
+    return q, k, v
+
+
+@pytest.mark.parametrize("chunk", [1, 4, 16, 64])
+@pytest.mark.parametrize("H,KVH", [(4, 4), (8, 2), (6, 1)])
+def test_chunked_causal_equals_masked_full(key, chunk, H, KVH):
+    B, S, hd = 2, 64, 16
+    q, k, v = _qkv(key, B, S, H, KVH, hd)
+    got = causal_attention(q, k, v, chunk=chunk)
+    mask = jnp.tril(jnp.ones((S, S), bool))
+    want = full_attention(q, k, v, mask)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=2e-4, atol=2e-4)
+
+
+def test_decode_equals_last_position(key):
+    """decode_attention over a cache == causal attention's last row."""
+    B, S, H, KVH, hd = 2, 32, 8, 2, 16
+    q, k, v = _qkv(key, B, S, H, KVH, hd)
+    full = causal_attention(q, k, v, chunk=8)
+    pos = jnp.full((B,), S - 1, jnp.int32)
+    dec = decode_attention(q[:, -1:], k, v, pos)
+    np.testing.assert_allclose(np.asarray(dec[:, 0]), np.asarray(full[:, -1]), rtol=2e-4, atol=2e-4)
+
+
+def test_decode_masks_future(key):
+    """Cache positions beyond pos must not contribute."""
+    B, S, H, KVH, hd = 1, 16, 2, 2, 8
+    q, k, v = _qkv(key, B, S, H, KVH, hd)
+    pos = jnp.array([7], jnp.int32)
+    base = decode_attention(q[:, 7:8], k, v, pos)
+    k2 = k.at[:, 8:].set(1e3)  # poison the future
+    v2 = v.at[:, 8:].set(-1e3)
+    poisoned = decode_attention(q[:, 7:8], k2, v2, pos)
+    np.testing.assert_allclose(np.asarray(base), np.asarray(poisoned), rtol=1e-5)
+
+
+def test_gqa_grouping_semantics(key):
+    """GQA == MHA with KV heads repeated."""
+    B, S, H, KVH, hd = 1, 16, 8, 2, 8
+    q, k, v = _qkv(key, B, S, H, KVH, hd)
+    got = causal_attention(q, k, v, chunk=4)
+    k_rep = jnp.repeat(k, H // KVH, axis=2)
+    v_rep = jnp.repeat(v, H // KVH, axis=2)
+    want = causal_attention(q, k_rep, v_rep, chunk=4)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-4, atol=1e-5)
+
+
+def test_rope_properties(key):
+    """Relative-position property: <rope(q,m), rope(k,n)> depends on m-n."""
+    hd = 32
+    q = jax.random.normal(key, (1, 1, 1, hd))
+    k = jax.random.normal(jax.random.PRNGKey(1), (1, 1, 1, hd))
+
+    def dot_at(m, n):
+        cm, sm = rope_angles(jnp.array([m]), hd, 10_000.0)
+        cn, sn = rope_angles(jnp.array([n]), hd, 10_000.0)
+        qr = apply_rope(q, cm[None], sm[None])
+        kr = apply_rope(k, cn[None], sn[None])
+        return float(jnp.sum(qr * kr))
+
+    assert dot_at(3, 1) == pytest.approx(dot_at(10, 8), rel=1e-4)
+    assert dot_at(5, 5) == pytest.approx(float(jnp.sum(q * k)), rel=1e-4)
+    # norm preservation
+    cm, sm = rope_angles(jnp.array([9]), hd, 10_000.0)
+    qr = apply_rope(q, cm[None], sm[None])
+    assert float(jnp.linalg.norm(qr)) == pytest.approx(float(jnp.linalg.norm(q)), rel=1e-5)

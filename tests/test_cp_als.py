@@ -1,0 +1,82 @@
+"""CP-ALS (paper Alg. 1) end-to-end: convergence, method/layout equivalence,
+and the Pallas-kernel-backed path."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.coo import SparseTensor, synthetic_tensor
+from repro.core.cp_als import cp_als, fit_value, gram_hadamard
+from repro.kernels.ops import make_planned_mttkrp
+
+
+def low_rank_tensor(shape=(20, 15, 18), rank=4, seed=0) -> SparseTensor:
+    """Exactly-low-rank tensor with FULL support in COO form.  (Sampling a
+    low-rank tensor at sparse coordinates does NOT give a low-rank sparse
+    tensor — CP-ALS fits the implicit zeros too — so the recovery test needs
+    every entry present.)"""
+    rng = np.random.default_rng(seed)
+    facs = [rng.standard_normal((s, rank)) for s in shape]
+    grids = np.meshgrid(*[np.arange(s) for s in shape], indexing="ij")
+    idx = np.stack([g.ravel() for g in grids], axis=1).astype(np.int32)
+    vals = np.einsum("zr,zr,zr->z", facs[0][idx[:, 0]], facs[1][idx[:, 1]], facs[2][idx[:, 2]])
+    return SparseTensor(idx, vals.astype(np.float32), shape)
+
+
+def test_fit_improves_and_converges():
+    """Exact recovery of a rank-4 tensor (decomposed at rank 5: ALS at the
+    exact rank can stall in the classic swamp; slight over-parameterization
+    is the standard fix and recovers fit = 1)."""
+    st_t = low_rank_tensor()
+    state = cp_als(st_t, rank=5, iters=25, seed=2)
+    fits = state.fit_history
+    assert fits[-1] > 0.95, fits
+    assert fits[-1] >= fits[0]
+
+
+def test_methods_agree():
+    """Approach 1 and Approach 2 drive identical ALS trajectories (same
+    math, different memory schedule — the paper's central claim)."""
+    st_t = low_rank_tensor(seed=3)
+    s1 = cp_als(st_t, rank=4, iters=5, method="approach1", seed=0)
+    s2 = cp_als(st_t, rank=4, iters=5, method="approach2", seed=0)
+    np.testing.assert_allclose(s1.fit_history, s2.fit_history, rtol=1e-4, atol=1e-5)
+    for f1, f2 in zip(s1.factors, s2.factors):
+        np.testing.assert_allclose(np.asarray(f1), np.asarray(f2), rtol=1e-3, atol=1e-4)
+
+
+def test_layouts_agree():
+    """'remap' (single stream re-sorted per mode, Alg. 5) == 'copies'
+    (per-mode sorted copies) — the trade the paper discusses in Sec. 3."""
+    st_t = low_rank_tensor(seed=4)
+    s1 = cp_als(st_t, rank=3, iters=4, layout="remap", seed=0)
+    s2 = cp_als(st_t, rank=3, iters=4, layout="copies", seed=0)
+    np.testing.assert_allclose(s1.fit_history, s2.fit_history, rtol=1e-4, atol=1e-5)
+
+
+def test_pallas_backed_cp_als():
+    """CP-ALS with the Pallas kernel (interpret mode) as the MTTKRP engine."""
+    st_t = low_rank_tensor(shape=(16, 12, 20), seed=5)
+
+    ops = {m: make_planned_mttkrp(st_t.sorted_by(m), m, 4, interpret=True) for m in range(3)}
+
+    def mttkrp_fn(indices, values, factors, mode, out_rows):
+        return ops[mode].output(factors, out_rows)
+
+    s_k = cp_als(st_t, rank=4, iters=5, layout="copies", mttkrp_fn=mttkrp_fn, seed=0)
+    s_j = cp_als(st_t, rank=4, iters=5, layout="copies", seed=0)
+    np.testing.assert_allclose(s_k.fit_history, s_j.fit_history, rtol=1e-3, atol=1e-4)
+
+
+def test_gram_hadamard():
+    key = jax.random.PRNGKey(0)
+    facs = [jax.random.normal(k, (10, 4)) for k in jax.random.split(key, 3)]
+    g = gram_hadamard(facs, 0)
+    want = (facs[1].T @ facs[1]) * (facs[2].T @ facs[2])
+    np.testing.assert_allclose(np.asarray(g), np.asarray(want), rtol=1e-5)
+
+
+def test_higher_order_cp_als(tensor4d):
+    state = cp_als(tensor4d, rank=3, iters=3, seed=0)
+    assert len(state.factors) == 4
+    assert all(np.isfinite(f).all() for f in map(np.asarray, state.factors))

@@ -1,0 +1,74 @@
+"""Dry-run machinery unit tests (no 512-device init): cell policy, HLO
+collective parsing, shape-byte accounting, microbatch defaults."""
+import jax
+import pytest
+
+from repro.configs import SHAPES, get_config, list_configs
+from repro.launch.dryrun import (
+    _shape_bytes,
+    auto_remat_group,
+    default_microbatches,
+    parse_collectives,
+    skip_reason,
+)
+
+
+def test_skip_matrix_policy():
+    skipped = [a for a in list_configs() if skip_reason(a, "long_500k")]
+    assert len(skipped) == 8  # all pure full-attention archs
+    assert skip_reason("mamba2-370m", "long_500k") is None
+    assert skip_reason("jamba-v0.1-52b", "long_500k") is None
+    for a in list_configs():
+        for s in ("train_4k", "prefill_32k", "decode_32k"):
+            assert skip_reason(a, s) is None
+
+
+def test_shape_bytes():
+    assert _shape_bytes("f32[64,256]") == 64 * 256 * 4
+    assert _shape_bytes("bf16[2,3,4]") == 48
+    assert _shape_bytes("(f32[8], bf16[8])") == 32 + 16
+    assert _shape_bytes("pred[10]") == 10
+
+
+def test_parse_collectives():
+    hlo = """
+  %ag = f32[64,256]{1,0} all-gather(f32[4,256] %x), replica_groups={}
+  %ar.1 = bf16[128]{0} all-reduce(bf16[128] %y), to_apply=%sum
+  %t = (f32[16,16]{1,0}, f32[16,16]{1,0}) all-to-all(f32[16,16] %a, f32[16,16] %b)
+  %cp = f32[8]{0} collective-permute(f32[8] %z), source_target_pairs={{0,1}}
+  %rs = f32[2,8]{1,0} reduce-scatter(f32[16,8] %w), dimensions={0}
+  %d = f32[4,4]{1,0} dot(f32[4,4] %p, f32[4,4] %q)
+"""
+    out = parse_collectives(hlo)
+    assert out["all-gather"]["count"] == 1
+    assert out["all-gather"]["bytes"] == 64 * 256 * 4
+    assert out["all-reduce"]["bytes"] == 256
+    assert out["all-to-all"]["count"] == 1
+    assert out["all-to-all"]["bytes"] == 2 * 16 * 16 * 4
+    assert out["collective-permute"]["bytes"] == 32
+    assert out["reduce-scatter"]["bytes"] == 64
+    assert "dot" not in out
+
+
+def test_auto_remat_group():
+    assert auto_remat_group(64) == 8
+    assert auto_remat_group(28) == 4  # divisors of 28 <= 5.29: 1,2,4
+    assert auto_remat_group(32) == 4
+    assert auto_remat_group(4) == 0  # too shallow to bother
+
+
+class _FakeMesh:
+    def __init__(self, shape):
+        self.shape = shape
+        self.axis_names = tuple(shape)
+
+
+def test_default_microbatches():
+    cfg_small = get_config("qwen3-0.6b")
+    cfg_big = get_config("grok-1-314b")
+    mesh = _FakeMesh({"data": 16, "model": 16})
+    assert default_microbatches(cfg_big, SHAPES["train_4k"], mesh) == 16
+    assert default_microbatches(cfg_small, SHAPES["train_4k"], mesh) == 4
+    assert default_microbatches(cfg_big, SHAPES["decode_32k"], mesh) == 1
+    mesh2 = _FakeMesh({"pod": 2, "data": 16, "model": 16})
+    assert default_microbatches(cfg_big, SHAPES["train_4k"], mesh2) == 8

@@ -1,0 +1,120 @@
+"""Per-architecture smoke tests (reduced configs, CPU): one forward/train
+step with shape + finiteness asserts, and exact prefill/decode consistency."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config, list_configs
+from repro.models import transformer as T
+
+ARCHS = list_configs()
+
+
+def _batch(cfg, key, B=2, S=16):
+    batch = {
+        "tokens": jax.random.randint(key, (B, S), 0, cfg.vocab, jnp.int32),
+        "labels": jax.random.randint(key, (B, S), 0, cfg.vocab, jnp.int32),
+    }
+    if cfg.family == "audio":
+        batch["frames"] = jax.random.normal(key, (B, cfg.encoder_seq, cfg.d_model)) * 0.1
+    if cfg.family == "vlm":
+        batch["images"] = jax.random.normal(key, (B, cfg.img_tokens, cfg.d_model)) * 0.1
+    return batch
+
+
+def test_all_archs_registered():
+    assert len(ARCHS) == 10
+    fams = {get_config(a).family for a in ARCHS}
+    assert fams == {"dense", "moe", "ssm", "audio", "vlm", "hybrid"}
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_full_config_matches_assignment(arch):
+    cfg = get_config(arch)
+    assert cfg.param_count() > 0 and cfg.source
+    # spot-check the assignment table numbers
+    table = {
+        "qwen3-0.6b": (28, 1024, 16, 8, 3072, 151_936),
+        "minitron-4b": (32, 3072, 24, 8, 9216, 256_000),
+        "phi4-mini-3.8b": (32, 3072, 24, 8, 8192, 200_064),
+        "qwen2-1.5b": (28, 1536, 12, 2, 8960, 151_936),
+        "phi3.5-moe-42b-a6.6b": (32, 4096, 32, 8, 6400, 32_064),
+        "grok-1-314b": (64, 6144, 48, 8, 32_768, 131_072),
+        "mamba2-370m": (48, 1024, 0, 0, 0, 50_280),
+        "whisper-large-v3": (32, 1280, 20, 20, 5120, 51_866),
+        "llama-3.2-vision-11b": (40, 4096, 32, 8, 14_336, 128_256),
+        "jamba-v0.1-52b": (32, 4096, 32, 8, 14_336, 65_536),
+    }
+    L, d, h, kv, ff, v = table[arch]
+    assert (cfg.n_layers, cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.d_ff, cfg.vocab) == (L, d, h, kv, ff, v)
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_reduced_smoke_train_step(arch, key):
+    cfg = get_config(arch).reduced()
+    params = T.init_params(key, cfg)
+    batch = _batch(cfg, key)
+    loss, metrics = T.apply_train(params, batch, cfg, attn_chunk=8)
+    assert np.isfinite(float(loss))
+    assert float(metrics["tokens"]) == batch["tokens"].size
+    # one grad step moves the loss
+    g = jax.grad(lambda p: T.apply_train(p, batch, cfg, attn_chunk=8)[0])(params)
+    assert all(np.isfinite(np.asarray(l)).all() for l in jax.tree.leaves(g))
+    p2 = jax.tree.map(lambda p, gg: p - 0.1 * gg.astype(p.dtype), params, g)
+    loss2, _ = T.apply_train(p2, batch, cfg, attn_chunk=8)
+    assert float(loss2) < float(loss)
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_prefill_decode_consistency(arch, key):
+    """decode_step after prefill == direct forward at position S (exact)."""
+    cfg = get_config(arch).reduced()
+    B, S = 2, 16
+    params = T.init_params(key, cfg)
+    batch = _batch(cfg, key, B, S)
+    logits_pre, caches = T.prefill(params, batch, cfg, cache_len=S + 4, attn_chunk=8)
+    assert logits_pre.shape == (B, cfg.vocab)
+    nxt = jnp.argmax(logits_pre, -1)[:, None].astype(jnp.int32)
+    pos = jnp.full((B,), S, jnp.int32)
+    logits_dec, _ = T.decode_step(params, nxt, pos, caches, batch, cfg)
+    batch2 = dict(batch, tokens=jnp.concatenate([batch["tokens"], nxt], 1))
+    h2, _ = T.forward_hidden(params, batch2, cfg, attn_chunk=1)
+    ref = T.lm_logits(params, h2[:, -1:], cfg)[:, 0]
+    err = float(jnp.abs(ref - logits_dec).max()) / max(1.0, float(jnp.abs(ref).max()))
+    assert err < 2e-2, err
+
+
+@pytest.mark.parametrize("arch", ["qwen3-0.6b", "jamba-v0.1-52b", "phi3.5-moe-42b-a6.6b"])
+def test_remat_and_groups_numerically_identical(arch, key):
+    cfg0 = dataclasses.replace(get_config(arch).reduced(), remat=False)
+    p = cfg0.period
+    cfg0 = dataclasses.replace(cfg0, n_layers=4 * p)
+    cfg1 = dataclasses.replace(cfg0, remat=True)
+    cfg2 = dataclasses.replace(cfg0, remat=True, remat_group=2)
+    params = T.init_params(key, cfg0)
+    batch = _batch(cfg0, key)
+    l0 = float(T.apply_train(params, batch, cfg0, attn_chunk=8)[0])
+    l1 = float(T.apply_train(params, batch, cfg1, attn_chunk=8)[0])
+    l2 = float(T.apply_train(params, batch, cfg2, attn_chunk=8)[0])
+    assert l0 == pytest.approx(l1, abs=1e-6) == pytest.approx(l2, abs=1e-6)
+
+
+def test_param_count_analytic_vs_actual():
+    """Analytic param_count (used for roofline MODEL_FLOPS) matches the real
+    tree within 2% for a dense arch."""
+    cfg = get_config("qwen3-0.6b")
+    small = cfg.reduced()
+    params = T.init_params(jax.random.PRNGKey(0), small)
+    actual = sum(int(np.prod(l.shape)) for l in jax.tree.leaves(params))
+    assert abs(actual - small.param_count()) / actual < 0.02
+
+
+def test_moe_active_params_less_than_total():
+    cfg = get_config("phi3.5-moe-42b-a6.6b")
+    assert cfg.active_param_count() < cfg.param_count() / 3
+    # ballpark the published sizes: 42B total / 6.6B active
+    assert 30e9 < cfg.param_count() < 55e9
+    assert 5e9 < cfg.active_param_count() < 9e9

@@ -1,0 +1,93 @@
+"""Sharding rules: spec validity/fallbacks over every arch's parameter tree
+(pure spec logic — no multi-device init needed)."""
+import jax
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.configs import SHAPES, get_config, list_configs
+from repro.dist.sharding import ShardingPlan, _leaf_spec, batch_specs, valid_spec
+from repro.models import transformer as T
+
+
+class _FakeMesh:
+    """Duck-typed mesh: only .shape and .axis_names are consulted by the
+    spec rules."""
+
+    def __init__(self, shape):
+        self.shape = dict(shape)
+        self.axis_names = tuple(shape)
+
+
+def _plan(fsdp=False):
+    mesh = _FakeMesh({"data": 16, "model": 16})
+    return ShardingPlan(mesh=mesh, dp=("data",), tp="model", fsdp=fsdp)
+
+
+def _check_divisible(shape, spec, mesh):
+    entries = list(spec) + [None] * (len(shape) - len(spec))
+    for dim, axis in zip(shape, entries):
+        if axis is None:
+            continue
+        names = axis if isinstance(axis, tuple) else (axis,)
+        size = 1
+        for n in names:
+            size *= mesh.shape[n]
+        assert dim % size == 0, (shape, spec)
+
+
+@pytest.mark.parametrize("arch", list_configs())
+@pytest.mark.parametrize("fsdp", [False, True])
+def test_param_specs_always_divisible(arch, fsdp):
+    """For every arch and every leaf: the chosen spec divides the dims —
+    with whisper's vocab (51866) exercising the fallback path."""
+    cfg = get_config(arch)
+    plan = _plan(fsdp)
+    abstract = T.abstract_params(cfg)
+
+    def check(path, leaf):
+        keys = tuple(p.key if hasattr(p, "key") else str(p) for p in path)
+        spec = _leaf_spec(keys, tuple(leaf.shape), plan)
+        spec = valid_spec(tuple(leaf.shape), spec, plan.mesh)
+        _check_divisible(leaf.shape, spec, plan.mesh)
+        return spec
+
+    specs = jax.tree_util.tree_map_with_path(check, abstract)
+    # big matrices must actually be TP-sharded (not silently replicated)
+    flat = jax.tree_util.tree_flatten_with_path(specs)[0]
+    shas = {tuple(str(k) for k in path): spec for path, spec in flat}
+    n_sharded = sum(
+        1 for s in shas.values() if any(e is not None for e in (list(s) if s else []))
+    )
+    assert n_sharded > len(shas) / 4, "too few sharded leaves"
+
+
+def test_whisper_vocab_fallback():
+    """51866 doesn't divide 16 -> vocab dim unsharded, d_model picks up TP."""
+    plan = _plan()
+    spec = _leaf_spec(("embed",), (51_866, 1280), plan)
+    assert spec == P(None, "model")
+
+
+def test_valid_spec_drops_nondividing():
+    mesh = _FakeMesh({"data": 16, "model": 16})
+    assert valid_spec((1, 524_288), P("data", "model"), mesh) == P(None, "model")
+    assert valid_spec((256, 100), P("data", "model"), mesh) == P("data", None)
+    assert valid_spec((32,), P(("data", "model"),), mesh) == P(None)
+    assert valid_spec((512,), P(("data", "model"),), mesh) == P(("data", "model"))
+
+
+@pytest.mark.parametrize("arch", list_configs())
+@pytest.mark.parametrize("shape", list(SHAPES))
+def test_batch_specs_cover_model_inputs(arch, shape):
+    cfg = get_config(arch)
+    plan = _plan()
+    specs = batch_specs(cfg, SHAPES[shape], plan)
+    assert "tokens" in specs
+    if SHAPES[shape].kind == "decode":
+        assert specs["tokens"].shape[1] == 1 and "pos" in specs
+    else:
+        assert specs["tokens"].shape == (SHAPES[shape].global_batch, SHAPES[shape].seq_len)
+    if cfg.family == "audio":
+        assert specs["frames"].shape == (SHAPES[shape].global_batch, cfg.encoder_seq, cfg.d_model)
+    if cfg.family == "vlm":
+        assert specs["images"].shape[1] == cfg.img_tokens

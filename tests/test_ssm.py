@@ -1,0 +1,126 @@
+"""Mamba2 / SSD: the chunked matmul form must equal the sequential
+recurrence for any shape, chunk size, and initial state."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.configs.base import SSMConfig
+from repro.models.ssm import (
+    causal_conv1d,
+    conv1d_decode_step,
+    mamba_decode,
+    mamba_init,
+    mamba_init_cache,
+    mamba_train,
+    ssd_chunked,
+    ssd_decode_step,
+    ssd_reference,
+)
+
+
+def _ssd_inputs(key, B, S, H, P, G, N):
+    ks = jax.random.split(key, 5)
+    x = jax.random.normal(ks[0], (B, S, H, P))
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (B, S, H)))
+    A = -jnp.exp(jax.random.normal(ks[2], (H,)) * 0.5)
+    Bm = jax.random.normal(ks[3], (B, S, G, N))
+    Cm = jax.random.normal(ks[4], (B, S, G, N))
+    return x, dt, A, Bm, Cm
+
+
+@pytest.mark.parametrize("chunk", [1, 4, 16, 64])
+def test_chunked_equals_reference(key, chunk):
+    x, dt, A, Bm, Cm = _ssd_inputs(key, 2, 64, 4, 8, 2, 16)
+    D = jnp.ones((4,))
+    yr, hr = ssd_reference(x, dt, A, Bm, Cm, D)
+    yc, hc = ssd_chunked(x, dt, A, Bm, Cm, D, chunk=chunk)
+    np.testing.assert_allclose(np.asarray(yr), np.asarray(yc), rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(np.asarray(hr), np.asarray(hc), rtol=1e-4, atol=1e-4)
+
+
+def test_chunked_handles_ragged_tail(key):
+    """S not a multiple of chunk: dt=0 padding leaves y and h unchanged."""
+    x, dt, A, Bm, Cm = _ssd_inputs(key, 1, 23, 2, 4, 1, 8)
+    yr, hr = ssd_reference(x, dt, A, Bm, Cm)
+    yc, hc = ssd_chunked(x, dt, A, Bm, Cm, chunk=8)
+    np.testing.assert_allclose(np.asarray(yr), np.asarray(yc), rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(np.asarray(hr), np.asarray(hc), rtol=1e-4, atol=1e-4)
+
+
+def test_initial_state_threading(key):
+    """Splitting a sequence at any point and carrying h must equal one pass
+    (the prefill-then-decode contract)."""
+    x, dt, A, Bm, Cm = _ssd_inputs(key, 1, 32, 2, 4, 1, 8)
+    y_full, h_full = ssd_chunked(x, dt, A, Bm, Cm, chunk=8)
+    cut = 19
+    y1, h1 = ssd_chunked(x[:, :cut], dt[:, :cut], A, Bm[:, :cut], Cm[:, :cut], chunk=8)
+    y2, h2 = ssd_chunked(x[:, cut:], dt[:, cut:], A, Bm[:, cut:], Cm[:, cut:], h0=h1, chunk=8)
+    np.testing.assert_allclose(np.asarray(jnp.concatenate([y1, y2], 1)), np.asarray(y_full), rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(np.asarray(h2), np.asarray(h_full), rtol=1e-4, atol=1e-4)
+
+
+def test_decode_step_chain(key):
+    """Token-by-token ssd_decode_step == full reference scan."""
+    x, dt, A, Bm, Cm = _ssd_inputs(key, 2, 16, 2, 4, 1, 8)
+    D = jnp.ones((2,))
+    yr, hr = ssd_reference(x, dt, A, Bm, Cm, D)
+    h = jnp.zeros((2, 2, 4, 8))
+    ys = []
+    for t in range(16):
+        y, h = ssd_decode_step(h, x[:, t], dt[:, t], A, Bm[:, t], Cm[:, t], D)
+        ys.append(y)
+    np.testing.assert_allclose(np.asarray(jnp.stack(ys, 1)), np.asarray(yr), rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(np.asarray(h), np.asarray(hr), rtol=1e-4, atol=1e-4)
+
+
+def test_conv1d_decode_matches_train(key):
+    B, S, C, K = 2, 12, 6, 4
+    x = jax.random.normal(key, (B, S, C))
+    w = jax.random.normal(jax.random.PRNGKey(1), (K, C)) * 0.5
+    b = jnp.zeros((C,))
+    y_full, _ = causal_conv1d(x, w, b)
+    state = jnp.zeros((B, K - 1, C))
+    ys = []
+    for t in range(S):
+        y, state = conv1d_decode_step(x[:, t], w, b, state)
+        ys.append(y)
+    np.testing.assert_allclose(np.asarray(jnp.stack(ys, 1)), np.asarray(y_full), rtol=1e-5, atol=1e-5)
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    S=st.integers(1, 48),
+    chunk=st.sampled_from([1, 3, 8, 32]),
+    H=st.sampled_from([1, 2, 4]),
+    G=st.sampled_from([1, 2]),
+    seed=st.integers(0, 99),
+)
+def test_property_chunk_invariance(S, chunk, H, G, seed):
+    if H % G:
+        H = G
+    key = jax.random.PRNGKey(seed)
+    x, dt, A, Bm, Cm = _ssd_inputs(key, 1, S, H, 4, G, 4)
+    yr, hr = ssd_reference(x, dt, A, Bm, Cm)
+    yc, hc = ssd_chunked(x, dt, A, Bm, Cm, chunk=chunk)
+    np.testing.assert_allclose(np.asarray(yr), np.asarray(yc), rtol=2e-3, atol=2e-3)
+    np.testing.assert_allclose(np.asarray(hr), np.asarray(hc), rtol=2e-3, atol=2e-3)
+
+
+def test_mamba_block_roundtrip(key):
+    cfg = type("C", (), {"ssm": SSMConfig(d_state=16, d_conv=4, expand=2, head_dim=8, n_groups=1, chunk=8)})()
+    d = 32
+    p = mamba_init(key, d, cfg.ssm)
+    x = jax.random.normal(key, (2, 16, d)) * 0.5
+    full = mamba_train(p, x, cfg)
+    cache = mamba_init_cache(2, d, cfg.ssm)
+    outs = []
+    for t in range(16):
+        o, cache = mamba_decode(p, x[:, t : t + 1], cache, cfg)
+        outs.append(o)
+    np.testing.assert_allclose(
+        np.asarray(jnp.concatenate(outs, 1)), np.asarray(full), rtol=1e-4, atol=1e-4
+    )

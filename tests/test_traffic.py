@@ -1,0 +1,69 @@
+"""Paper Table 1 + Sec. 3.1 analytical claims, validated against measured
+access counts."""
+import numpy as np
+import pytest
+
+from repro.core.coo import synthetic_tensor
+from repro.core.hypergraph import (
+    approach1_traffic,
+    approach2_traffic,
+    remap_overhead,
+    stats,
+)
+
+
+def test_table1_formulas(tiny_tensor):
+    """Exact Table 1 element counts."""
+    st_t, R = tiny_tensor, 16
+    t1 = approach1_traffic(st_t, 0, R)
+    t2 = approach2_traffic(st_t, 0, R, in_mode=1)
+    T, N = st_t.nnz, st_t.nmodes
+    assert t1.total_elems == T + (N - 1) * T * R + st_t.shape[0] * R
+    assert t2.total_elems == T + N * T * R + st_t.shape[1] * R + T * R
+    assert t1.partial_sum_elems == 0
+    assert t2.partial_sum_elems == T * R
+    # identical compute (paper: N*|T|*R per mode)
+    assert t1.compute_ops == t2.compute_ops == N * T * R
+
+
+def test_approach1_always_less_traffic(tiny_tensor, tensor4d, tensor5d):
+    """Approach 1 strictly beats Approach 2 whenever |T| dominates I_out
+    (real sparse tensors; the paper's premise)."""
+    for st_t in (tiny_tensor, tensor4d, tensor5d):
+        for mode in range(st_t.nmodes):
+            for r in (8, 16, 32, 64):
+                a1 = approach1_traffic(st_t, mode, r).total_elems
+                a2 = approach2_traffic(st_t, mode, r).total_elems
+                assert a1 < a2
+
+
+@pytest.mark.parametrize("n_modes,rank", [(3, 16), (4, 16), (5, 16), (3, 64), (5, 64)])
+def test_remap_overhead_below_6pct(n_modes, rank):
+    """Sec. 3.1: 2|T| / (|T| + (N-1)|T|R + I_out*R) ~< 6% for N=3-5, R=16-64.
+    (The paper rounds: the worst case N=3, R=16 is exactly 2/33 = 6.06%.)"""
+    shape = tuple([200] * n_modes)
+    st_t = synthetic_tensor(shape, 20_000, seed=0, skew=0.5)
+    ov = remap_overhead(st_t, 0, rank)
+    assert ov < 0.0607
+    # and matches the paper's closed-form approximation within 10% rel.
+    approx = 2.0 / (1.0 + (n_modes - 1) * rank)
+    assert abs(ov - approx) / approx < 0.1
+
+
+def test_remap_overhead_formula_exact(tiny_tensor):
+    t1 = approach1_traffic(tiny_tensor, 0, 16)
+    assert remap_overhead(tiny_tensor, 0, 16) == pytest.approx(
+        2 * tiny_tensor.nnz / t1.total_elems
+    )
+
+
+def test_hypergraph_stats(tiny_tensor):
+    hs = stats(tiny_tensor)
+    assert hs.nnz == tiny_tensor.nnz
+    assert hs.nmodes == 3
+    for m in range(3):
+        h = tiny_tensor.mode_histogram(m)
+        assert hs.degree_max[m] == h.max()
+        assert hs.occupied_frac[m] == pytest.approx((h > 0).mean(), rel=1e-6)
+    # zipf skew should show up as cv > 0.5 on a skewed tensor
+    assert max(hs.degree_cv) > 0.5

@@ -1,0 +1,135 @@
+"""Training substrate: optimizer math, LR schedule, microbatch-accumulation
+equivalence, gradient compression, end-to-end loss descent."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.data.pipeline import TokenPipeline
+from repro.dist.compression import (
+    compress_decompress,
+    dequantize_int8,
+    quantize_int8,
+)
+from repro.models import transformer as T
+from repro.train.optimizer import AdamWConfig, adamw_init, adamw_update, global_norm, lr_at
+from repro.train.train_step import init_train_state, make_train_step
+
+
+def test_adamw_converges_quadratic():
+    """AdamW drives a quadratic to its minimum."""
+    target = jnp.array([1.5, -2.0, 0.5])
+    params = {"w": jnp.zeros(3)}
+    cfg = AdamWConfig(lr=0.1, warmup_steps=0, total_steps=300, weight_decay=0.0)
+    state = adamw_init(params, cfg)
+    for _ in range(300):
+        g = {"w": 2 * (params["w"] - target)}
+        params, state, _ = adamw_update(params, g, state, cfg)
+    np.testing.assert_allclose(np.asarray(params["w"]), np.asarray(target), atol=1e-2)
+
+
+def test_lr_schedule():
+    cfg = AdamWConfig(lr=1e-3, warmup_steps=10, total_steps=100, min_lr_frac=0.1)
+    assert float(lr_at(cfg, jnp.array(0))) == 0.0
+    assert float(lr_at(cfg, jnp.array(10))) == pytest.approx(1e-3, rel=1e-5)
+    assert float(lr_at(cfg, jnp.array(100))) == pytest.approx(1e-4, rel=1e-3)
+    # monotone decay after warmup
+    lrs = [float(lr_at(cfg, jnp.array(s))) for s in range(10, 101, 10)]
+    assert all(a >= b for a, b in zip(lrs, lrs[1:]))
+
+
+def test_grad_clipping():
+    cfg = AdamWConfig(clip_norm=1.0, warmup_steps=0)
+    params = {"w": jnp.zeros(4)}
+    state = adamw_init(params, cfg)
+    g = {"w": jnp.full(4, 100.0)}
+    _, _, metrics = adamw_update(params, g, state, cfg)
+    assert float(metrics["grad_norm"]) == pytest.approx(200.0, rel=1e-4)
+
+
+def test_sequential_vs_parallel_updates_identical():
+    """optimization_barrier chaining is a scheduling hint only."""
+    key = jax.random.PRNGKey(0)
+    params = {"a": jax.random.normal(key, (8, 8)), "b": jax.random.normal(key, (4,))}
+    grads = jax.tree.map(lambda p: p * 0.1, params)
+    s1 = adamw_init(params, AdamWConfig(sequential_updates=True))
+    s2 = adamw_init(params, AdamWConfig(sequential_updates=False))
+    p1, _, _ = adamw_update(params, grads, s1, AdamWConfig(sequential_updates=True))
+    p2, _, _ = adamw_update(params, grads, s2, AdamWConfig(sequential_updates=False))
+    for a, b in zip(jax.tree.leaves(p1), jax.tree.leaves(p2)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-6)
+
+
+def test_microbatch_equals_full_batch():
+    """Grad accumulation (fp32) over k microbatches == one big batch, up to
+    the CE-mean nonlinearity (equal microbatch token counts here)."""
+    cfg = get_config("qwen3-0.6b").reduced()
+    opt = AdamWConfig(lr=1e-3, warmup_steps=0, total_steps=10)
+    key = jax.random.PRNGKey(0)
+    state1 = init_train_state(key, cfg, opt)
+    state2 = init_train_state(key, cfg, opt)
+    pipe = TokenPipeline(vocab=cfg.vocab, seq_len=16, global_batch=4, seed=0)
+    batch = jax.tree.map(jnp.asarray, pipe.batch(0))
+    s_full = make_train_step(cfg, opt, num_microbatches=1, attn_chunk=8, accum_dtype="float32")
+    s_mb = make_train_step(cfg, opt, num_microbatches=4, attn_chunk=8, accum_dtype="float32")
+    n1, m1 = s_full(state1, batch)
+    n2, m2 = s_mb(state2, batch)
+    assert float(m1["loss"]) == pytest.approx(float(m2["loss"]), rel=1e-5)
+    for a, b in zip(jax.tree.leaves(n1.params), jax.tree.leaves(n2.params)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=2e-4, atol=2e-5)
+
+
+def test_loss_decreases_over_steps():
+    cfg = get_config("qwen3-0.6b").reduced()
+    opt = AdamWConfig(lr=3e-3, warmup_steps=2, total_steps=30)
+    state = init_train_state(jax.random.PRNGKey(0), cfg, opt)
+    step = jax.jit(make_train_step(cfg, opt, num_microbatches=1, attn_chunk=8), donate_argnums=(0,))
+    pipe = TokenPipeline(vocab=cfg.vocab, seq_len=32, global_batch=8, seed=0)
+    losses = []
+    for i in range(20):
+        state, metrics = step(state, jax.tree.map(jnp.asarray, pipe.batch(i)))
+        losses.append(float(metrics["loss"]))
+    assert np.mean(losses[-5:]) < np.mean(losses[:5]) - 0.1, losses
+
+
+def test_int8_quantization_roundtrip():
+    key = jax.random.PRNGKey(0)
+    x = jax.random.normal(key, (64, 64)) * 3.0
+    q, s = quantize_int8(x)
+    deq = dequantize_int8(q, s)
+    assert q.dtype == jnp.int8
+    np.testing.assert_allclose(np.asarray(deq), np.asarray(x), atol=float(s) * 0.51)
+
+
+def test_error_feedback_accumulates():
+    """With error feedback, repeated compression of a constant gradient has
+    bounded bias: |mean(deq) - g| <= e_max / N, where e_max is half an int8
+    quantum (~max|g|/254)."""
+    g = {"w": jnp.array([1e-4, 5e-3, -2e-3, 1.0])}  # wide dynamic range
+    opt_state: dict = {}
+    total = jnp.zeros(4)
+    n = 400
+    for _ in range(n):
+        deq, opt_state = compress_decompress(g, opt_state)
+        total = total + deq["w"]
+    bound = (1.0 / 127) / n * 2  # quantum / N with slack
+    np.testing.assert_allclose(np.asarray(total / n), np.asarray(g["w"]), atol=bound)
+
+
+def test_compressed_training_still_converges():
+    cfg = get_config("qwen3-0.6b").reduced()
+    opt = AdamWConfig(lr=3e-3, warmup_steps=2, total_steps=30)
+    state = init_train_state(jax.random.PRNGKey(0), cfg, opt)
+    step = jax.jit(
+        make_train_step(cfg, opt, num_microbatches=1, attn_chunk=8, compress_grads=True),
+        donate_argnums=(0,),
+    )
+    pipe = TokenPipeline(vocab=cfg.vocab, seq_len=32, global_batch=8, seed=0)
+    losses = []
+    for i in range(20):
+        state, metrics = step(state, jax.tree.map(jnp.asarray, pipe.batch(i)))
+        losses.append(float(metrics["loss"]))
+    assert np.mean(losses[-5:]) < np.mean(losses[:5]) - 0.1, losses
