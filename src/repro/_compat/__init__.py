@@ -1,0 +1,2 @@
+"""Fallback shims for optional third-party test dependencies (the container
+image may lack them; nothing here is used when the real package exists)."""

@@ -1,0 +1,139 @@
+"""Minimal stand-in for the ``hypothesis`` API surface the test suite uses.
+
+Installed into ``sys.modules`` by tests/conftest.py ONLY when the real
+package is absent (the repo's property tests must still run in hermetic
+containers that bake no test extras).  It is deliberately tiny:
+
+  * ``@given(**strategies)`` draws ``max_examples`` pseudo-random examples
+    per test from a deterministic per-test seed (no shrinking, no database);
+  * strategies: ``integers``, ``floats``, ``tuples``, ``sampled_from``,
+    ``booleans``, ``just``, ``lists``;
+  * ``settings(max_examples=, deadline=)`` (deadline ignored);
+  * ``assume(cond)`` skips the current example without consuming a failure.
+
+Determinism: the RNG seed is crc32(test qualname) + example index, so a
+passing run is reproducible and CI cannot flake on draw order.
+"""
+from __future__ import annotations
+
+import functools
+import inspect
+import random
+import sys
+import types
+import zlib
+
+DEFAULT_MAX_EXAMPLES = 100
+
+
+class UnsatisfiedAssumption(Exception):
+    pass
+
+
+def assume(condition) -> bool:
+    if not condition:
+        raise UnsatisfiedAssumption()
+    return True
+
+
+class _Strategy:
+    def __init__(self, draw):
+        self._draw = draw
+
+    def example(self, rng: random.Random):
+        return self._draw(rng)
+
+
+def integers(min_value: int, max_value: int) -> _Strategy:
+    return _Strategy(lambda rng: rng.randint(min_value, max_value))
+
+
+def floats(min_value: float, max_value: float) -> _Strategy:
+    return _Strategy(lambda rng: rng.uniform(min_value, max_value))
+
+
+def booleans() -> _Strategy:
+    return _Strategy(lambda rng: rng.random() < 0.5)
+
+
+def just(value) -> _Strategy:
+    return _Strategy(lambda rng: value)
+
+
+def sampled_from(options) -> _Strategy:
+    options = list(options)
+    return _Strategy(lambda rng: options[rng.randrange(len(options))])
+
+
+def tuples(*strategies: _Strategy) -> _Strategy:
+    return _Strategy(lambda rng: tuple(s.example(rng) for s in strategies))
+
+
+def lists(elements: _Strategy, *, min_size: int = 0, max_size: int = 10) -> _Strategy:
+    return _Strategy(
+        lambda rng: [elements.example(rng) for _ in range(rng.randint(min_size, max_size))]
+    )
+
+
+def given(**strategies: _Strategy):
+    def deco(fn):
+        @functools.wraps(fn)
+        def wrapper(*args, **kwargs):
+            n = getattr(wrapper, "_hyp_max_examples", DEFAULT_MAX_EXAMPLES)
+            base = zlib.crc32(fn.__qualname__.encode())
+            ran = 0
+            i = 0
+            # draw until n examples actually ran (assume() rejections retry),
+            # with a generous rejection budget so a bad filter still halts
+            while ran < n and i < n * 50 + 100:
+                rng = random.Random(base * 1_000_003 + i)
+                drawn = {k: s.example(rng) for k, s in strategies.items()}
+                i += 1
+                try:
+                    fn(*args, **kwargs, **drawn)
+                except UnsatisfiedAssumption:
+                    continue
+                except Exception as e:
+                    raise AssertionError(
+                        f"falsifying example ({fn.__name__}): {drawn!r}"
+                    ) from e
+                ran += 1
+            return None
+
+        wrapper._hyp_given = True
+        # hide strategy-filled params from pytest's fixture resolution (the
+        # real hypothesis does the same); remaining params stay fixtures
+        remaining = [
+            p for p in inspect.signature(fn).parameters.values()
+            if p.name not in strategies
+        ]
+        wrapper.__signature__ = inspect.Signature(remaining)
+        return wrapper
+
+    return deco
+
+
+def settings(max_examples: int = DEFAULT_MAX_EXAMPLES, deadline=None, **_ignored):
+    def deco(fn):
+        fn._hyp_max_examples = max_examples
+        return fn
+
+    return deco
+
+
+def install() -> None:
+    """Register this module as ``hypothesis`` (+ ``hypothesis.strategies``)."""
+    if "hypothesis" in sys.modules:
+        return
+    st_mod = types.ModuleType("hypothesis.strategies")
+    for name in ("integers", "floats", "booleans", "just", "sampled_from", "tuples", "lists"):
+        setattr(st_mod, name, globals()[name])
+    hyp = types.ModuleType("hypothesis")
+    hyp.given = given
+    hyp.settings = settings
+    hyp.assume = assume
+    hyp.strategies = st_mod
+    hyp.HealthCheck = types.SimpleNamespace(filter_too_much=None, too_slow=None)
+    hyp.__is_repro_stub__ = True
+    sys.modules["hypothesis"] = hyp
+    sys.modules["hypothesis.strategies"] = st_mod

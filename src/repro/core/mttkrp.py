@@ -92,11 +92,14 @@ def mttkrp(
     out_rows: int,
     *,
     method: str = "approach1",
+    sorted_by_mode: bool = True,
 ) -> jax.Array:
     """Dispatcher. `method` in {approach1, approach2}.  The Pallas path is
     dispatched in kernels/ops.py (it needs the host-side BlockPlan)."""
     if method == "approach1":
-        return mttkrp_approach1(indices, values, factors, mode, out_rows)
+        return mttkrp_approach1(
+            indices, values, factors, mode, out_rows, sorted_by_mode=sorted_by_mode
+        )
     if method == "approach2":
         return mttkrp_approach2(indices, values, factors, mode, out_rows)
     raise ValueError(f"unknown method {method!r}")
@@ -107,31 +110,46 @@ def mttkrp(
 # ---------------------------------------------------------------------------
 
 
-def mttkrp_sharded(mesh, axis_names: tuple[str, ...], mode: int, out_rows: int, method: str = "approach1"):
-    """Build a shard_map'd MTTKRP: non-zeros sharded over `axis_names`
-    (flattened data axes), factor matrices replicated, outputs psum-reduced.
+def mttkrp_sharded(
+    plan,
+    mode: int,
+    out_rows: int,
+    method: str = "approach1",
+    *,
+    sorted_by_mode: bool = False,
+):
+    """Build a shard_map'd MTTKRP from a ``ShardingPlan``: the non-zero
+    stream is sharded over the plan's data axes (``plan.stream()``), factor
+    matrices replicated, outputs psum-reduced over the same axes.
 
     This is the production distribution of the paper's kernel: every device
     runs Approach 1 on its local remapped shard; the output factor matrix is
     reduced across the stream shards (one all-reduce of I_out x R — the
-    `I_out*R` store term of Table 1, now a collective).
+    `I_out*R` store term of Table 1, now a collective).  Pass
+    ``sorted_by_mode=True`` only when every local shard is sorted by the
+    output-mode coordinate (sorting globally then sharding contiguously
+    satisfies this — the remap posture); the default assumes an unsorted
+    stream, since ``indices_are_sorted`` is a correctness promise to XLA,
+    not a hint.
     """
     from jax.experimental.shard_map import shard_map
 
+    axis_names = plan.data_axes()
+
     def local_fn(indices, values, *factors):
-        out = mttkrp(indices, values, factors, mode, out_rows, method=method)
+        out = mttkrp(
+            indices, values, factors, mode, out_rows,
+            method=method, sorted_by_mode=sorted_by_mode,
+        )
         return jax.lax.psum(out, axis_names)
 
-    nfac = None  # bound at call time via *factors
-
     def call(indices, values, factors):
-        in_specs = (
-            P(axis_names),
-            P(axis_names),
-        ) + tuple(P(None, None) for _ in factors)
+        in_specs = (plan.stream(), plan.stream()) + tuple(
+            P(None, None) for _ in factors
+        )
         return shard_map(
             local_fn,
-            mesh=mesh,
+            mesh=plan.mesh,
             in_specs=in_specs,
             out_specs=P(None, None),
             check_rep=False,

@@ -1,0 +1,14 @@
+"""Distribution layer: sharding plans (mesh-axis partitioning of every model,
+the trainer and the server) and gradient compression.  The TPU analogue of
+the paper's programmable memory controller — see sharding.py."""
+from .compression import compress_decompress, dequantize_int8, quantize_int8
+from .sharding import (
+    NOPLAN,
+    ShardingPlan,
+    batch_pspecs,
+    batch_specs,
+    make_plan,
+    param_pspecs,
+    shard,
+    valid_spec,
+)

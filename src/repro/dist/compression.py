@@ -1,0 +1,72 @@
+"""Gradient compression: int8 quantization with error feedback.
+
+Applied at the microbatch-accumulation boundary (train_step.py): the
+accumulated gradient tree is quantized to int8 + one fp32 scale per leaf,
+dequantized, and the residual is carried in the optimizer-state dict under
+``"ef"`` so the quantization bias averages out over steps (1-bit-Adam-style
+error feedback; Seide et al. 2014).  This is the paper's "tensor-element
+width" knob (Sec. 5.2, Remapper) applied to the gradient stream: a DP
+all-reduce of int8 grads moves 4x fewer bytes than fp32.
+
+The functions are pure and jit-safe; ``compress_decompress`` threads its
+residual through whatever state dict the caller owns (adamw_update preserves
+unknown keys, so the residual survives the optimizer update).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["quantize_int8", "dequantize_int8", "compress_decompress", "init_error_feedback"]
+
+_EF_KEY = "ef"
+
+
+def init_error_feedback(opt_state: dict, params) -> dict:
+    """Pre-seed the zeroed residual tree so the opt-state structure is stable
+    from step 0 (jit retrace- and checkpoint/restore-safe: the restore
+    shardings tree must match the saved tree leaf-for-leaf)."""
+    return {
+        **opt_state,
+        _EF_KEY: jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params),
+    }
+
+
+def quantize_int8(x: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """Symmetric per-tensor int8 quantization.  Returns (q int8, scale f32)
+    with q = round(x / scale), scale = max|x| / 127 (round-to-nearest, so the
+    reconstruction error is bounded by scale/2 per element)."""
+    xf = x.astype(jnp.float32)
+    scale = jnp.maximum(jnp.max(jnp.abs(xf)) / 127.0, jnp.float32(1e-30))
+    q = jnp.clip(jnp.round(xf / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def dequantize_int8(q: jax.Array, scale: jax.Array) -> jax.Array:
+    return q.astype(jnp.float32) * scale
+
+
+def compress_decompress(grads, opt_state: dict) -> tuple[dict, dict]:
+    """Quantize->dequantize the gradient tree with error feedback.
+
+    ``opt_state`` is any state dict the caller owns; the fp32 residual tree is
+    kept under ``"ef"`` (created zeroed on first use).  Returns the
+    dequantized gradients (in the input dtype) and the updated state dict —
+    the round-trip models the int8 DP all-reduce wire format while keeping
+    the unquantized residual on-device."""
+    err = opt_state.get(_EF_KEY)
+    if err is None:
+        err = jax.tree.map(lambda g: jnp.zeros(g.shape, jnp.float32), grads)
+
+    def one(g, e):
+        x = g.astype(jnp.float32) + e
+        q, scale = quantize_int8(x)
+        deq = dequantize_int8(q, scale)
+        return deq.astype(g.dtype), x - deq
+
+    flat_g, tdef = jax.tree.flatten(grads)
+    flat_e = jax.tree.leaves(err)
+    outs = [one(g, e) for g, e in zip(flat_g, flat_e)]
+    deq = jax.tree.unflatten(tdef, [d for d, _ in outs])
+    new_err = jax.tree.unflatten(tdef, [e for _, e in outs])
+    return deq, {**opt_state, _EF_KEY: new_err}

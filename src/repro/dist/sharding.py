@@ -1,0 +1,266 @@
+"""Sharding plan: the distribution layer under every model, the trainer and
+the server.
+
+This is the TPU analogue of the paper's programmable memory controller
+(Sec. 5): the controller partitions the spMTTKRP workload across fixed-function
+engines under an on-chip SRAM budget; here the "engines" are mesh axes and the
+budget is per-device HBM/VMEM.  One ``ShardingPlan`` holds the mesh plus the
+axis assignment (``dp`` data axes, ``tp`` model axis, optional ``fsdp`` /
+sequence-parallel flags) and every spec rule in the repo derives from it:
+
+  * parameter specs   — ``param_pspecs`` / ``_leaf_spec`` (name conventions:
+    column-parallel projections shard their output dim over ``tp``,
+    row-parallel (wo/wd/out_proj) their input dim; fsdp adds the data axes);
+  * activation specs  — ``plan.hidden() / logits() / scores() / kv_cache() /
+    ssm_state() / conv_state()`` consumed by models/*;
+  * batch specs       — ``batch_specs`` / ``batch_pspecs`` (dry-run stand-ins);
+  * validity          — ``valid_spec`` drops any axis whose size does not
+    divide the dim (whisper's 51866-row vocab falls back to replication; the
+    embedding rule then moves TP onto d_model instead).
+
+Everything is divisibility-checked *after* rule selection, so a spec rule may
+optimistically name an axis and let ``valid_spec`` strike it per-shape.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+__all__ = [
+    "ShardingPlan",
+    "NOPLAN",
+    "make_plan",
+    "shard",
+    "valid_spec",
+    "param_pspecs",
+    "batch_specs",
+    "batch_pspecs",
+]
+
+
+def _axes_size(mesh, axes) -> int:
+    """Product of mesh-axis sizes for a spec entry (name or tuple of names).
+    Duck-typed: only `.shape[name]` is consulted (tests use fake meshes)."""
+    if mesh is None or axes is None:
+        return 1
+    names = axes if isinstance(axes, (tuple, list)) else (axes,)
+    size = 1
+    for n in names:
+        size *= int(mesh.shape[n])
+    return size
+
+
+@dataclasses.dataclass(frozen=True)
+class ShardingPlan:
+    """Mesh + axis assignment.  ``dp`` is a tuple of data-parallel axis names
+    (("pod", "data") on the multi-pod mesh), ``tp`` the tensor-parallel axis.
+    ``fsdp`` additionally shards parameters/optimizer state over ``dp``
+    (ZeRO-3 analogue); ``sp`` shards activation sequence dims over ``tp``."""
+
+    mesh: Any = None
+    dp: tuple[str, ...] | None = None
+    tp: str | None = None
+    fsdp: bool = False
+    sp: bool = False
+
+    # ------------------------------------------------------------ axis sizes
+
+    def tp_size(self) -> int:
+        return _axes_size(self.mesh, self.tp)
+
+    def dp_size(self) -> int:
+        return _axes_size(self.mesh, self.dp)
+
+    def data_axes(self) -> tuple[str, ...]:
+        """Flattened data axes (shard_map / psum axis names)."""
+        if self.dp is None:
+            return ()
+        return tuple(self.dp) if isinstance(self.dp, (tuple, list)) else (self.dp,)
+
+    # ------------------------------------------------- activation spec rules
+
+    def hidden(self) -> P:
+        """(B, S, D) residual-stream activations."""
+        return P(self.dp, self.tp if self.sp else None, None)
+
+    def memory(self) -> P:
+        """(B, S_mem, D) encoder / image-token memory."""
+        return P(self.dp, self.tp if self.sp else None, None)
+
+    def logits(self) -> P:
+        """(B, S, V): vocab over TP (the unembed is column-parallel)."""
+        return P(self.dp, None, self.tp)
+
+    def scores(self, n_heads: int) -> P:
+        """(B, H, Sq, Sk) attention scores: prefer the head dim; fall back to
+        the query-chunk dim when H doesn't divide the model axis (qwen2's 12
+        heads, whisper's 20 on 16-way TP)."""
+        if self.tp is not None and n_heads % self.tp_size() == 0:
+            return P(self.dp, self.tp, None, None)
+        return P(self.dp, None, self.tp, None)
+
+    def kv_cache(self, n_kv_heads: int) -> P:
+        """(B, S, KVH, hd) KV-cache layout: head-sharded when KVH divides the
+        model axis, else sequence-sharded (KVH=8 cannot shard 16-way)."""
+        if self.tp is not None and n_kv_heads > 0 and n_kv_heads % self.tp_size() == 0:
+            return P(self.dp, None, self.tp, None)
+        return P(self.dp, self.tp, None, None)
+
+    def ssm_state(self) -> P:
+        """(B, H, P, N) mamba state: heads over TP."""
+        return P(self.dp, self.tp, None, None)
+
+    def conv_state(self) -> P:
+        """(B, K-1, C) conv tail: channels over TP."""
+        return P(self.dp, None, self.tp)
+
+    def stream(self) -> P:
+        """Leading-dim sharding of a flat non-zero / token stream over the
+        data axes (the DMA-engine partitioning of the COO stream)."""
+        return P(self.dp)
+
+
+NOPLAN = ShardingPlan()
+
+
+def make_plan(mesh, cfg=None, *, sp: bool = False) -> ShardingPlan:
+    """Build the canonical plan for a mesh: ``model`` is the TP axis, every
+    other axis is data-parallel; ``fsdp`` comes from the arch config."""
+    axis_names = tuple(mesh.axis_names)
+    tp = "model" if "model" in axis_names else None
+    dp = tuple(n for n in axis_names if n != "model") or None
+    return ShardingPlan(
+        mesh=mesh, dp=dp, tp=tp, fsdp=bool(getattr(cfg, "fsdp", False)), sp=sp
+    )
+
+
+# ---------------------------------------------------------------------------
+# spec validity
+# ---------------------------------------------------------------------------
+
+
+def valid_spec(shape: tuple[int, ...], spec: P | None, mesh) -> P:
+    """Strike every spec entry whose axis-size product does not divide the
+    corresponding dim (fallback to replication on that dim).  Entry length is
+    preserved; tuple entries are all-or-nothing."""
+    if spec is None:
+        return P(*([None] * len(shape)))
+    entries = list(spec)[: len(shape)]
+    out = []
+    for dim, axis in zip(shape, entries):
+        if axis is not None and dim % _axes_size(mesh, axis) == 0:
+            out.append(axis)
+        else:
+            out.append(None)
+    return P(*out)
+
+
+def shard(x: jax.Array, spec: P | None, plan: ShardingPlan = NOPLAN) -> jax.Array:
+    """with_sharding_constraint through the plan; identity off-mesh.  The spec
+    is divisibility-filtered first, so rules can name axes optimistically."""
+    if plan is None or plan.mesh is None or spec is None:
+        return x
+    spec = valid_spec(x.shape, spec, plan.mesh)
+    return jax.lax.with_sharding_constraint(
+        x, jax.sharding.NamedSharding(plan.mesh, spec)
+    )
+
+
+# ---------------------------------------------------------------------------
+# parameter specs
+# ---------------------------------------------------------------------------
+
+# Row-parallel projections: the TP-sharded dim is *contracted* by the matmul,
+# inducing the single all-reduce per block (megatron convention).
+_ROW_PARALLEL = {"wo", "wd", "out_proj"}
+# Biases/vectors living in the output dim of a column-parallel projection.
+_TP_VECTORS = {"bq", "bk", "bv", "bu", "conv_b"}
+# 1-D-per-feature leaves that always replicate (norm scales, gates, SSM
+# per-head constants): tiny, and sharding them buys nothing.
+_REPLICATED = {"scale", "bias", "gate_attn", "gate_ffn", "A_log", "D", "dt_bias", "bd"}
+
+
+def _leaf_spec(keys: tuple[str, ...], shape: tuple[int, ...], plan: ShardingPlan) -> P:
+    """Parameter-leaf spec by name convention.  ``keys`` is the string path
+    into the parameter tree; everything before the trailing matrix dims is a
+    stack dim (layer repeats, expert stacks) and stays unsharded."""
+    name = keys[-1] if keys else ""
+    tp = plan.tp
+    fs = plan.dp if plan.fsdp else None
+    ndim = len(shape)
+    if name in ("embed", "lm_head"):
+        # vocab over TP; if the (unpadded) vocab doesn't divide, d_model
+        # picks up TP instead of silently replicating the biggest table.
+        if tp is not None and shape[0] % _axes_size(plan.mesh, tp) == 0:
+            return P(tp, fs)
+        return P(None, tp)
+    if name in _REPLICATED:
+        return P(*([None] * ndim))
+    if ndim >= 2:
+        lead = [None] * (ndim - 2)
+        if name in _ROW_PARALLEL:
+            return P(*lead, tp, fs)
+        return P(*lead, fs, tp)  # column-parallel default (wq/wk/wv/wu/wg/...)
+    if ndim == 1 and name in _TP_VECTORS:
+        return P(tp)
+    return P(*([None] * ndim))
+
+
+def _key_str(entry) -> str:
+    return entry.key if hasattr(entry, "key") else str(entry)
+
+
+def param_pspecs(params, plan: ShardingPlan):
+    """PartitionSpec tree mirroring ``params`` (works on arrays or
+    ShapeDtypeStructs).  Callers run ``valid_spec`` per-leaf afterwards."""
+
+    def f(path, leaf):
+        keys = tuple(_key_str(p) for p in path)
+        return _leaf_spec(keys, tuple(leaf.shape), plan)
+
+    return jax.tree_util.tree_map_with_path(f, params)
+
+
+# ---------------------------------------------------------------------------
+# batch specs
+# ---------------------------------------------------------------------------
+
+
+def _compute_dtype(cfg):
+    return jnp.bfloat16 if getattr(cfg, "compute_dtype", "float32") == "bfloat16" else jnp.float32
+
+
+def batch_specs(cfg, shape_cfg, plan: ShardingPlan) -> dict[str, jax.ShapeDtypeStruct]:
+    """Abstract batch stand-ins for one (arch, shape) cell — what the dry-run
+    lowers against.  Decode carries one new token + per-row cache positions;
+    audio/vlm archs add their (stubbed) memory streams."""
+    B, S = shape_cfg.global_batch, shape_cfg.seq_len
+    sds = jax.ShapeDtypeStruct
+    specs: dict[str, jax.ShapeDtypeStruct] = {}
+    if shape_cfg.kind == "decode":
+        specs["tokens"] = sds((B, 1), jnp.int32)
+        specs["pos"] = sds((B,), jnp.int32)
+    else:
+        specs["tokens"] = sds((B, S), jnp.int32)
+        if shape_cfg.kind == "train":
+            specs["labels"] = sds((B, S), jnp.int32)
+    cd = _compute_dtype(cfg)
+    if cfg.family == "audio":
+        specs["frames"] = sds((B, cfg.encoder_seq, cfg.d_model), cd)
+    if cfg.family == "vlm":
+        specs["images"] = sds((B, cfg.img_tokens, cfg.d_model), cd)
+    return specs
+
+
+def batch_pspecs(cfg, shape_cfg, plan: ShardingPlan) -> dict[str, P]:
+    """PartitionSpecs matching ``batch_specs``: batch dim over the data axes,
+    everything else replicated."""
+    dp = plan.dp
+    specs: dict[str, P] = {}
+    for k, v in batch_specs(cfg, shape_cfg, plan).items():
+        specs[k] = P(dp, *([None] * (len(v.shape) - 1)))
+    return specs

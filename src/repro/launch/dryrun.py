@@ -183,20 +183,28 @@ def build_cell(arch: str, shape_name: str, mesh, *, num_microbatches=None, sp=Fa
 
     if shape_cfg.kind == "train":
         nmb = num_microbatches or default_microbatches(cfg, shape_cfg, mesh)
+
+        def abstract_opt(params):
+            opt = adamw_init(params, opt_cfg)
+            if compress_grads:  # steady-state step: the "ef" residual is a
+                from ..dist.compression import init_error_feedback  # live input
+
+                opt = init_error_feedback(opt, params)
+            return opt
+
         state_abs = jax.eval_shape(
             lambda: TrainState(
                 params=T.init_params(jax.random.PRNGKey(0), cfg),
-                opt=adamw_init(params_abs, opt_cfg),
+                opt=abstract_opt(params_abs),
                 rng=jax.random.PRNGKey(0),
             )
         )
         from ..train.optimizer import opt_pspecs
 
-        state_specs = TrainState(
-            params=p_specs,
-            opt=opt_pspecs(params_abs, p_specs, opt_cfg),
-            rng=P(),
-        )
+        o_specs = opt_pspecs(params_abs, p_specs, opt_cfg)
+        if compress_grads:
+            o_specs["ef"] = p_specs
+        state_specs = TrainState(params=p_specs, opt=o_specs, rng=P())
         step_fn = make_train_step(cfg, opt_cfg, plan, num_microbatches=nmb,
                                   attn_chunk=attn_chunk, compress_grads=compress_grads)
         fn = jax.jit(step_fn,

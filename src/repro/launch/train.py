@@ -56,9 +56,10 @@ def build(args, mesh):
         pspecs = jax.tree.map(
             lambda a, s: valid_spec(a.shape, s, mesh), state.params, pspecs
         )
-        specs = TrainState(
-            params=pspecs, opt=opt_pspecs(state.params, pspecs, opt_cfg), rng=P()
-        )
+        ospecs = opt_pspecs(state.params, pspecs, opt_cfg)
+        if args.compress_grads:  # error-feedback residual shards like params
+            ospecs["ef"] = pspecs
+        specs = TrainState(params=pspecs, opt=ospecs, rng=P())
         return jax.tree.map(
             lambda s: NamedSharding(mesh, s), specs,
             is_leaf=lambda x: isinstance(x, P),
@@ -89,7 +90,10 @@ def train_once(args, start_attempt: int) -> int:
     with mesh:
         from ..train.train_step import init_train_state
 
-        state = init_train_state(jax.random.PRNGKey(args.seed), cfg, opt_cfg)
+        state = init_train_state(
+            jax.random.PRNGKey(args.seed), cfg, opt_cfg,
+            compress_grads=args.compress_grads,
+        )
         shardings = shardings_of(state)
         state = jax.device_put(state, shardings)
         start = 0

@@ -120,6 +120,17 @@ class CheckpointManager:
         td = pickle.loads(bytes.fromhex(meta["treedef"]))
         host = [np.load(os.path.join(d, f"arr_{i}.npy")) for i in range(meta["nleaves"])]
         if shardings is not None:
+            sh_struct = jax.tree.structure(shardings)
+            if sh_struct != td:
+                # a silent zip misalignment here device_puts leaves onto the
+                # wrong shardings (e.g. resuming with a different
+                # --compress-grads setting adds/drops the opt "ef" subtree)
+                raise ValueError(
+                    f"checkpoint step {step} tree structure does not match the "
+                    f"requested shardings ({td.num_leaves} saved leaves vs "
+                    f"{sh_struct.num_leaves}); was the run configuration "
+                    "(e.g. --compress-grads) changed since the save?"
+                )
             sh_leaves = jax.tree.leaves(shardings)
             leaves = [jax.device_put(h, s) for h, s in zip(host, sh_leaves)]
         else:

@@ -199,6 +199,8 @@ def adamw_update(
     new_v = jax.tree.unflatten(tdef, [o[2] for o in out])
     return (
         new_p,
-        {"m": new_m, "v": new_v, "step": step},
+        # preserve keys other subsystems thread through the opt dict (the
+        # compression error-feedback residual lives under "ef")
+        {**state, "m": new_m, "v": new_v, "step": step},
         {"grad_norm": gnorm, "lr": lr},
     )

@@ -41,9 +41,16 @@ class TrainState:
         return cls(*children)
 
 
-def init_train_state(key: jax.Array, cfg, opt_cfg: AdamWConfig) -> TrainState:
+def init_train_state(
+    key: jax.Array, cfg, opt_cfg: AdamWConfig, *, compress_grads: bool = False
+) -> TrainState:
     params = T.init_params(key, cfg)
-    return TrainState(params=params, opt=adamw_init(params, opt_cfg), rng=key)
+    opt = adamw_init(params, opt_cfg)
+    if compress_grads:  # stable opt structure: the "ef" residual exists from
+        from ..dist.compression import init_error_feedback  # step 0 onward
+
+        opt = init_error_feedback(opt, params)
+    return TrainState(params=params, opt=opt, rng=key)
 
 
 def _split_microbatches(batch: dict, n: int) -> dict:

@@ -1,5 +1,12 @@
 """Shared fixtures.  NOTE: no XLA_FLAGS here — tests run on the single real
 CPU device; only launch/dryrun.py forces 512 placeholder devices."""
+try:  # property tests prefer the real hypothesis; hermetic containers may
+    import hypothesis  # noqa: F401 — lack it, so fall back to the repo stub
+except ImportError:
+    from repro._compat import hypothesis_stub
+
+    hypothesis_stub.install()
+
 import jax
 import numpy as np
 import pytest

@@ -1,0 +1,70 @@
+"""PMS property tests (hypothesis): the paper Sec. 5.3 simulator must (a)
+never propose a configuration that violates the VMEM budget, (b) keep its
+roofline identity t_total == max(t_mem, t_compute), and (c) classify the
+bottleneck the same way whether fed a built BlockPlan (measured fills) or
+the analytic balls-in-bins estimate — whenever either model says the cell is
+decisively one-sided, the other must not flip it."""
+from hypothesis import assume, given, settings, strategies as st
+
+from repro.core.coo import synthetic_tensor
+from repro.core.hypergraph import stats as hg_stats
+from repro.core.memctrl import MemoryControllerConfig, TPUSpec
+from repro.core.pms import predict_analytic, predict_from_plan, search
+from repro.core.remap import plan_blocks
+
+
+def _rank_padded(rank: int) -> int:
+    return max(128, ((rank + 127) // 128) * 128)
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    dims=st.tuples(st.integers(8, 80), st.integers(8, 80), st.integers(8, 80)),
+    nnz=st.integers(64, 2_000),
+    rank=st.sampled_from([8, 64, 130]),
+    mode=st.integers(0, 2),
+    seed=st.integers(0, 99),
+)
+def test_search_results_fit_and_keep_roofline_identity(dims, nnz, rank, mode, seed):
+    spec = TPUSpec()
+    tensor = synthetic_tensor(dims, nnz, seed=seed, skew=0.5)
+    results = search(tensor, mode, rank, spec=spec, top_k=20)
+    assert results, "search returned no VMEM-feasible configuration"
+    rp = _rank_padded(rank)
+    for est in results:
+        assert est.cfg.fits(spec, rp), (est.cfg, rp)
+        assert est.vmem_bytes == est.cfg.vmem_bytes(rp)
+        assert est.t_total == max(est.t_mem, est.t_compute)
+        assert est.t_mem == est.t_stream + est.t_factor + est.t_out
+        assert est.t_compute >= 0 and est.t_stream >= 0
+        assert 0.0 <= est.padding_fraction < 1.0
+        assert est.nblocks >= 1
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    dims=st.tuples(st.integers(8, 64), st.integers(8, 64), st.integers(8, 64)),
+    nnz=st.integers(64, 1_500),
+    rank=st.sampled_from([8, 32, 64]),
+    mode=st.integers(0, 2),
+    seed=st.integers(0, 99),
+)
+def test_analytic_and_plan_agree_on_bottleneck(dims, nnz, rank, mode, seed):
+    """The analytic occupancy model may miss exact fill counts, but it must
+    not flip a decisive memory-bound cell to compute-bound or vice versa.
+    Knife-edge cells (either model within 25% of the crossover) are skipped —
+    there the classification is legitimately sensitive to fill estimates."""
+    cfg = MemoryControllerConfig()
+    tensor = synthetic_tensor(dims, nnz, seed=seed, skew=0.5)
+    plan = plan_blocks(
+        tensor, mode,
+        tile_i=cfg.cache.tile_i, tile_j=cfg.cache.tile_j,
+        tile_k=cfg.cache.tile_k, blk=cfg.dma.blk,
+    )
+    exact = predict_from_plan(plan, rank, cfg)
+    approx = predict_analytic(hg_stats(tensor), mode, rank, cfg)
+    for est in (exact, approx):
+        assume(abs(est.t_mem - est.t_compute) > 0.25 * est.t_total)
+    assert exact.bottleneck == approx.bottleneck, (
+        exact.t_mem, exact.t_compute, approx.t_mem, approx.t_compute,
+    )

@@ -122,7 +122,8 @@ def test_error_feedback_accumulates():
 def test_compressed_training_still_converges():
     cfg = get_config("qwen3-0.6b").reduced()
     opt = AdamWConfig(lr=3e-3, warmup_steps=2, total_steps=30)
-    state = init_train_state(jax.random.PRNGKey(0), cfg, opt)
+    state = init_train_state(jax.random.PRNGKey(0), cfg, opt, compress_grads=True)
+    assert "ef" in state.opt  # residual pre-seeded: stable structure from step 0
     step = jax.jit(
         make_train_step(cfg, opt, num_microbatches=1, attn_chunk=8, compress_grads=True),
         donate_argnums=(0,),
