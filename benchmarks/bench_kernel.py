@@ -1,9 +1,14 @@
 """Pallas MTTKRP kernel layout quality: measured tile fills / padding /
 single-flush property per memory-controller configuration, plus the PMS
-三-term estimate.  (Wall-clock is meaningless in interpret mode; the layout
+three-term estimate.  (Wall-clock is meaningless in interpret mode; the layout
 statistics ARE the kernel's performance on TPU — they count the HBM<->VMEM
-DMAs the BlockSpec schedule will issue.)"""
+DMAs the BlockSpec schedule will issue.)
+
+`--fast` runs the CI smoke subset (small presets, two configurations).
+"""
 from __future__ import annotations
+
+import argparse
 
 from repro.core.coo import frostt_like
 from repro.core.memctrl import CacheEngineConfig, DMAEngineConfig, MemoryControllerConfig
@@ -11,12 +16,23 @@ from repro.core.pms import predict_from_plan
 from repro.core.remap import plan_blocks
 
 
-def main():
-    print("tensor,config,nblocks,padding,fills_A,fills_B,fills_C,single_flush,"
+def main(fast: bool = False):
+    if fast:
+        presets = ("small", "4d_small", "5d_small")
+        configs = ((128, 128, 128, 128), (256, 256, 256, 256))
+    else:
+        presets = ("small", "medium", "4d_small", "5d_small")
+        configs = (
+            (128, 128, 128, 128),
+            (256, 256, 256, 256),
+            (512, 512, 512, 512),
+            (256, 512, 512, 128),
+        )
+    print("tensor,nmodes,config,nblocks,padding,fills,single_flush,"
           "t_stream_us,t_factor_us,t_out_us,t_compute_us,bottleneck")
-    for preset in ("small", "medium"):
+    for preset in presets:
         st = frostt_like(preset)
-        for tiles in ((128, 128, 128, 128), (256, 256, 256, 256), (512, 512, 512, 512), (256, 512, 512, 128)):
+        for tiles in configs:
             ti, tj, tk, blk = tiles
             cfg = MemoryControllerConfig(
                 cache=CacheEngineConfig(tile_i=ti, tile_j=tj, tile_k=tk),
@@ -25,13 +41,16 @@ def main():
             plan = plan_blocks(st, 0, tile_i=ti, tile_j=tj, tile_k=tk, blk=blk)
             est = predict_from_plan(plan, 16, cfg)
             fills = plan.tile_fills()
+            fill_str = "/".join(f"{k}:{v}" for k, v in fills.items())
             print(
-                f"{preset},{ti}x{tj}x{tk}/{blk},{plan.nblocks},{plan.padding_fraction():.3f},"
-                f"{fills['A']},{fills['B']},{fills['C']},{plan.a_tile_single_flush()},"
+                f"{preset},{st.nmodes},{ti}x{tj}x{tk}/{blk},{plan.nblocks},"
+                f"{plan.padding_fraction():.3f},{fill_str},{plan.a_tile_single_flush()},"
                 f"{est.t_stream*1e6:.1f},{est.t_factor*1e6:.1f},{est.t_out*1e6:.1f},"
                 f"{est.t_compute*1e6:.1f},{est.bottleneck}"
             )
 
 
 if __name__ == "__main__":
-    main()
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--fast", action="store_true", help="CI smoke subset")
+    main(fast=ap.parse_args().fast)

@@ -58,9 +58,16 @@ def _solve(mttkrp_out: jax.Array, g: jax.Array, ridge: float = 1e-8) -> jax.Arra
 
 
 def _normalize(f: jax.Array, it: int) -> tuple[jax.Array, jax.Array]:
-    """Column-normalize; first iteration uses max(norm,1) convention."""
+    """Column-normalize; first iteration uses the standard CP-ALS
+    max(norm, 1) convention: the initial random factors can carry tiny
+    column norms on poorly scaled tensors, and dividing by them inflates
+    noise columns before the scale has been absorbed into lambda.  Later
+    iterations normalize by the exact column 2-norm (guarded against 0)."""
     norms = jnp.linalg.norm(f, axis=0)
-    norms = jnp.where(norms > 1e-12, norms, 1.0)
+    if it == 0:
+        norms = jnp.maximum(norms, 1.0)
+    else:
+        norms = jnp.where(norms > 1e-12, norms, 1.0)
     return f / norms, norms
 
 
@@ -109,24 +116,62 @@ def cp_als(
     seed: int = 0,
     tol: float | None = None,
     mttkrp_fn: Callable | None = None,
+    planned=None,
+    interpret: bool = True,
+    auto_tune: bool = False,
+    cfg=None,
     verbose: bool = False,
 ) -> CPState:
     """Run CP-ALS.
 
-    method: 'approach1' | 'approach2'  (Sec. 3 compute patterns)
+    method: 'approach1' | 'approach2'  (Sec. 3 compute patterns), or
+            'pallas' — the memory-controller kernel: a `PlannedCPALS`
+            workspace (kernels/ops.py) is built once — one remapped,
+            device-resident BlockPlan per output mode — and reused for every
+            iteration (plan amortization, Alg. 1 on the Alg. 5 layout).
     layout: 'remap'  — single stream, remapped (re-sorted) before each mode
                        (Alg. 5; remap runs on device via remap_stable);
             'copies' — per-mode pre-sorted copies (more HBM, no remap traffic).
-    mttkrp_fn: optional override (e.g. the Pallas kernel wrapper from
-               kernels/ops.py) with signature (indices, values, factors, mode,
-               out_rows) -> (I_mode, R).
+            Ignored for method='pallas': the per-mode plans *are* the copies.
+    mttkrp_fn: optional override with signature (indices, values, factors,
+               mode, out_rows) -> (I_mode, R).
+    planned / interpret / auto_tune / cfg: method='pallas' knobs — pass a
+               prebuilt `PlannedCPALS` to reuse plans across calls, or let
+               auto_tune run the PMS per mode (Sec. 5.3).
     """
+    if layout not in ("remap", "copies"):
+        raise ValueError(f"unknown layout {layout!r}: expected 'remap' or 'copies'")
     nmodes = st.nmodes
     key = jax.random.PRNGKey(seed)
     factors = random_factors(key, st.shape, rank)
     lam = jnp.ones((rank,), jnp.float32)
 
-    if layout == "copies":
+    if planned is not None and method != "pallas":
+        raise ValueError(
+            "a PlannedCPALS workspace was passed but method != 'pallas'; "
+            "the workspace would be silently ignored"
+        )
+    if method == "pallas" and mttkrp_fn is None:
+        # Lazy import: kernels builds on core, not the other way around.
+        from ..kernels.ops import make_planned_cp_als
+
+        if planned is None:
+            planned = make_planned_cp_als(
+                st, rank, cfg=cfg, auto_tune=auto_tune, interpret=interpret
+            )
+        elif planned.shape != st.shape or planned.rank != rank:
+            raise ValueError(
+                f"PlannedCPALS workspace was built for shape={planned.shape} "
+                f"rank={planned.rank}, got shape={st.shape} rank={rank}"
+            )
+        mttkrp_fn = planned.mttkrp_fn
+        layout = "planned"
+
+    if layout == "planned":
+        # The per-mode remapped copies live inside the plans; keep one
+        # (order-irrelevant) stream only for the fit computation.
+        base_idx, base_val = jnp.asarray(st.indices), jnp.asarray(st.values)
+    elif layout == "copies":
         streams = []
         for m in range(nmodes):
             sm = st.sorted_by(m)
@@ -147,7 +192,9 @@ def cp_als(
     fits: list[float] = []
     for it in range(iters):
         for m in range(nmodes):
-            if layout == "copies":
+            if layout == "planned":
+                idx, val = base_idx, base_val
+            elif layout == "copies":
                 idx, val = streams[m]
             else:
                 idx, val, _ = remap_stable(cur_idx, cur_val, m)  # Tensor Remapper

@@ -32,6 +32,13 @@ class CacheEngineConfig:
     tile_k: int = 256
     resident_tiles: int = 1  # "associativity": tiles kept per operand
 
+    def input_tiles(self, n_in: int = 2) -> tuple[int, ...]:
+        """Per-input-mode tile sizes for an N-mode tensor (n_in = N-1 input
+        factor tiles resident in VMEM): the first input mode uses tile_j,
+        every further one tile_k."""
+        assert n_in >= 1
+        return ((self.tile_j,) + (self.tile_k,) * (n_in - 1))[:n_in]
+
 
 @dataclasses.dataclass(frozen=True)
 class DMAEngineConfig:
@@ -66,14 +73,20 @@ class MemoryControllerConfig:
     dma: DMAEngineConfig = DMAEngineConfig()
     remapper: RemapperConfig = RemapperConfig()
 
-    def vmem_bytes(self, rank_padded: int, value_bytes: int = 4) -> int:
-        """VMEM footprint of one kernel instance (per buffer set):
-        A/B/C tiles + the non-zero block stream (vals + 3 local index vectors).
+    def vmem_bytes(self, rank_padded: int, n_in: int = 2) -> int:
+        """VMEM footprint of one kernel instance (per buffer set): the output
+        accumulator tile + n_in (= N-1) resident input factor tiles + the
+        non-zero block stream (vals + N local index vectors).  Element widths
+        come from the Remapper configuration, not hardcoded 4-byte literals.
         Pallas double-buffers streamed operands -> multiply by dma.buffers."""
-        c, d = self.cache, self.dma
-        tiles = (c.tile_i + (c.tile_j + c.tile_k) * c.resident_tiles) * rank_padded * value_bytes
-        stream = d.blk * (value_bytes + 3 * 4)
+        c, d, r = self.cache, self.dma, self.remapper
+        tiles = (
+            (c.tile_i + sum(c.input_tiles(n_in)) * c.resident_tiles)
+            * rank_padded
+            * r.value_bytes
+        )
+        stream = d.blk * (r.value_bytes + (n_in + 1) * r.index_bytes)
         return d.buffers * (tiles + stream)
 
-    def fits(self, spec: TPUSpec, rank_padded: int) -> bool:
-        return self.vmem_bytes(rank_padded) <= spec.vmem_bytes * spec.vmem_usable_frac
+    def fits(self, spec: TPUSpec, rank_padded: int, n_in: int = 2) -> bool:
+        return self.vmem_bytes(rank_padded, n_in) <= spec.vmem_bytes * spec.vmem_usable_frac

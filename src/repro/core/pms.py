@@ -68,15 +68,33 @@ def _kernel_times(
     nblocks: int,
     fills: dict[str, int],
     spec: TPUSpec,
-    value_bytes: int = 4,
+    n_in: int = 2,
+    *,
+    tile_i: int | None = None,
+    in_tiles: tuple[int, ...] | None = None,
+    blk: int | None = None,
 ) -> tuple[float, float, float, float]:
+    """Roofline terms.  Tile/block geometry defaults to the controller
+    configuration; predict_from_plan overrides it with the *plan's* measured
+    geometry so 'exact' estimates stay exact when a plan was built with
+    different tiles than cfg describes."""
     rp = _rank_padded(rank)
-    c, d = cfg.cache, cfg.dma
-    stream_bytes = nblocks * d.blk * (value_bytes + 3 * 4)
-    factor_bytes = (fills["B"] * c.tile_j + fills["C"] * c.tile_k) * rp * value_bytes
-    out_bytes = fills["A"] * c.tile_i * rp * value_bytes
-    # one-hot segment matmul (TI x blk)@(blk x Rp) + hadamard/gather vector work
-    flops = nblocks * (2 * c.tile_i * d.blk * rp + 6 * d.blk * rp)
+    c, r = cfg.cache, cfg.remapper
+    tile_i = c.tile_i if tile_i is None else tile_i
+    in_tiles = c.input_tiles(n_in) if in_tiles is None else in_tiles
+    blk = cfg.dma.blk if blk is None else blk
+    # stream: value + N local index vectors (output + N-1 inputs), element
+    # widths from the Remapper configuration (not hardcoded 4-byte literals)
+    stream_bytes = nblocks * blk * (r.value_bytes + (n_in + 1) * r.index_bytes)
+    factor_bytes = (
+        sum(fills[chr(ord("B") + n)] * t for n, t in enumerate(in_tiles))
+        * rp
+        * r.value_bytes
+    )
+    out_bytes = fills["A"] * tile_i * rp * r.value_bytes
+    # one-hot segment matmul (TI x blk)@(blk x Rp) + hadamard/gather vector
+    # work (one multiply+gather pair per input mode)
+    flops = nblocks * (2 * tile_i * blk * rp + (2 + 2 * n_in) * blk * rp)
     return (
         stream_bytes / spec.hbm_bw,
         factor_bytes / spec.hbm_bw,
@@ -88,14 +106,18 @@ def _kernel_times(
 def predict_from_plan(plan: BlockPlan, rank: int, cfg: MemoryControllerConfig, spec: TPUSpec = TPUSpec()) -> PMSEstimate:
     """Exact PMS terms from a built memory layout (measured fills/padding)."""
     fills = plan.tile_fills()
-    ts, tf, to, tc = _kernel_times(cfg, rank, plan.nblocks, fills, spec)
+    n_in = plan.n_in
+    ts, tf, to, tc = _kernel_times(
+        cfg, rank, plan.nblocks, fills, spec, n_in=n_in,
+        tile_i=plan.tile_i, in_tiles=plan.in_tiles, blk=plan.blk,
+    )
     return PMSEstimate(
         cfg=cfg,
         t_stream=ts,
         t_factor=tf,
         t_out=to,
         t_compute=tc,
-        vmem_bytes=cfg.vmem_bytes(_rank_padded(rank)),
+        vmem_bytes=cfg.vmem_bytes(_rank_padded(rank), n_in=n_in),
         nblocks=plan.nblocks,
         padding_fraction=plan.padding_fraction(),
     )
@@ -118,22 +140,21 @@ def predict_analytic(
     """Analytic PMS: no plan construction.  Estimates group structure with a
     balls-in-bins occupancy model (skew makes it conservative: skewed tensors
     have fewer, hotter groups, i.e. fewer fills than predicted)."""
-    in_modes = [m for m in range(hs.nmodes) if m != mode][:2]
+    in_modes = [m for m in range(hs.nmodes) if m != mode]
+    n_in = len(in_modes)
     c, d = cfg.cache, cfg.dma
+    in_tiles = c.input_tiles(n_in)
     n_it = math.ceil(hs.shape[mode] / c.tile_i)
-    n_jt = math.ceil(hs.shape[in_modes[0]] / c.tile_j)
-    n_kt = math.ceil(hs.shape[in_modes[1]] / c.tile_k) if len(in_modes) > 1 else 1
+    n_ins = [math.ceil(hs.shape[m] / t) for m, t in zip(in_modes, in_tiles)]
 
-    groups = _expected_occupied(n_it * n_jt * n_kt, hs.nnz)
-    # each occupied (it,jt,kt) group costs >= 1 block; remaining nnz fill blocks
+    groups = _expected_occupied(n_it * math.prod(n_ins), hs.nnz)
+    # each occupied tile-id group costs >= 1 block; remaining nnz fill blocks
     nblocks = int(groups + hs.nnz / d.blk)
-    fills = {
-        "A": _expected_occupied(n_it, hs.nnz),
-        "B": groups,  # jt changes at most once per group
-        "C": groups,
-    }
+    fills = {"A": _expected_occupied(n_it, hs.nnz)}
+    for n in range(n_in):
+        fills[chr(ord("B") + n)] = groups  # each id changes at most once/group
     fills = {k: int(max(1, v)) for k, v in fills.items()}
-    ts, tf, to, tc = _kernel_times(cfg, rank, nblocks, fills, spec)
+    ts, tf, to, tc = _kernel_times(cfg, rank, nblocks, fills, spec, n_in=n_in)
     padding = 1.0 - hs.nnz / float(nblocks * d.blk)
     return PMSEstimate(
         cfg=cfg,
@@ -141,7 +162,7 @@ def predict_analytic(
         t_factor=tf,
         t_out=to,
         t_compute=tc,
-        vmem_bytes=cfg.vmem_bytes(_rank_padded(rank)),
+        vmem_bytes=cfg.vmem_bytes(_rank_padded(rank), n_in=n_in),
         nblocks=nblocks,
         padding_fraction=max(0.0, padding),
     )
@@ -171,6 +192,7 @@ def search(
     else:
         hs, st = st_or_stats, None
         exact = False
+    n_in = hs.nmodes - 1
 
     results: list[PMSEstimate] = []
     for ti, tj, tk, blk in itertools.product(tile_choices, tile_choices, tile_choices, blk_choices):
@@ -178,10 +200,12 @@ def search(
             cache=CacheEngineConfig(tile_i=ti, tile_j=tj, tile_k=tk),
             dma=DMAEngineConfig(blk=blk),
         )
-        if not cfg.fits(spec, _rank_padded(rank)):
+        if not cfg.fits(spec, _rank_padded(rank), n_in=n_in):
             continue
         if exact and st is not None:
-            plan = plan_blocks(st, mode, tile_i=ti, tile_j=tj, tile_k=tk, blk=blk)
+            plan = plan_blocks(
+                st, mode, tile_i=ti, blk=blk, in_tiles=cfg.cache.input_tiles(n_in)
+            )
             results.append(predict_from_plan(plan, rank, cfg, spec))
         else:
             results.append(predict_analytic(hs, mode, rank, cfg, spec))

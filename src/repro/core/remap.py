@@ -16,10 +16,10 @@ TPU adaptation:
                                digits of `pointer_budget` bins per pass.
   * `plan_blocks`            — two-level *tile* remap producing the Pallas
                                kernel's memory layout: blocks sorted by
-                               (output tile, input tile pair) with per-block
-                               metadata. This is the "ideal memory layout" of
-                               Sec. 3.1 (bounded pointer table + equal-sized
-                               partitions).
+                               (output tile, input tile id tuple) with
+                               per-block metadata, for any order >= 3. This is
+                               the "ideal memory layout" of Sec. 3.1 (bounded
+                               pointer table + equal-sized partitions).
 """
 from __future__ import annotations
 
@@ -39,6 +39,7 @@ __all__ = [
     "remap_pointer_machine",
     "remap_radix",
     "BlockPlan",
+    "group_key",
     "plan_blocks",
 ]
 
@@ -116,52 +117,92 @@ class BlockPlan:
 
     Layout contract (consumed by kernels/mttkrp_pallas.py):
       * non-zeros are grouped into blocks of `blk` elements;
-      * blocks are sorted by (output tile, then input tile pair) — Approach 1
-        at tile granularity, so each output tile's blocks are contiguous;
+      * blocks are sorted by (output tile, then input tile id-tuple) —
+        Approach 1 at tile granularity, so each output tile's blocks are
+        contiguous;
       * within a block every element's coordinates fall inside the block's
-        (it, jt, kt) tiles; local indices are precomputed;
+        (it, t_0, ..., t_{N-2}) tiles; local indices are precomputed;
       * padding elements have value 0 (and local index 0).
+
+    N-mode: the N-1 *input* modes each carry one tile-id stream
+    (`block_in[n]`) and one local-index vector (`in_locs[n]`).  For 3-mode
+    tensors the legacy `jt`/`kt` names are provided as views.
     """
 
     vals: np.ndarray  # (nblocks*blk,) f32
     iloc: np.ndarray  # (nblocks*blk,) int32 — output-row index within tile
-    jloc: np.ndarray  # (nblocks*blk,) int32
-    kloc: np.ndarray  # (nblocks*blk,) int32
+    in_locs: tuple[np.ndarray, ...]  # N-1 x (nblocks*blk,) int32
     block_it: np.ndarray  # (nblocks,) int32
-    block_jt: np.ndarray  # (nblocks,) int32
-    block_kt: np.ndarray  # (nblocks,) int32
+    block_in: tuple[np.ndarray, ...]  # N-1 x (nblocks,) int32
     tile_i: int
-    tile_j: int
-    tile_k: int
+    in_tiles: tuple[int, ...]  # N-1 input-mode tile sizes
     blk: int
     out_rows: int  # padded I_out (multiple of tile_i)
-    rows_j: int  # padded I_j
-    rows_k: int  # padded I_k
+    in_rows: tuple[int, ...]  # N-1 padded input-mode row counts
     mode: int
-    in_modes: tuple[int, int]
+    in_modes: tuple[int, ...]
     nnz: int  # true nnz before padding
 
     @property
     def nblocks(self) -> int:
         return self.block_it.shape[0]
 
+    @property
+    def n_in(self) -> int:
+        return len(self.in_modes)
+
+    # --- 3-mode legacy views (every tensor has >= 2 input modes) ---
+    @property
+    def jloc(self) -> np.ndarray:
+        return self.in_locs[0]
+
+    @property
+    def kloc(self) -> np.ndarray:
+        return self.in_locs[1]
+
+    @property
+    def block_jt(self) -> np.ndarray:
+        return self.block_in[0]
+
+    @property
+    def block_kt(self) -> np.ndarray:
+        return self.block_in[1]
+
+    @property
+    def tile_j(self) -> int:
+        return self.in_tiles[0]
+
+    @property
+    def tile_k(self) -> int:
+        return self.in_tiles[1]
+
+    @property
+    def rows_j(self) -> int:
+        return self.in_rows[0]
+
+    @property
+    def rows_k(self) -> int:
+        return self.in_rows[1]
+
     # --- locality statistics (feed the PMS / Cache-Engine model) ---
     def tile_fills(self) -> dict[str, int]:
         """Number of HBM->VMEM tile fetches Pallas will issue: a tile is
         re-fetched only when the block's tile id *changes* between consecutive
         grid steps (Pallas skips the copy when the index map is unchanged —
-        the run-length structure of the plan IS the cache)."""
+        the run-length structure of the plan IS the cache).
+
+        Keys: "A" for the output accumulator tile, then one letter per input
+        mode ("B", "C", "D", "E", ...)."""
 
         def fills(ids: np.ndarray) -> int:
             if ids.size == 0:
                 return 0
             return int(1 + np.count_nonzero(ids[1:] != ids[:-1]))
 
-        return {
-            "A": fills(self.block_it),
-            "B": fills(self.block_jt),
-            "C": fills(self.block_kt),
-        }
+        out = {"A": fills(self.block_it)}
+        for n, ids in enumerate(self.block_in):
+            out[chr(ord("B") + n)] = fills(ids)
+        return out
 
     def padding_fraction(self) -> float:
         return 1.0 - self.nnz / float(self.vals.shape[0]) if self.vals.size else 0.0
@@ -181,6 +222,39 @@ def _ceil_to(x: int, m: int) -> int:
     return ((x + m - 1) // m) * m
 
 
+def _ceil_div(x: int, m: int) -> int:
+    return max(1, (x + m - 1) // m)
+
+
+def group_key(tile_cols: list[np.ndarray], tile_counts: list[int]) -> np.ndarray:
+    """Mixed-radix encoding of per-mode tile ids into one collision-free
+    int64 key.  `tile_counts[m]` is the explicit per-mode tile count
+    (ceil(shape/tile)); every id in `tile_cols[m]` must be < tile_counts[m],
+    so two distinct id tuples can never alias."""
+    assert len(tile_cols) == len(tile_counts)
+    radix = math.prod(int(c) for c in tile_counts)
+    if radix > np.iinfo(np.int64).max:
+        raise OverflowError(
+            f"group_key radix {radix} overflows int64: tile counts "
+            f"{tuple(tile_counts)} — use larger tiles for the big modes"
+        )
+    key = np.zeros_like(tile_cols[0], dtype=np.int64)
+    for col, count in zip(tile_cols, tile_counts):
+        assert count >= 1
+        key = key * np.int64(count) + col.astype(np.int64)
+    return key
+
+
+def default_in_tiles(n_in: int, tile_j: int, tile_k: int) -> tuple[int, ...]:
+    """Expand the legacy (tile_j, tile_k) pair to N-1 input tile sizes.
+    The expansion policy lives in CacheEngineConfig.input_tiles — this is a
+    convenience wrapper so plan_blocks' default never diverges from what the
+    PMS scores."""
+    from .memctrl import CacheEngineConfig  # local: keep remap importable alone
+
+    return CacheEngineConfig(tile_j=tile_j, tile_k=tile_k).input_tiles(n_in)
+
+
 def plan_blocks(
     st: SparseTensor,
     mode: int,
@@ -189,28 +263,39 @@ def plan_blocks(
     tile_j: int = 256,
     tile_k: int = 256,
     blk: int = 256,
+    in_tiles: tuple[int, ...] | None = None,
 ) -> BlockPlan:
     """Two-level tile remap (host-side preprocessing == the Tensor Remapper +
-    memory-layout generator).  3-mode tensors only — the Pallas kernel is the
-    3-mode hot path; N-mode tensors use the pure-JAX path (core/mttkrp.py)."""
-    assert st.nmodes == 3, "kernel block plan supports 3-mode tensors"
-    in_modes = tuple(m for m in range(3) if m != mode)
+    memory-layout generator).  Supports any order >= 3 (paper Table 2 has
+    3–5-mode tensors): the N-1 input modes each get a tile-id stream and a
+    local-index vector.  `in_tiles` overrides the per-input-mode tile sizes;
+    by default the first input mode uses tile_j and the rest tile_k."""
+    assert st.nmodes >= 3, "kernel block plan needs >= 3-mode tensors"
+    in_modes = tuple(m for m in range(st.nmodes) if m != mode)
+    n_in = len(in_modes)
+    if in_tiles is None:
+        in_tiles = default_in_tiles(n_in, tile_j, tile_k)
+    assert len(in_tiles) == n_in
     i = st.indices[:, mode].astype(np.int64)
-    j = st.indices[:, in_modes[0]].astype(np.int64)
-    k = st.indices[:, in_modes[1]].astype(np.int64)
+    ins = [st.indices[:, m].astype(np.int64) for m in in_modes]
     v = st.values
 
-    it, jt, kt = i // tile_i, j // tile_j, k // tile_k
-    # Remap: sort by (output tile, input tile pair). lexsort's last key is
-    # primary. Stable => preserves prior order within a tile triple.
-    order = np.lexsort((kt, jt, it))
-    i, j, k, v = i[order], j[order], k[order], v[order]
-    it, jt, kt = it[order], jt[order], kt[order]
+    it = i // tile_i
+    in_ts = [c // t for c, t in zip(ins, in_tiles)]
+    # Remap: sort by (output tile, input tile tuple). lexsort's last key is
+    # primary. Stable => preserves prior order within a tile tuple.
+    order = np.lexsort(tuple(reversed(in_ts)) + (it,))
+    i, v = i[order], v[order]
+    ins = [c[order] for c in ins]
+    it = it[order]
+    in_ts = [t[order] for t in in_ts]
 
-    # Group boundaries over identical (it, jt, kt) triples.
-    key = (it * ((max(st.shape[in_modes[0]] // tile_j, 0)) + 2) + jt) * (
-        (st.shape[in_modes[1]] // tile_k) + 2
-    ) + kt
+    # Group boundaries over identical (it, t_0, ..., t_{N-2}) tuples, keyed
+    # by explicit per-mode tile counts so distinct tuples cannot collide.
+    n_tiles = [_ceil_div(st.shape[mode], tile_i)] + [
+        _ceil_div(st.shape[m], t) for m, t in zip(in_modes, in_tiles)
+    ]
+    key = group_key([it] + in_ts, n_tiles)
     boundaries = np.flatnonzero(np.concatenate([[True], key[1:] != key[:-1]]))
     group_sizes = np.diff(np.concatenate([boundaries, [key.size]]))
 
@@ -221,25 +306,25 @@ def plan_blocks(
 
     vals = np.zeros((total,), np.float32)
     iloc = np.zeros((total,), np.int32)
-    jloc = np.zeros((total,), np.int32)
-    kloc = np.zeros((total,), np.int32)
+    in_locs = [np.zeros((total,), np.int32) for _ in range(n_in)]
     block_it = np.empty((nblocks,), np.int32)
-    block_jt = np.empty((nblocks,), np.int32)
-    block_kt = np.empty((nblocks,), np.int32)
+    block_in = [np.empty((nblocks,), np.int32) for _ in range(n_in)]
 
     src = 0
     dst = 0
     b = 0
-    for g, (gsize, psize) in enumerate(zip(group_sizes, padded_sizes)):
+    for gsize, psize in zip(group_sizes, padded_sizes):
         s, e = src, src + gsize
         vals[dst : dst + gsize] = v[s:e]
         iloc[dst : dst + gsize] = (i[s:e] - it[s] * tile_i).astype(np.int32)
-        jloc[dst : dst + gsize] = (j[s:e] - jt[s] * tile_j).astype(np.int32)
-        kloc[dst : dst + gsize] = (k[s:e] - kt[s] * tile_k).astype(np.int32)
+        for n in range(n_in):
+            in_locs[n][dst : dst + gsize] = (
+                ins[n][s:e] - in_ts[n][s] * in_tiles[n]
+            ).astype(np.int32)
         nb = psize // blk
         block_it[b : b + nb] = it[s]
-        block_jt[b : b + nb] = jt[s]
-        block_kt[b : b + nb] = kt[s]
+        for n in range(n_in):
+            block_in[n][b : b + nb] = in_ts[n][s]
         src = e
         dst += psize
         b += nb
@@ -247,18 +332,14 @@ def plan_blocks(
     return BlockPlan(
         vals=vals,
         iloc=iloc,
-        jloc=jloc,
-        kloc=kloc,
+        in_locs=tuple(in_locs),
         block_it=block_it,
-        block_jt=block_jt,
-        block_kt=block_kt,
+        block_in=tuple(block_in),
         tile_i=tile_i,
-        tile_j=tile_j,
-        tile_k=tile_k,
+        in_tiles=tuple(in_tiles),
         blk=blk,
         out_rows=_ceil_to(st.shape[mode], tile_i),
-        rows_j=_ceil_to(st.shape[in_modes[0]], tile_j),
-        rows_k=_ceil_to(st.shape[in_modes[1]], tile_k),
+        in_rows=tuple(_ceil_to(st.shape[m], t) for m, t in zip(in_modes, in_tiles)),
         mode=mode,
         in_modes=in_modes,
         nnz=st.nnz,

@@ -1,3 +1,26 @@
-# OPTIONAL layer. Add <name>.py (or .cu) + ops.py + ref.py ONLY
-# for compute hot-spots the paper itself optimizes with a custom
-# kernel. Leave this package empty if the paper has none.
+"""Pallas MTTKRP kernel layer: the BlockPlan-driven memory controller
+(mttkrp_pallas), plan construction + dispatch (ops), and pure-jnp oracles
+(ref)."""
+from .mttkrp_pallas import mttkrp_pallas_call, pad_factor, rank_padded
+from .ops import (
+    PlannedCPALS,
+    PlannedMTTKRP,
+    make_planned_cp_als,
+    make_planned_mttkrp,
+    mttkrp_auto,
+)
+from .ref import mttkrp_ref, mttkrp_ref_dense, mttkrp_plan_ref
+
+__all__ = [
+    "mttkrp_pallas_call",
+    "pad_factor",
+    "rank_padded",
+    "PlannedCPALS",
+    "PlannedMTTKRP",
+    "make_planned_cp_als",
+    "make_planned_mttkrp",
+    "mttkrp_auto",
+    "mttkrp_ref",
+    "mttkrp_ref_dense",
+    "mttkrp_plan_ref",
+]

@@ -1,16 +1,20 @@
 """Jit'd wrappers for the MTTKRP kernels: plan construction + padding +
 dispatch between the Pallas kernel, its interpret-mode validation path, and
 the pure-JAX approaches.
+
+`PlannedCPALS` is the workspace that makes the Pallas kernel the *production*
+decomposition path (paper Alg. 1 + Alg. 5): one PMS-tunable BlockPlan +
+device-resident layout per output mode, built once and cached across every
+ALS iteration (the paper's layout="copies" posture — per-mode remapped
+copies, a legitimate space/time trade on HBM).
 """
 from __future__ import annotations
 
 import dataclasses
-from functools import partial
 from typing import Sequence
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from ..core.coo import SparseTensor
 from ..core.memctrl import MemoryControllerConfig, TPUSpec
@@ -19,7 +23,13 @@ from ..core.remap import BlockPlan, plan_blocks
 from ..core.mttkrp import mttkrp as mttkrp_jax
 from .mttkrp_pallas import mttkrp_pallas_call, pad_factor, rank_padded
 
-__all__ = ["PlannedMTTKRP", "make_planned_mttkrp", "mttkrp_auto"]
+__all__ = [
+    "PlannedMTTKRP",
+    "make_planned_mttkrp",
+    "PlannedCPALS",
+    "make_planned_cp_als",
+    "mttkrp_auto",
+]
 
 
 @dataclasses.dataclass
@@ -30,6 +40,9 @@ class PlannedMTTKRP:
     plan: BlockPlan
     rank: int
     interpret: bool
+    cfg: MemoryControllerConfig = dataclasses.field(
+        default_factory=MemoryControllerConfig
+    )
     _dev: dict = dataclasses.field(default_factory=dict)
 
     def __post_init__(self):
@@ -37,34 +50,30 @@ class PlannedMTTKRP:
         nb, blk = p.nblocks, p.blk
         self._dev = dict(
             block_it=jnp.asarray(p.block_it),
-            block_jt=jnp.asarray(p.block_jt),
-            block_kt=jnp.asarray(p.block_kt),
+            block_in=tuple(jnp.asarray(t) for t in p.block_in),
             vals=jnp.asarray(p.vals).reshape(nb, blk),
             iloc=jnp.asarray(p.iloc).reshape(nb, blk),
-            jloc=jnp.asarray(p.jloc).reshape(nb, blk),
-            kloc=jnp.asarray(p.kloc).reshape(nb, blk),
+            in_locs=tuple(jnp.asarray(l).reshape(nb, blk) for l in p.in_locs),
         )
 
-    def __call__(self, factor_j: jax.Array, factor_k: jax.Array) -> jax.Array:
-        """factors for the two *input* modes (plan.in_modes order).
+    def __call__(self, *in_factors: jax.Array) -> jax.Array:
+        """Factors for the N-1 *input* modes (plan.in_modes order).
         Returns (out_rows_unpadded, rank)."""
         p = self.plan
+        assert len(in_factors) == p.n_in
         rp = rank_padded(self.rank)
-        b_pad = pad_factor(factor_j, p.rows_j, rp)
-        c_pad = pad_factor(factor_k, p.rows_k, rp)
+        pads = tuple(
+            pad_factor(f, rows, rp) for f, rows in zip(in_factors, p.in_rows)
+        )
         out = mttkrp_pallas_call(
             self._dev["block_it"],
-            self._dev["block_jt"],
-            self._dev["block_kt"],
+            self._dev["block_in"],
             self._dev["vals"],
             self._dev["iloc"],
-            self._dev["jloc"],
-            self._dev["kloc"],
-            b_pad,
-            c_pad,
+            self._dev["in_locs"],
+            pads,
             tile_i=p.tile_i,
-            tile_j=p.tile_j,
-            tile_k=p.tile_k,
+            in_tiles=p.in_tiles,
             blk=p.blk,
             out_rows=p.out_rows,
             interpret=self.interpret,
@@ -72,9 +81,7 @@ class PlannedMTTKRP:
         return out[: p.out_rows, : self.rank]
 
     def output(self, factors: Sequence[jax.Array], true_rows: int) -> jax.Array:
-        fj = factors[self.plan.in_modes[0]]
-        fk = factors[self.plan.in_modes[1]]
-        return self(fj, fk)[:true_rows]
+        return self(*(factors[m] for m in self.plan.in_modes))[:true_rows]
 
 
 def make_planned_mttkrp(
@@ -90,18 +97,87 @@ def make_planned_mttkrp(
     """Build the memory layout (Tensor Remapper) + kernel instance.  With
     auto_tune=True the PMS picks the controller parameters (Sec. 5.3)."""
     if auto_tune:
-        best = pms_search(st, mode, rank, spec=spec, top_k=1)[0]
-        cfg = best.cfg
+        best = pms_search(st, mode, rank, spec=spec, top_k=1)
+        if not best:
+            raise ValueError(
+                f"PMS found no VMEM-feasible controller configuration for "
+                f"mode {mode} at rank {rank} (spec budget "
+                f"{spec.vmem_bytes * spec.vmem_usable_frac:.0f} bytes)"
+            )
+        cfg = best[0].cfg
     cfg = cfg or MemoryControllerConfig()
+    n_in = st.nmodes - 1
     plan = plan_blocks(
         st,
         mode,
         tile_i=cfg.cache.tile_i,
-        tile_j=cfg.cache.tile_j,
-        tile_k=cfg.cache.tile_k,
         blk=cfg.dma.blk,
+        in_tiles=cfg.cache.input_tiles(n_in),
     )
-    return PlannedMTTKRP(plan=plan, rank=rank, interpret=interpret)
+    return PlannedMTTKRP(plan=plan, rank=rank, interpret=interpret, cfg=cfg)
+
+
+@dataclasses.dataclass
+class PlannedCPALS:
+    """Per-mode plan cache driving the whole CP-ALS loop on the memory
+    controller (paper Alg. 1 on the Alg. 5 layout).
+
+    One `PlannedMTTKRP` per output mode — each holds its own remapped,
+    device-resident copy of the non-zero stream — constructed once and reused
+    for every ALS iteration, so the plan/remap cost is amortized over the
+    decomposition exactly as the paper amortizes the FPGA layout generation
+    over the (many-iteration) ALS run.
+    """
+
+    ops: dict[int, PlannedMTTKRP]
+    shape: tuple[int, ...]
+    rank: int
+
+    @property
+    def nmodes(self) -> int:
+        return len(self.shape)
+
+    def plan_for(self, mode: int) -> BlockPlan:
+        return self.ops[mode].plan
+
+    def mttkrp_fn(self, indices, values, factors, mode, out_rows):
+        """The `cp_als(mttkrp_fn=...)` seam: the stream args are ignored —
+        each mode's remapped copy already lives on device in its plan."""
+        return self.ops[mode].output(factors, out_rows)
+
+    def plan_bytes(self) -> int:
+        """HBM held by the per-mode layouts (the 'copies' trade, Sec. 3).
+        Element widths come from each mode's Remapper configuration."""
+        total = 0
+        for op in self.ops.values():
+            p, r = op.plan, op.cfg.remapper
+            slots = p.vals.shape[0]
+            total += slots * (r.value_bytes + (1 + p.n_in) * r.index_bytes)
+            total += p.nblocks * (1 + p.n_in) * r.index_bytes
+        return total
+
+
+def make_planned_cp_als(
+    st: SparseTensor,
+    rank: int,
+    *,
+    cfg: MemoryControllerConfig | None = None,
+    auto_tune: bool = False,
+    spec: TPUSpec = TPUSpec(),
+    interpret: bool = True,
+) -> PlannedCPALS:
+    """Build the full ALS workspace: one tuned plan per output mode.
+
+    With auto_tune=True each mode gets its own PMS-selected controller
+    configuration (modes have different shapes/locality, Sec. 5.3); otherwise
+    `cfg` (or the default) is shared by every mode."""
+    ops = {
+        m: make_planned_mttkrp(
+            st, m, rank, cfg=cfg, auto_tune=auto_tune, spec=spec, interpret=interpret
+        )
+        for m in range(st.nmodes)
+    }
+    return PlannedCPALS(ops=ops, shape=st.shape, rank=rank)
 
 
 def mttkrp_auto(
@@ -112,12 +188,22 @@ def mttkrp_auto(
     method: str = "pallas",
     interpret: bool = True,
     cfg: MemoryControllerConfig | None = None,
+    sorted_by_mode: bool | None = None,
 ) -> jax.Array:
     """One-shot dispatcher used by tests/benchmarks: 'pallas' | 'approach1' |
-    'approach2'."""
+    'approach2'.
+
+    `sorted_by_mode` defaults to what the stream actually satisfies
+    (`st.is_sorted_by(mode)`): `indices_are_sorted` is a correctness promise
+    to XLA, not a hint, so it is never asserted for an unsorted stream."""
     rank = int(factors[0].shape[1])
     if method == "pallas":
         op = make_planned_mttkrp(st, mode, rank, cfg=cfg, interpret=interpret)
         return op.output(factors, st.shape[mode])
+    if sorted_by_mode is None:
+        sorted_by_mode = st.is_sorted_by(mode)
     idx, val = jnp.asarray(st.indices), jnp.asarray(st.values)
-    return mttkrp_jax(idx, val, factors, mode, st.shape[mode], method=method)
+    return mttkrp_jax(
+        idx, val, factors, mode, st.shape[mode],
+        method=method, sorted_by_mode=sorted_by_mode,
+    )

@@ -55,19 +55,15 @@ def mttkrp_ref_dense(
 def mttkrp_plan_ref(plan, factors_padded: Sequence[jax.Array], rank_padded: int) -> jax.Array:
     """Oracle operating on the *kernel's* input layout (BlockPlan): computes
     exactly what the Pallas kernel should produce, including padded rows.
+    N-mode: one padded factor per input mode, in plan.in_modes order.
     Returns (out_rows_padded, rank_padded)."""
-    b_pad, c_pad = factors_padded
     blk = plan.blk
-    nb = plan.nblocks
     vals = jnp.asarray(plan.vals)
-    iloc = jnp.asarray(plan.iloc)
-    jloc = jnp.asarray(plan.jloc)
-    kloc = jnp.asarray(plan.kloc)
-    git = jnp.repeat(jnp.asarray(plan.block_it), blk)
-    gjt = jnp.repeat(jnp.asarray(plan.block_jt), blk)
-    gkt = jnp.repeat(jnp.asarray(plan.block_kt), blk)
-    gi = git * plan.tile_i + iloc
-    gj = gjt * plan.tile_j + jloc
-    gk = gkt * plan.tile_k + kloc
-    contrib = vals[:, None] * b_pad[gj] * c_pad[gk]
+    gi = jnp.repeat(jnp.asarray(plan.block_it), blk) * plan.tile_i + jnp.asarray(plan.iloc)
+    contrib = vals[:, None]
+    for f_pad, tids, loc, tile in zip(
+        factors_padded, plan.block_in, plan.in_locs, plan.in_tiles
+    ):
+        g = jnp.repeat(jnp.asarray(tids), blk) * tile + jnp.asarray(loc)
+        contrib = contrib * f_pad[g]
     return jax.ops.segment_sum(contrib, gi, num_segments=plan.out_rows)

@@ -5,9 +5,10 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.core.coo import SparseTensor, synthetic_tensor
-from repro.core.cp_als import cp_als, fit_value, gram_hadamard
-from repro.kernels.ops import make_planned_mttkrp
+import repro.kernels.ops as ops_mod
+from repro.core.coo import SparseTensor, frostt_like, synthetic_tensor
+from repro.core.cp_als import _normalize, cp_als, fit_value, gram_hadamard
+from repro.kernels.ops import make_planned_cp_als, make_planned_mttkrp
 
 
 def low_rank_tensor(shape=(20, 15, 18), rank=4, seed=0) -> SparseTensor:
@@ -66,6 +67,78 @@ def test_pallas_backed_cp_als():
     s_k = cp_als(st_t, rank=4, iters=5, layout="copies", mttkrp_fn=mttkrp_fn, seed=0)
     s_j = cp_als(st_t, rank=4, iters=5, layout="copies", seed=0)
     np.testing.assert_allclose(s_k.fit_history, s_j.fit_history, rtol=1e-3, atol=1e-4)
+
+
+@pytest.mark.parametrize("source", ["tiny", "tensor4d", "tensor5d"])
+def test_planned_cp_als_matches_pure_jax(request, source):
+    """Acceptance: cp_als(method='pallas') — the PlannedCPALS workspace — and
+    pure-JAX approach1 drive matching fit histories on 3-, 4- and 5-mode
+    tensors (the whole ALS loop runs on the memory controller)."""
+    st_t = frostt_like("tiny") if source == "tiny" else request.getfixturevalue(source)
+    s_p = cp_als(st_t, rank=4, iters=3, method="pallas", seed=0)
+    s_1 = cp_als(st_t, rank=4, iters=3, method="approach1", layout="copies", seed=0)
+    np.testing.assert_allclose(s_p.fit_history, s_1.fit_history, atol=1e-4)
+
+
+def test_planned_cp_als_plans_built_once(monkeypatch):
+    """Plan amortization (paper: layout generation is per-mode, not
+    per-iteration): plan_blocks runs exactly once per output mode regardless
+    of the iteration count, and a prebuilt workspace skips planning
+    entirely."""
+    calls = []
+    orig = ops_mod.plan_blocks
+
+    def counting(*a, **k):
+        calls.append(a)
+        return orig(*a, **k)
+
+    monkeypatch.setattr(ops_mod, "plan_blocks", counting)
+    st_t = frostt_like("tiny")
+    cp_als(st_t, rank=4, iters=4, method="pallas", seed=0)
+    assert len(calls) == st_t.nmodes
+
+    planned = make_planned_cp_als(st_t, 4, interpret=True)
+    calls.clear()
+    s = cp_als(st_t, rank=4, iters=2, method="pallas", planned=planned, seed=0)
+    assert calls == []
+    assert len(s.fit_history) == 2
+
+
+def test_cp_als_rejects_unknown_layout():
+    """'planned' is an internal sentinel of the pallas path: reaching it via
+    the public `layout` arg would feed an unsorted stream to approach1 with
+    its sorted_by_mode=True promise, so it must be rejected up front."""
+    st_t = frostt_like("tiny")
+    with pytest.raises(ValueError, match="layout"):
+        cp_als(st_t, rank=4, iters=1, layout="planned")
+
+
+def test_normalize_first_iteration_convention():
+    """Regression: _normalize must apply the documented first-iteration
+    max(norm, 1) convention (it used to ignore `it` entirely) — sub-unit
+    columns are left unscaled on iteration 0, divided exactly afterwards."""
+    f = jnp.array([[0.3, 3.0], [0.4, 4.0]], jnp.float32)  # col norms 0.5, 5.0
+    f0, n0 = _normalize(f, 0)
+    np.testing.assert_allclose(np.asarray(n0), [1.0, 5.0], rtol=1e-6)
+    np.testing.assert_allclose(np.asarray(f0[:, 0]), [0.3, 0.4], rtol=1e-6)
+    f1, n1 = _normalize(f, 1)
+    np.testing.assert_allclose(np.asarray(n1), [0.5, 5.0], rtol=1e-6)
+    np.testing.assert_allclose(
+        np.linalg.norm(np.asarray(f1), axis=0), [1.0, 1.0], rtol=1e-6
+    )
+
+
+def test_poorly_scaled_fit_trajectory():
+    """Fit-trajectory regression for the max(norm,1) convention: on a badly
+    down-scaled tensor (tiny first-iteration column norms) the trajectory
+    stays finite and still recovers the decomposition."""
+    base = low_rank_tensor(seed=7)
+    scaled = SparseTensor(base.indices, base.values * 1e-4, base.shape)
+    state = cp_als(scaled, rank=5, iters=25, seed=2)
+    fits = np.array(state.fit_history)
+    assert np.all(np.isfinite(fits))
+    assert fits[-1] > 0.95, fits
+    assert all(np.isfinite(np.asarray(f)).all() for f in state.factors)
 
 
 def test_gram_hadamard():

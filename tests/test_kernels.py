@@ -6,7 +6,7 @@ import numpy as np
 import pytest
 from hypothesis import given, settings, strategies as st
 
-from repro.core.coo import random_factors, synthetic_tensor
+from repro.core.coo import SparseTensor, frostt_like, random_factors, synthetic_tensor
 from repro.core.memctrl import CacheEngineConfig, DMAEngineConfig, MemoryControllerConfig
 from repro.core.remap import plan_blocks
 from repro.kernels.mttkrp_pallas import mttkrp_pallas_call, pad_factor, rank_padded
@@ -70,21 +70,92 @@ def test_kernel_vs_plan_ref(tiny_tensor):
     rank = 16
     rp = rank_padded(rank)
     facs = random_factors(jax.random.PRNGKey(4), tiny_tensor.shape, rank)
-    fj = pad_factor(facs[plan.in_modes[0]], plan.rows_j, rp)
-    fk = pad_factor(facs[plan.in_modes[1]], plan.rows_k, rp)
-    ref = mttkrp_plan_ref(plan, (fj, fk), rp)
+    pads = tuple(
+        pad_factor(facs[m], rows, rp) for m, rows in zip(plan.in_modes, plan.in_rows)
+    )
+    ref = mttkrp_plan_ref(plan, pads, rp)
     nb = plan.nblocks
     out = mttkrp_pallas_call(
-        jnp.asarray(plan.block_it), jnp.asarray(plan.block_jt), jnp.asarray(plan.block_kt),
+        jnp.asarray(plan.block_it),
+        tuple(jnp.asarray(t) for t in plan.block_in),
         jnp.asarray(plan.vals).reshape(nb, plan.blk),
         jnp.asarray(plan.iloc).reshape(nb, plan.blk),
-        jnp.asarray(plan.jloc).reshape(nb, plan.blk),
-        jnp.asarray(plan.kloc).reshape(nb, plan.blk),
-        fj, fk,
-        tile_i=plan.tile_i, tile_j=plan.tile_j, tile_k=plan.tile_k,
+        tuple(jnp.asarray(l).reshape(nb, plan.blk) for l in plan.in_locs),
+        pads,
+        tile_i=plan.tile_i, in_tiles=plan.in_tiles,
         blk=plan.blk, out_rows=plan.out_rows, interpret=True,
     )
     np.testing.assert_allclose(np.asarray(out), np.asarray(ref), rtol=1e-4, atol=1e-4)
+
+
+@pytest.mark.parametrize("preset", ["4d_small", "5d_small"])
+def test_kernel_higher_order_presets(preset):
+    """Paper Table 2 has 3–5-mode tensors: the template-unrolled N-mode
+    kernel must match the reference on the 4d/5d FROSTT-like presets for
+    every output mode."""
+    st_t = frostt_like(preset)
+    cfg = MemoryControllerConfig(
+        cache=CacheEngineConfig(tile_i=128, tile_j=128, tile_k=128),
+        dma=DMAEngineConfig(blk=256),
+    )
+    for mode in range(st_t.nmodes):
+        _check(st_t, mode, 8, cfg=cfg, rtol=5e-4)
+
+
+@pytest.mark.parametrize("fixture", ["tensor4d", "tensor5d"])
+@pytest.mark.parametrize("mode", [0, 1, 3])
+def test_kernel_higher_order_vs_plan_ref(request, fixture, mode):
+    """N-mode kernel vs the layout-level oracle, including padded rows."""
+    st_t = request.getfixturevalue(fixture)
+    plan = plan_blocks(st_t, mode, tile_i=16, tile_j=16, tile_k=16, blk=32)
+    assert plan.n_in == st_t.nmodes - 1
+    rank = 8
+    rp = rank_padded(rank)
+    facs = random_factors(jax.random.PRNGKey(6), st_t.shape, rank)
+    pads = tuple(
+        pad_factor(facs[m], rows, rp) for m, rows in zip(plan.in_modes, plan.in_rows)
+    )
+    ref = mttkrp_plan_ref(plan, pads, rp)
+    op = make_planned_mttkrp(
+        st_t, mode, rank,
+        cfg=MemoryControllerConfig(
+            cache=CacheEngineConfig(tile_i=16, tile_j=16, tile_k=16),
+            dma=DMAEngineConfig(blk=32),
+        ),
+        interpret=True,
+    )
+    out = op.output(facs, st_t.shape[mode])
+    np.testing.assert_allclose(
+        np.asarray(out), np.asarray(ref)[: st_t.shape[mode], :rank], rtol=1e-4, atol=1e-4
+    )
+
+
+def test_mttkrp_auto_unsorted_stream_approach1(tiny_tensor):
+    """Regression (PR 2): `mttkrp_auto` used to promise sorted_by_mode=True
+    to XLA for the raw (unsorted) COO stream — `indices_are_sorted` is a
+    correctness contract, not a hint.  The dispatcher must derive the flag
+    from what the stream actually satisfies and still compute the exact
+    MTTKRP on an unsorted stream."""
+    rng = np.random.default_rng(11)
+    perm = rng.permutation(tiny_tensor.nnz)
+    shuffled = SparseTensor(
+        tiny_tensor.indices[perm], tiny_tensor.values[perm], tiny_tensor.shape
+    )
+    assert not shuffled.is_sorted_by(0)
+    facs = random_factors(jax.random.PRNGKey(8), shuffled.shape, 16)
+    out = mttkrp_auto(shuffled, facs, 0, method="approach1")
+    ref = mttkrp_ref(
+        jnp.asarray(shuffled.indices), jnp.asarray(shuffled.values),
+        facs, 0, shuffled.shape[0],
+    )
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), rtol=2e-4, atol=2e-4)
+    # a sorted stream still takes the fast path
+    srt = shuffled.sorted_by(0)
+    out_s = mttkrp_auto(srt, facs, 0, method="approach1")
+    ref_s = mttkrp_ref(
+        jnp.asarray(srt.indices), jnp.asarray(srt.values), facs, 0, srt.shape[0]
+    )
+    np.testing.assert_allclose(np.asarray(out_s), np.asarray(ref_s), rtol=2e-4, atol=2e-4)
 
 
 @settings(max_examples=10, deadline=None)
