@@ -1,0 +1,173 @@
+"""End-to-end fast-path benchmark: layout-generation cost (Tensor Remapper),
+steady-state ALS iteration wall-clock, and the mttkrp_auto plan-cache — the
+three quantities the paper (and GenTen / the authors' GPU follow-on) treat as
+first-class measurements.  Writes the persistent trajectory file
+`BENCH_kernel.json` at the repo root (schema: repro/bench.py) so every future
+PR has a perf baseline to move.
+
+Sections
+  plan_build_*   `plan_blocks` (vectorized scatter build) vs
+                 `plan_blocks_reference` (the per-group Python loop it
+                 replaced), at two DMA block sizes.  blk=32 is the
+                 many-small-groups regime where the interpreter loop dominates
+                 (medium: ~200k groups); blk=256 also pays the padded-layout
+                 materialization floor (99% padding on medium), which bounds
+                 the achievable full-call speedup by memory bandwidth.
+  als_iter_*     one full jitted ALS iteration (every mode's MTTKRP -> gram ->
+                 solve -> normalize + on-device fit) for the planned Pallas
+                 path (interpret mode on CPU) and the pure-JAX approaches.
+  plan_cache     mttkrp_auto(method='pallas') keyed plan cache: first vs
+                 cached call, hit/miss counters.
+
+  PYTHONPATH=src python benchmarks/bench_e2e.py [--fast] [--out PATH]
+"""
+from __future__ import annotations
+
+import argparse
+import time
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.bench import result_record, write_report
+from repro.core.coo import frostt_like, random_factors
+from repro.core.cp_als import _sweep_streams
+from repro.core.remap import plan_blocks, plan_blocks_reference
+from repro.kernels import ops
+
+ROOT = Path(__file__).resolve().parent.parent
+
+# blk=256 is the kernel default; blk=32 is the layout-generation stress regime
+# (groups on the scaled presets hold only a few non-zeros each, so the padded
+# output stays small and the per-group loop is the whole cost).
+PLAN_CONFIGS = (("blk256", 256), ("blk32", 32))
+
+
+def _norm_x_sq(st) -> jax.Array:
+    return jnp.asarray(float(np.sum(st.values.astype(np.float64) ** 2)), jnp.float32)
+
+
+def bench_plan_build(presets, results, reps: int):
+    print("== plan build: vectorized plan_blocks vs reference loop")
+    for preset in presets:
+        st = frostt_like(preset)
+        for cname, blk in PLAN_CONFIGS:
+            t_vec = min(
+                _timed(lambda: plan_blocks(st, 0, blk=blk)) for _ in range(reps)
+            )
+            ref_reps = min(2, reps) if preset in ("medium", "large") else reps
+            t_ref = min(
+                _timed(lambda: plan_blocks_reference(st, 0, blk=blk))
+                for _ in range(ref_reps)
+            )
+            speedup = t_ref / t_vec
+            name = f"plan_build_{cname}"
+            results += [
+                result_record(name, preset, "reference_s", t_ref, "s"),
+                result_record(name, preset, "vectorized_s", t_vec, "s"),
+                result_record(name, preset, "speedup_x", speedup, "x"),
+            ]
+            print(f"  {preset:10s} {cname:7s} reference={t_ref:8.3f}s "
+                  f"vectorized={t_vec:8.3f}s  speedup={speedup:6.1f}x")
+
+
+def _timed(fn):
+    t0 = time.perf_counter()
+    fn()
+    return time.perf_counter() - t0
+
+
+def bench_als_iter(presets, results, rank: int, reps: int):
+    print("== steady-state ALS iteration (one jitted sweep, all modes + fit)")
+    key = jax.random.PRNGKey(0)
+    for preset in presets:
+        st = frostt_like(preset)
+        nxs = _norm_x_sq(st)
+
+        # Planned Pallas path (interpret mode on CPU — the BlockSpec DMA
+        # schedule is the TPU performance model; wall-clock here tracks the
+        # grid-step count, not MXU throughput).
+        ws = ops.make_planned_cp_als(st, rank, interpret=True)
+        facs = ws.pad_factors(random_factors(key, st.shape, rank))
+        idx, val = jnp.asarray(st.indices), jnp.asarray(st.values)
+        facs, lam, fit = ws.sweep(facs, idx, val, nxs, first=True)
+        facs, lam, fit = ws.sweep(facs, idx, val, nxs, first=False)  # compile steady state
+        jax.block_until_ready(fit)
+        t0 = time.perf_counter()
+        for _ in range(reps):
+            facs, lam, fit = ws.sweep(facs, idx, val, nxs, first=False)
+        jax.block_until_ready(fit)
+        t_pallas = (time.perf_counter() - t0) / reps
+        results.append(result_record("als_iter_pallas", preset, "iter_s", t_pallas, "s"))
+        print(f"  {preset:10s} pallas(interpret) iter={t_pallas:8.3f}s "
+              f"(plans: {ws.plan_bytes()/2**20:.1f} MiB)")
+
+        streams = [st.sorted_by(m) for m in range(st.nmodes)]
+        sidx = tuple(jnp.asarray(s.indices) for s in streams)
+        sval = tuple(jnp.asarray(s.values) for s in streams)
+        for method in ("approach1", "approach2"):
+            ft = tuple(random_factors(key, st.shape, rank))
+            ft, lam, fit = _sweep_streams(
+                ft, sidx, sval, nxs, shape=st.shape, method=method, first=True)
+            ft, lam, fit = _sweep_streams(
+                ft, sidx, sval, nxs, shape=st.shape, method=method, first=False)
+            jax.block_until_ready(fit)
+            t0 = time.perf_counter()
+            for _ in range(reps):
+                ft, lam, fit = _sweep_streams(
+                    ft, sidx, sval, nxs, shape=st.shape, method=method, first=False)
+            jax.block_until_ready(fit)
+            t = (time.perf_counter() - t0) / reps
+            results.append(result_record(f"als_iter_{method}", preset, "iter_s", t, "s"))
+            print(f"  {preset:10s} {method:17s} iter={t:8.3f}s")
+
+
+def bench_plan_cache(results, preset: str, rank: int):
+    print("== mttkrp_auto plan cache (keyed on tensor fingerprint)")
+    st = frostt_like(preset)
+    facs = random_factors(jax.random.PRNGKey(0), st.shape, rank)
+    ops.plan_cache_clear()
+    t_first = _timed(lambda: jax.block_until_ready(ops.mttkrp_auto(st, facs, 0)))
+    t_cached = min(
+        _timed(lambda: jax.block_until_ready(ops.mttkrp_auto(st, facs, 0)))
+        for _ in range(2)
+    )
+    stats = ops.plan_cache_stats()
+    results += [
+        result_record("plan_cache", preset, "first_call_s", t_first, "s"),
+        result_record("plan_cache", preset, "cached_call_s", t_cached, "s"),
+        result_record("plan_cache", preset, "hits", stats["hits"], "count"),
+        result_record("plan_cache", preset, "misses", stats["misses"], "count"),
+    ]
+    print(f"  {preset:10s} first={t_first:.3f}s cached={t_cached:.3f}s "
+          f"hits={stats['hits']} misses={stats['misses']}")
+
+
+def main(fast: bool = False, out: str | None = None) -> dict:
+    plan_presets = ("small", "4d_small", "5d_small") if fast else (
+        "small", "medium", "4d_small", "5d_small")
+    als_presets = ("small", "4d_small", "5d_small")
+    reps = 1 if fast else 3
+    rank = 16
+
+    results: list[dict] = []
+    t0 = time.time()
+    bench_plan_build(plan_presets, results, reps=max(2, reps))
+    bench_als_iter(als_presets, results, rank=rank, reps=reps)
+    bench_plan_cache(results, preset="tiny", rank=rank)
+
+    path = Path(out) if out else ROOT / "BENCH_kernel.json"
+    report = write_report(path, results)
+    print(f"[bench_e2e] {len(results)} results -> {path} "
+          f"(commit {report['commit'][:12]}, {time.time()-t0:.1f}s total)")
+    return report
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--fast", action="store_true", help="CI smoke subset")
+    ap.add_argument("--out", default=None, help="output path (default: repo-root BENCH_kernel.json)")
+    a = ap.parse_args()
+    main(fast=a.fast, out=a.out)

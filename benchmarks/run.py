@@ -32,6 +32,14 @@ def main() -> None:
     from . import bench_kernel
     bench_kernel.main()
 
+    _section("End-to-end fast path (plan build / jitted ALS iter / plan cache)")
+    import tempfile
+    from . import bench_e2e
+    # Write to a scratch path: the fast-mode subset must not clobber the
+    # committed full-run baseline at the repo root.
+    with tempfile.TemporaryDirectory() as td:
+        bench_e2e.main(fast=True, out=f"{td}/BENCH_kernel.json")
+
     _section("MoE dispatch: the paper's approaches on the LM side")
     from . import bench_moe_dispatch
     bench_moe_dispatch.main()

@@ -2,7 +2,7 @@
 programmable memory-controller model, PMS, CP-ALS driver."""
 from .coo import SparseTensor, CooBatch, synthetic_tensor, frostt_like, to_device, random_factors
 from .hypergraph import TrafficModel, approach1_traffic, approach2_traffic, remap_overhead, stats
-from .remap import remap_stable, remap_pointer_machine, remap_radix, plan_blocks, BlockPlan, pointer_table, group_key
+from .remap import remap_stable, remap_pointer_machine, remap_radix, radix_digits, plan_blocks, plan_blocks_reference, BlockPlan, pointer_table, group_key
 from .mttkrp import mttkrp, mttkrp_approach1, mttkrp_approach2, mttkrp_sharded, hadamard_rows
 from .memctrl import MemoryControllerConfig, CacheEngineConfig, DMAEngineConfig, RemapperConfig, TPUSpec
 from .pms import PMSEstimate, predict_from_plan, predict_analytic, search

@@ -9,6 +9,7 @@ jit-stable shapes for compute.
 from __future__ import annotations
 
 import dataclasses
+import hashlib
 from functools import partial
 from typing import Sequence
 
@@ -68,6 +69,21 @@ class SparseTensor:
     def is_sorted_by(self, mode: int) -> bool:
         c = self.indices[:, mode]
         return bool(np.all(c[1:] >= c[:-1]))
+
+    def fingerprint(self) -> str:
+        """Content hash of (shape, indices, values) — the plan-cache key
+        (kernels/ops.py): two tensors with equal fingerprints get the same
+        memory layout.  Cached on the instance; the arrays are treated as
+        immutable after construction."""
+        fp = getattr(self, "_fingerprint", None)
+        if fp is None:
+            h = hashlib.sha1()
+            h.update(repr(self.shape).encode())
+            h.update(np.ascontiguousarray(self.indices).tobytes())
+            h.update(np.ascontiguousarray(self.values).tobytes())
+            fp = h.hexdigest()
+            object.__setattr__(self, "_fingerprint", fp)
+        return fp
 
 
 @jax.tree_util.register_pytree_node_class

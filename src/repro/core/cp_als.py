@@ -7,7 +7,12 @@ Faithful to the paper's system framing:
     for memory reasons; on TPU HBM it is a legitimate space/time trade) —
     `layout="copies"`.
 
-Everything (MTTKRP, gram, solve, normalization, fit) is JAX and jittable.
+The steady-state iteration is one jitted *sweep* — a single compiled function
+running every mode's MTTKRP -> gram -> solve -> normalize plus the on-device
+fit (`_sweep_streams` / `_sweep_remap` here; `PlannedCPALS.sweep` for the
+Pallas memory-controller path).  Only the `tol` early-exit reads the
+per-iteration fit scalar back to the host.  Pass `jit_sweep=False` (or an
+`mttkrp_fn` override) to fall back to the eager per-mode dispatch loop.
 """
 from __future__ import annotations
 
@@ -106,6 +111,54 @@ def fit_value(
     return 1.0 - jnp.sqrt(resid_sq) / jnp.sqrt(norm_x_sq)
 
 
+def _update_mode(mt: jax.Array, factors: list, m: int, first: bool):
+    """Shared mode update: gram -> solve -> normalize (one Alg. 1 step)."""
+    g = gram_hadamard(factors, m)
+    f = _solve(mt, g)
+    f, lam = _normalize(f, 0 if first else 1)
+    factors[m] = f
+    return factors, lam
+
+
+@partial(jax.jit, static_argnames=("shape", "method", "first"))
+def _sweep_streams(factors, streams_idx, streams_val, norm_x_sq, *, shape, method, first):
+    """One full jitted ALS iteration over per-mode pre-sorted streams
+    (layout='copies'): every mode's MTTKRP -> gram -> solve -> normalize,
+    plus the fit, in a single compiled function."""
+    factors = list(factors)
+    lam = None
+    for m in range(len(shape)):
+        mt = mttkrp(streams_idx[m], streams_val[m], factors, m, shape[m], method=method)
+        factors, lam = _update_mode(mt, factors, m, first)
+    fit = fit_value(streams_idx[-1], streams_val[-1], factors, lam, norm_x_sq)
+    return tuple(factors), lam, fit
+
+
+@partial(jax.jit, static_argnames=("shape", "method", "first"))
+def _sweep_remap(factors, idx, val, norm_x_sq, *, shape, method, first):
+    """One full jitted ALS iteration for the single-stream layout: the
+    on-device Tensor Remapper (Alg. 5) re-sorts the carried stream before
+    each mode inside the same compiled function; the remapped stream is
+    returned as carry for the next iteration."""
+    factors = list(factors)
+    lam = None
+    for m in range(len(shape)):
+        idx, val, _ = remap_stable(idx, val, m)
+        mt = mttkrp(idx, val, factors, m, shape[m], method=method)
+        factors, lam = _update_mode(mt, factors, m, first)
+    fit = fit_value(idx, val, factors, lam, norm_x_sq)
+    return tuple(factors), lam, idx, val, fit
+
+
+def _finish_iter(fits, fit, it, tol, verbose) -> bool:
+    """Host-side bookkeeping per iteration: record the fit scalar and decide
+    the tol early-exit (the only device->host sync in the jitted loops)."""
+    fits.append(float(fit))
+    if verbose:
+        print(f"[cp_als] iter {it:3d} fit={fits[-1]:.6f}")
+    return tol is not None and it > 0 and abs(fits[-1] - fits[-2]) < tol
+
+
 def cp_als(
     st: SparseTensor,
     rank: int,
@@ -120,6 +173,7 @@ def cp_als(
     interpret: bool = True,
     auto_tune: bool = False,
     cfg=None,
+    jit_sweep: bool = True,
     verbose: bool = False,
 ) -> CPState:
     """Run CP-ALS.
@@ -134,10 +188,16 @@ def cp_als(
             'copies' — per-mode pre-sorted copies (more HBM, no remap traffic).
             Ignored for method='pallas': the per-mode plans *are* the copies.
     mttkrp_fn: optional override with signature (indices, values, factors,
-               mode, out_rows) -> (I_mode, R).
+               mode, out_rows) -> (I_mode, R).  Forces the eager loop (the
+               override may not be jit-traceable).
     planned / interpret / auto_tune / cfg: method='pallas' knobs — pass a
                prebuilt `PlannedCPALS` to reuse plans across calls, or let
                auto_tune run the PMS per mode (Sec. 5.3).
+    jit_sweep: run each iteration as one jitted sweep (factors stay
+               device-resident — rank-padded for the pallas path — across
+               iterations; `tol` is checked on the host against the
+               per-iteration fit scalar).  False restores the eager per-mode
+               dispatch loop, kept as the parity baseline.
     """
     if layout not in ("remap", "copies"):
         raise ValueError(f"unknown layout {layout!r}: expected 'remap' or 'copies'")
@@ -145,6 +205,8 @@ def cp_als(
     key = jax.random.PRNGKey(seed)
     factors = random_factors(key, st.shape, rank)
     lam = jnp.ones((rank,), jnp.float32)
+    norm_x_sq = jnp.asarray(float(np.sum(st.values.astype(np.float64) ** 2)), jnp.float32)
+    fits: list[float] = []
 
     if planned is not None and method != "pallas":
         raise ValueError(
@@ -164,6 +226,20 @@ def cp_als(
                 f"PlannedCPALS workspace was built for shape={planned.shape} "
                 f"rank={planned.rank}, got shape={st.shape} rank={rank}"
             )
+        if jit_sweep:
+            # Fast path: factors padded once, updated in padded space by one
+            # jitted sweep per iteration; sliced back only for the CPState.
+            base_idx, base_val = jnp.asarray(st.indices), jnp.asarray(st.values)
+            facs_p = planned.pad_factors(factors)
+            for it in range(iters):
+                facs_p, lam, fit = planned.sweep(
+                    facs_p, base_idx, base_val, norm_x_sq, first=(it == 0)
+                )
+                if _finish_iter(fits, fit, it, tol, verbose):
+                    break
+            return CPState(
+                factors=planned.unpad_factors(facs_p), lam=lam, fit_history=fits
+            )
         mttkrp_fn = planned.mttkrp_fn
         layout = "planned"
 
@@ -182,14 +258,32 @@ def cp_als(
         s0 = st.sorted_by(0)
         cur_idx, cur_val = jnp.asarray(s0.indices), jnp.asarray(s0.values)
 
-    norm_x_sq = jnp.asarray(float(np.sum(st.values.astype(np.float64) ** 2)), jnp.float32)
+    if jit_sweep and mttkrp_fn is None and layout in ("copies", "remap"):
+        factors_t = tuple(factors)
+        if layout == "copies":
+            streams_idx = tuple(s[0] for s in streams)
+            streams_val = tuple(s[1] for s in streams)
+        for it in range(iters):
+            if layout == "copies":
+                factors_t, lam, fit = _sweep_streams(
+                    factors_t, streams_idx, streams_val, norm_x_sq,
+                    shape=st.shape, method=method, first=(it == 0),
+                )
+            else:
+                factors_t, lam, cur_idx, cur_val, fit = _sweep_remap(
+                    factors_t, cur_idx, cur_val, norm_x_sq,
+                    shape=st.shape, method=method, first=(it == 0),
+                )
+            if _finish_iter(fits, fit, it, tol, verbose):
+                break
+        return CPState(factors=list(factors_t), lam=lam, fit_history=fits)
 
+    # Eager per-mode dispatch loop: mttkrp_fn overrides and jit_sweep=False.
     def do_mttkrp(indices, values, facs, mode):
         if mttkrp_fn is not None:
             return mttkrp_fn(indices, values, facs, mode, st.shape[mode])
         return mttkrp(indices, values, facs, mode, st.shape[mode], method=method)
 
-    fits: list[float] = []
     for it in range(iters):
         for m in range(nmodes):
             if layout == "planned":
@@ -204,10 +298,6 @@ def cp_als(
             f = _solve(mt, g)
             f, lam = _normalize(f, it)
             factors[m] = f
-        fit = float(fit_value(idx, val, factors, lam, norm_x_sq))
-        fits.append(fit)
-        if verbose:
-            print(f"[cp_als] iter {it:3d} fit={fit:.6f}")
-        if tol is not None and it > 0 and abs(fits[-1] - fits[-2]) < tol:
+        if _finish_iter(fits, fit_value(idx, val, factors, lam, norm_x_sq), it, tol, verbose):
             break
     return CPState(factors=factors, lam=lam, fit_history=fits)

@@ -38,9 +38,11 @@ __all__ = [
     "remap_stable",
     "remap_pointer_machine",
     "remap_radix",
+    "radix_digits",
     "BlockPlan",
     "group_key",
     "plan_blocks",
+    "plan_blocks_reference",
 ]
 
 
@@ -85,15 +87,30 @@ def remap_pointer_machine(indices: np.ndarray, values: np.ndarray, mode: int, nb
     return out_idx, out_val
 
 
+def radix_digits(nbins: int, pointer_budget: int) -> int:
+    """Number of counting-sort passes so that pointer_budget**ndigits >= nbins.
+
+    Pure integer arithmetic: the float formulation
+    ceil(log(nbins)/log(budget)) is off by one at exact powers of the budget
+    (log(64)/log(4) = 3.0000000000000004 -> 4 passes instead of 3)."""
+    assert pointer_budget >= 2, "need at least two bins per pass"
+    ndigits, span = 1, pointer_budget
+    while span < nbins:
+        span *= pointer_budget
+        ndigits += 1
+    return ndigits
+
+
 @partial(jax.jit, static_argnames=("mode", "nbins", "pointer_budget"))
 def remap_radix(indices: jax.Array, values: jax.Array, mode: int, nbins: int, pointer_budget: int):
     """Hierarchical remap for pointer tables larger than on-chip memory
     (paper Sec. 3.1: 10M-coordinate modes need 40 MB of pointers).
 
-    Runs ceil(log_budget(nbins)) stable counting-sort passes, least-significant
-    digit first, with at most `pointer_budget` pointers live per pass — the
-    direct analogue of splitting the sort into on-chip-sized rounds."""
-    ndigits = max(1, math.ceil(math.log(max(nbins, 2)) / math.log(pointer_budget)))
+    Runs radix_digits(nbins, budget) stable counting-sort passes,
+    least-significant digit first, with at most `pointer_budget` pointers live
+    per pass — the direct analogue of splitting the sort into on-chip-sized
+    rounds."""
+    ndigits = radix_digits(max(nbins, 2), pointer_budget)
     coords = indices[:, mode]
     order = jnp.arange(coords.shape[0])
     key = coords
@@ -255,6 +272,117 @@ def default_in_tiles(n_in: int, tile_j: int, tile_k: int) -> tuple[int, ...]:
     return CacheEngineConfig(tile_j=tile_j, tile_k=tile_k).input_tiles(n_in)
 
 
+@dataclasses.dataclass
+class _GroupedStream:
+    """Shared prologue of the layout build: the remap permutation plus the
+    group geometry, with the stream arrays kept in *original* order.  Both
+    the vectorized production build and the loop reference consume this; the
+    reference gathers full sorted copies (part of its per-element cost), the
+    vectorized build gathers only what it scatters."""
+
+    order: np.ndarray  # the remap permutation (stable sort by group key)
+    i: np.ndarray  # output-mode coordinates, original order (int64)
+    ins: list[np.ndarray]  # input-mode coordinates, original order
+    v: np.ndarray  # values, original order
+    it: np.ndarray  # output tile ids, original order
+    in_ts: list[np.ndarray]  # input tile ids, original order
+    boundaries: np.ndarray  # first *sorted* position of each group
+    group_sizes: np.ndarray
+    padded_sizes: np.ndarray  # group sizes rounded up to a multiple of blk
+    in_modes: tuple[int, ...]
+    in_tiles: tuple[int, ...]
+
+    @property
+    def total(self) -> int:
+        return int(self.padded_sizes.sum())
+
+
+def _grouped_stream(
+    st: SparseTensor,
+    mode: int,
+    tile_i: int,
+    tile_j: int,
+    tile_k: int,
+    blk: int,
+    in_tiles: tuple[int, ...] | None,
+) -> _GroupedStream:
+    assert st.nmodes >= 3, "kernel block plan needs >= 3-mode tensors"
+    in_modes = tuple(m for m in range(st.nmodes) if m != mode)
+    n_in = len(in_modes)
+    if in_tiles is None:
+        in_tiles = default_in_tiles(n_in, tile_j, tile_k)
+    assert len(in_tiles) == n_in
+    i = st.indices[:, mode].astype(np.int64)
+    ins = [st.indices[:, m].astype(np.int64) for m in in_modes]
+    v = st.values
+
+    it = i // tile_i
+    in_ts = [c // t for c, t in zip(ins, in_tiles)]
+    # Remap: sort by (output tile, input tile tuple).  The collision-free
+    # mixed-radix group key IS that tuple in lexicographic order, so one
+    # stable argsort on it replaces an N-key lexsort (~2x cheaper) while
+    # producing the identical permutation; stability preserves prior order
+    # within a tile tuple.  Explicit per-mode tile counts keep the key
+    # collision-free.
+    n_tiles = [_ceil_div(st.shape[mode], tile_i)] + [
+        _ceil_div(st.shape[m], t) for m, t in zip(in_modes, in_tiles)
+    ]
+    key = group_key([it] + in_ts, n_tiles)
+    order = np.argsort(key, kind="stable")
+    key_sorted = key[order]
+
+    # Group boundaries over identical (it, t_0, ..., t_{N-2}) tuples.
+    boundaries = np.flatnonzero(
+        np.concatenate([[True], key_sorted[1:] != key_sorted[:-1]])
+    )
+    group_sizes = np.diff(np.concatenate([boundaries, [key_sorted.size]]))
+    padded_sizes = np.maximum(_ceil_to(1, blk), ((group_sizes + blk - 1) // blk) * blk)
+    return _GroupedStream(
+        order=order,
+        i=i,
+        ins=ins,
+        v=v,
+        it=it,
+        in_ts=in_ts,
+        boundaries=boundaries,
+        group_sizes=group_sizes,
+        padded_sizes=padded_sizes,
+        in_modes=in_modes,
+        in_tiles=tuple(in_tiles),
+    )
+
+
+def _assemble_plan(
+    st: SparseTensor,
+    mode: int,
+    g: _GroupedStream,
+    tile_i: int,
+    blk: int,
+    vals: np.ndarray,
+    iloc: np.ndarray,
+    in_locs: list[np.ndarray],
+    block_it: np.ndarray,
+    block_in: list[np.ndarray],
+) -> BlockPlan:
+    return BlockPlan(
+        vals=vals,
+        iloc=iloc,
+        in_locs=tuple(in_locs),
+        block_it=block_it,
+        block_in=tuple(block_in),
+        tile_i=tile_i,
+        in_tiles=g.in_tiles,
+        blk=blk,
+        out_rows=_ceil_to(st.shape[mode], tile_i),
+        in_rows=tuple(
+            _ceil_to(st.shape[m], t) for m, t in zip(g.in_modes, g.in_tiles)
+        ),
+        mode=mode,
+        in_modes=g.in_modes,
+        nnz=st.nnz,
+    )
+
+
 def plan_blocks(
     st: SparseTensor,
     mode: int,
@@ -269,40 +397,79 @@ def plan_blocks(
     memory-layout generator).  Supports any order >= 3 (paper Table 2 has
     3–5-mode tensors): the N-1 input modes each get a tile-id stream and a
     local-index vector.  `in_tiles` overrides the per-input-mode tile sizes;
-    by default the first input mode uses tile_j and the rest tile_k."""
-    assert st.nmodes >= 3, "kernel block plan needs >= 3-mode tensors"
-    in_modes = tuple(m for m in range(st.nmodes) if m != mode)
-    n_in = len(in_modes)
-    if in_tiles is None:
-        in_tiles = default_in_tiles(n_in, tile_j, tile_k)
-    assert len(in_tiles) == n_in
-    i = st.indices[:, mode].astype(np.int64)
-    ins = [st.indices[:, m].astype(np.int64) for m in in_modes]
-    v = st.values
+    by default the first input mode uses tile_j and the rest tile_k.
 
-    it = i // tile_i
-    in_ts = [c // t for c, t in zip(ins, in_tiles)]
-    # Remap: sort by (output tile, input tile tuple). lexsort's last key is
-    # primary. Stable => preserves prior order within a tile tuple.
-    order = np.lexsort(tuple(reversed(in_ts)) + (it,))
-    i, v = i[order], v[order]
-    ins = [c[order] for c in ins]
-    it = it[order]
-    in_ts = [t[order] for t in in_ts]
+    Vectorized build: one fancy-index scatter moves every non-zero to its
+    padded destination (cumsum of padded group sizes -> per-group destination
+    offsets), and `np.repeat` expands per-group tile ids to per-block
+    metadata.  Local indices are computed in original stream order and
+    gathered through the remap permutation, so no fully-sorted copies of the
+    coordinate arrays are ever materialized.  Bit-identical to
+    `plan_blocks_reference` (the per-group Python loop it replaced), which is
+    kept for parity testing; the vectorized path is what makes layout
+    generation cheap enough to amortize (paper Sec. 3.1 treats layout-build
+    cost as a first-class quantity)."""
+    g = _grouped_stream(st, mode, tile_i, tile_j, tile_k, blk, in_tiles)
+    n_in = len(g.in_modes)
+    total = g.total
+    nnz = g.i.size
+    order = g.order
 
-    # Group boundaries over identical (it, t_0, ..., t_{N-2}) tuples, keyed
-    # by explicit per-mode tile counts so distinct tuples cannot collide.
-    n_tiles = [_ceil_div(st.shape[mode], tile_i)] + [
-        _ceil_div(st.shape[m], t) for m, t in zip(in_modes, in_tiles)
+    # Destination of each sorted non-zero: its group's padded base offset plus
+    # its rank within the group.
+    dst_off = np.concatenate([[0], np.cumsum(g.padded_sizes)[:-1]])
+    # per-element group id via boundary flags (O(nnz), no repeat allocation)
+    flags = np.zeros((nnz,), np.int64)
+    flags[g.boundaries[1:]] = 1
+    gid = np.cumsum(flags)
+    dest = dst_off[gid] + (np.arange(nnz, dtype=np.int64) - g.boundaries[gid])
+
+    vals = np.zeros((total,), np.float32)
+    iloc = np.zeros((total,), np.int32)
+    in_locs = [np.zeros((total,), np.int32) for _ in range(n_in)]
+    vals[dest] = g.v[order]
+    iloc[dest] = (g.i - g.it * tile_i).astype(np.int32)[order]
+    for n in range(n_in):
+        in_locs[n][dest] = (g.ins[n] - g.in_ts[n] * g.in_tiles[n]).astype(np.int32)[order]
+
+    # Per-block tile-id metadata: each group contributes padded_size/blk
+    # identical blocks; `leaders` are the original positions of each group's
+    # first sorted element.
+    nb_per_group = g.padded_sizes // blk
+    leaders = order[g.boundaries]
+    block_it = np.repeat(g.it[leaders], nb_per_group).astype(np.int32)
+    block_in = [
+        np.repeat(t[leaders], nb_per_group).astype(np.int32) for t in g.in_ts
     ]
-    key = group_key([it] + in_ts, n_tiles)
-    boundaries = np.flatnonzero(np.concatenate([[True], key[1:] != key[:-1]]))
-    group_sizes = np.diff(np.concatenate([boundaries, [key.size]]))
+    return _assemble_plan(
+        st, mode, g, tile_i, blk, vals, iloc, in_locs, block_it, block_in
+    )
 
-    # Pad each group to a multiple of blk and emit per-block metadata.
-    padded_sizes = np.maximum(_ceil_to(1, blk), ((group_sizes + blk - 1) // blk) * blk)
-    total = int(padded_sizes.sum())
+
+def plan_blocks_reference(
+    st: SparseTensor,
+    mode: int,
+    *,
+    tile_i: int = 256,
+    tile_j: int = 256,
+    tile_k: int = 256,
+    blk: int = 256,
+    in_tiles: tuple[int, ...] | None = None,
+) -> BlockPlan:
+    """Per-group Python-loop layout build: the original O(#groups)
+    interpreter-loop implementation, kept as the executable specification
+    `plan_blocks` must match bit-for-bit (see the hypothesis parity property
+    in tests/test_remap.py)."""
+    g = _grouped_stream(st, mode, tile_i, tile_j, tile_k, blk, in_tiles)
+    n_in = len(g.in_modes)
+    total = g.total
     nblocks = total // blk
+
+    # The loop walks the stream in sorted order: materialize sorted copies.
+    order = g.order
+    i, v, it = g.i[order], g.v[order], g.it[order]
+    ins = [c[order] for c in g.ins]
+    in_ts = [t[order] for t in g.in_ts]
 
     vals = np.zeros((total,), np.float32)
     iloc = np.zeros((total,), np.int32)
@@ -313,13 +480,13 @@ def plan_blocks(
     src = 0
     dst = 0
     b = 0
-    for gsize, psize in zip(group_sizes, padded_sizes):
+    for gsize, psize in zip(g.group_sizes, g.padded_sizes):
         s, e = src, src + gsize
         vals[dst : dst + gsize] = v[s:e]
         iloc[dst : dst + gsize] = (i[s:e] - it[s] * tile_i).astype(np.int32)
         for n in range(n_in):
             in_locs[n][dst : dst + gsize] = (
-                ins[n][s:e] - in_ts[n][s] * in_tiles[n]
+                ins[n][s:e] - in_ts[n][s] * g.in_tiles[n]
             ).astype(np.int32)
         nb = psize // blk
         block_it[b : b + nb] = it[s]
@@ -329,18 +496,6 @@ def plan_blocks(
         dst += psize
         b += nb
 
-    return BlockPlan(
-        vals=vals,
-        iloc=iloc,
-        in_locs=tuple(in_locs),
-        block_it=block_it,
-        block_in=tuple(block_in),
-        tile_i=tile_i,
-        in_tiles=tuple(in_tiles),
-        blk=blk,
-        out_rows=_ceil_to(st.shape[mode], tile_i),
-        in_rows=tuple(_ceil_to(st.shape[m], t) for m, t in zip(in_modes, in_tiles)),
-        mode=mode,
-        in_modes=in_modes,
-        nnz=st.nnz,
+    return _assemble_plan(
+        st, mode, g, tile_i, blk, vals, iloc, in_locs, block_it, block_in
     )

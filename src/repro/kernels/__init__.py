@@ -8,6 +8,8 @@ from .ops import (
     make_planned_cp_als,
     make_planned_mttkrp,
     mttkrp_auto,
+    plan_cache_clear,
+    plan_cache_stats,
 )
 from .ref import mttkrp_ref, mttkrp_ref_dense, mttkrp_plan_ref
 
@@ -20,6 +22,8 @@ __all__ = [
     "make_planned_cp_als",
     "make_planned_mttkrp",
     "mttkrp_auto",
+    "plan_cache_clear",
+    "plan_cache_stats",
     "mttkrp_ref",
     "mttkrp_ref_dense",
     "mttkrp_plan_ref",

@@ -11,12 +11,14 @@ copies, a legitimate space/time trade on HBM).
 from __future__ import annotations
 
 import dataclasses
-from typing import Sequence
+from collections import OrderedDict
+from typing import Callable, Sequence
 
 import jax
 import jax.numpy as jnp
 
 from ..core.coo import SparseTensor
+from ..core.cp_als import _update_mode, fit_value
 from ..core.memctrl import MemoryControllerConfig, TPUSpec
 from ..core.pms import search as pms_search
 from ..core.remap import BlockPlan, plan_blocks
@@ -29,6 +31,8 @@ __all__ = [
     "PlannedCPALS",
     "make_planned_cp_als",
     "mttkrp_auto",
+    "plan_cache_stats",
+    "plan_cache_clear",
 ]
 
 
@@ -127,18 +131,105 @@ class PlannedCPALS:
     for every ALS iteration, so the plan/remap cost is amortized over the
     decomposition exactly as the paper amortizes the FPGA layout generation
     over the (many-iteration) ALS run.
+
+    The steady-state iteration is `sweep`: one jitted function running a full
+    ALS iteration (every mode's MTTKRP -> gram -> solve -> normalize, plus the
+    on-device fit).  Factors stay rank-padded and device-resident across
+    iterations — `pad_factors` pads each mode once up front (to the maximum
+    row padding any plan needs, lanes to rank_padded) and the sweep updates
+    them in padded space; `unpad_factors` slices back to true shape only when
+    a `CPState` is materialized.
     """
 
     ops: dict[int, PlannedMTTKRP]
     shape: tuple[int, ...]
     rank: int
+    _sweep_fn: Callable | None = dataclasses.field(default=None, repr=False)
 
     @property
     def nmodes(self) -> int:
         return len(self.shape)
 
+    @property
+    def rank_pad(self) -> int:
+        return rank_padded(self.rank)
+
     def plan_for(self, mode: int) -> BlockPlan:
         return self.ops[mode].plan
+
+    @property
+    def padded_rows(self) -> tuple[int, ...]:
+        """Device-resident row padding per mode: the largest padding any plan
+        requires of that factor (its own plan's out_rows, plus in_rows
+        wherever it appears as an input mode).  Each plan's kernel slices the
+        rows it needs — a static, zero-copy slice inside the sweep jit."""
+        rows = []
+        for m in range(self.nmodes):
+            r = self.ops[m].plan.out_rows
+            for op in self.ops.values():
+                p = op.plan
+                for n, im in enumerate(p.in_modes):
+                    if im == m:
+                        r = max(r, p.in_rows[n])
+            rows.append(r)
+        return tuple(rows)
+
+    def pad_factors(self, factors: Sequence[jax.Array]) -> tuple[jax.Array, ...]:
+        """One pad per mode for the whole decomposition (not N x iters)."""
+        rp = self.rank_pad
+        return tuple(
+            pad_factor(f, rows, rp) for f, rows in zip(factors, self.padded_rows)
+        )
+
+    def unpad_factors(self, padded: Sequence[jax.Array]) -> list[jax.Array]:
+        return [f[:s, : self.rank] for f, s in zip(padded, self.shape)]
+
+    def _build_sweep(self) -> Callable:
+        shape, rank, nmodes = self.shape, self.rank, self.nmodes
+        rp, prows = self.rank_pad, self.padded_rows
+        ops = self.ops
+
+        def sweep(facs, idx, val, norm_x_sq, first):
+            facs = list(facs)
+            lam = None
+            for m in range(nmodes):
+                op, p = ops[m], ops[m].plan
+                in_facs = tuple(
+                    facs[im][: p.in_rows[n]] for n, im in enumerate(p.in_modes)
+                )
+                out = mttkrp_pallas_call(
+                    op._dev["block_it"],
+                    op._dev["block_in"],
+                    op._dev["vals"],
+                    op._dev["iloc"],
+                    op._dev["in_locs"],
+                    in_facs,
+                    tile_i=p.tile_i,
+                    in_tiles=p.in_tiles,
+                    blk=p.blk,
+                    out_rows=p.out_rows,
+                    interpret=op.interpret,
+                )
+                mt = out[: shape[m], :rank]
+                true = [f[:s, :rank] for f, s in zip(facs, shape)]
+                true, lam = _update_mode(mt, true, m, first)
+                # Re-pad in place of the old padded factor (padding rows and
+                # lanes stay exactly zero, so grams/fit in padded space match
+                # the true-shape computation bit for bit).
+                f = true[m]
+                facs[m] = jnp.zeros((prows[m], rp), f.dtype).at[: shape[m], :rank].set(f)
+            true = [f[:s, :rank] for f, s in zip(facs, shape)]
+            fit = fit_value(idx, val, true, lam, norm_x_sq)
+            return tuple(facs), lam, fit
+
+        return jax.jit(sweep, static_argnames=("first",))
+
+    def sweep(self, facs, idx, val, norm_x_sq, *, first: bool = False):
+        """One jitted ALS iteration in padded space.  Returns
+        (new padded factors, lam, fit scalar on device)."""
+        if self._sweep_fn is None:
+            self._sweep_fn = self._build_sweep()
+        return self._sweep_fn(facs, idx, val, norm_x_sq, first=first)
 
     def mttkrp_fn(self, indices, values, factors, mode, out_rows):
         """The `cp_als(mttkrp_fn=...)` seam: the stream args are ignored —
@@ -180,6 +271,57 @@ def make_planned_cp_als(
     return PlannedCPALS(ops=ops, shape=st.shape, rank=rank)
 
 
+# ---------------------------------------------------------------------------
+# Keyed plan cache for the one-shot dispatcher
+# ---------------------------------------------------------------------------
+
+_PLAN_CACHE: OrderedDict[tuple, PlannedMTTKRP] = OrderedDict()
+_PLAN_CACHE_CAP = 32  # LRU bound: each entry pins a device-resident layout
+_PLAN_CACHE_STATS = {"hits": 0, "misses": 0}
+
+
+def plan_cache_stats() -> dict[str, int]:
+    """Hit/miss counters of the `mttkrp_auto` plan cache (bench_e2e reports
+    them: a hit means a call skipped the whole remap/layout build)."""
+    return dict(_PLAN_CACHE_STATS)
+
+
+def plan_cache_clear() -> None:
+    _PLAN_CACHE.clear()
+    _PLAN_CACHE_STATS["hits"] = 0
+    _PLAN_CACHE_STATS["misses"] = 0
+
+
+def _planned_mttkrp_cached(
+    st: SparseTensor,
+    mode: int,
+    rank: int,
+    cfg: MemoryControllerConfig | None,
+    interpret: bool,
+) -> PlannedMTTKRP:
+    """LRU-cached plan lookup keyed by (tensor content fingerprint, mode,
+    rank, controller config, interpret) — repeated test/benchmark calls stop
+    repaying the Tensor Remapper on every invocation."""
+    key = (
+        st.fingerprint(),
+        mode,
+        rank,
+        cfg or MemoryControllerConfig(),
+        bool(interpret),
+    )
+    op = _PLAN_CACHE.get(key)
+    if op is not None:
+        _PLAN_CACHE_STATS["hits"] += 1
+        _PLAN_CACHE.move_to_end(key)
+        return op
+    _PLAN_CACHE_STATS["misses"] += 1
+    op = make_planned_mttkrp(st, mode, rank, cfg=cfg, interpret=interpret)
+    _PLAN_CACHE[key] = op
+    while len(_PLAN_CACHE) > _PLAN_CACHE_CAP:
+        _PLAN_CACHE.popitem(last=False)
+    return op
+
+
 def mttkrp_auto(
     st: SparseTensor,
     factors: Sequence[jax.Array],
@@ -191,14 +333,15 @@ def mttkrp_auto(
     sorted_by_mode: bool | None = None,
 ) -> jax.Array:
     """One-shot dispatcher used by tests/benchmarks: 'pallas' | 'approach1' |
-    'approach2'.
+    'approach2'.  The pallas path caches its BlockPlan keyed on the tensor's
+    content fingerprint (see `plan_cache_stats`).
 
     `sorted_by_mode` defaults to what the stream actually satisfies
     (`st.is_sorted_by(mode)`): `indices_are_sorted` is a correctness promise
     to XLA, not a hint, so it is never asserted for an unsorted stream."""
     rank = int(factors[0].shape[1])
     if method == "pallas":
-        op = make_planned_mttkrp(st, mode, rank, cfg=cfg, interpret=interpret)
+        op = _planned_mttkrp_cached(st, mode, rank, cfg, interpret)
         return op.output(factors, st.shape[mode])
     if sorted_by_mode is None:
         sorted_by_mode = st.is_sorted_by(mode)

@@ -1,0 +1,67 @@
+"""Benchmark-trajectory schema (repro/bench.py): the CI smoke job validates
+the freshly emitted BENCH_kernel.json with exactly these helpers, so schema
+drift must fail loudly here first."""
+import json
+
+import pytest
+
+from repro.bench import make_report, result_record, validate_file, validate_report, write_report
+
+
+def _results():
+    return [
+        result_record("plan_build_blk32", "medium", "speedup_x", 18.3, "x"),
+        result_record("als_iter_pallas", "small", "iter_s", 4.2, "s"),
+        result_record("plan_cache", "tiny", "hits", 2, "count"),
+    ]
+
+
+def test_make_report_valid():
+    report = make_report(_results())
+    validate_report(report)  # must not raise
+    assert isinstance(report["commit"], str) and report["commit"]
+    assert "T" in report["timestamp"]
+    assert len(report["results"]) == 3
+
+
+def test_result_record_rejects_bad_values():
+    with pytest.raises(ValueError, match="value"):
+        result_record("n", "p", "m", float("nan"), "s")
+    with pytest.raises(ValueError, match="value"):
+        result_record("n", "p", "m", float("inf"), "s")
+
+
+@pytest.mark.parametrize(
+    "mutate,match",
+    [
+        (lambda r: r.pop("commit"), "commit"),
+        (lambda r: r.update(commit=""), "commit"),
+        (lambda r: r.update(timestamp=7), "timestamp"),
+        (lambda r: r.update(results={}), "list"),
+        (lambda r: r.update(results=[]), "empty"),
+        (lambda r: r["results"].append({"name": "x"}), "missing field"),
+        (lambda r: r["results"][0].pop("unit"), "unit"),
+        (lambda r: r["results"][0].update(value="fast"), "number"),
+        (lambda r: r["results"][0].update(extra=1), "unknown"),
+    ],
+)
+def test_validate_report_rejects(mutate, match):
+    report = make_report(_results())
+    mutate(report)
+    with pytest.raises(ValueError, match=match):
+        validate_report(report)
+
+
+def test_write_and_validate_file_roundtrip(tmp_path):
+    path = tmp_path / "BENCH_kernel.json"
+    report = write_report(path, _results())
+    loaded = validate_file(path)
+    assert loaded == report
+    assert json.loads(path.read_text())["results"][0]["name"] == "plan_build_blk32"
+
+
+def test_validate_file_rejects_corrupt(tmp_path):
+    path = tmp_path / "bad.json"
+    path.write_text(json.dumps({"commit": "abc", "results": []}))
+    with pytest.raises(ValueError):
+        validate_file(path)

@@ -10,7 +10,12 @@ from repro.core.coo import SparseTensor, frostt_like, random_factors, synthetic_
 from repro.core.memctrl import CacheEngineConfig, DMAEngineConfig, MemoryControllerConfig
 from repro.core.remap import plan_blocks
 from repro.kernels.mttkrp_pallas import mttkrp_pallas_call, pad_factor, rank_padded
-from repro.kernels.ops import make_planned_mttkrp, mttkrp_auto
+from repro.kernels.ops import (
+    make_planned_mttkrp,
+    mttkrp_auto,
+    plan_cache_clear,
+    plan_cache_stats,
+)
 from repro.kernels.ref import mttkrp_plan_ref, mttkrp_ref
 
 
@@ -175,6 +180,64 @@ def test_kernel_property_random_shapes(nnz, dims, mode, seed, blk):
         dma=DMAEngineConfig(blk=blk),
     )
     _check(st_t, mode, 8, cfg=cfg, rtol=5e-4)
+
+
+def test_plan_cache_hits_and_counters(tiny_tensor):
+    """mttkrp_auto(method='pallas') must not rebuild the BlockPlan on every
+    call: same (tensor, mode, rank, cfg) -> cache hit; a different mode or
+    config -> miss.  Counters feed bench_e2e."""
+    import repro.kernels.ops as ops_mod
+
+    plan_cache_clear()
+    assert plan_cache_stats() == {"hits": 0, "misses": 0}
+    calls = []
+    orig = ops_mod.plan_blocks
+
+    def counting(*a, **k):
+        calls.append(a)
+        return orig(*a, **k)
+
+    facs = random_factors(jax.random.PRNGKey(0), tiny_tensor.shape, 8)
+    try:
+        ops_mod.plan_blocks = counting
+        out1 = mttkrp_auto(tiny_tensor, facs, 0, method="pallas")
+        out2 = mttkrp_auto(tiny_tensor, facs, 0, method="pallas")
+        assert len(calls) == 1  # second call served from the plan cache
+        assert plan_cache_stats() == {"hits": 1, "misses": 1}
+        np.testing.assert_array_equal(np.asarray(out1), np.asarray(out2))
+        mttkrp_auto(tiny_tensor, facs, 1, method="pallas")  # new mode -> miss
+        assert plan_cache_stats() == {"hits": 1, "misses": 2}
+        cfg = MemoryControllerConfig(
+            cache=CacheEngineConfig(tile_i=32, tile_j=32, tile_k=32),
+            dma=DMAEngineConfig(blk=32),
+        )
+        mttkrp_auto(tiny_tensor, facs, 0, method="pallas", cfg=cfg)  # new cfg -> miss
+        assert plan_cache_stats() == {"hits": 1, "misses": 3}
+        assert len(calls) == 3
+    finally:
+        ops_mod.plan_blocks = orig
+        plan_cache_clear()
+
+
+def test_plan_cache_keys_on_content(tiny_tensor):
+    """The cache key is a content fingerprint: a distinct SparseTensor object
+    with identical contents hits; changing one value misses."""
+    plan_cache_clear()
+    facs = random_factors(jax.random.PRNGKey(1), tiny_tensor.shape, 8)
+    mttkrp_auto(tiny_tensor, facs, 0, method="pallas")
+    clone = SparseTensor(
+        tiny_tensor.indices.copy(), tiny_tensor.values.copy(), tiny_tensor.shape
+    )
+    mttkrp_auto(clone, facs, 0, method="pallas")
+    assert plan_cache_stats() == {"hits": 1, "misses": 1}
+    bumped = SparseTensor(
+        tiny_tensor.indices.copy(),
+        np.concatenate([[np.float32(2.0) * tiny_tensor.values[0]], tiny_tensor.values[1:]]),
+        tiny_tensor.shape,
+    )
+    mttkrp_auto(bumped, facs, 0, method="pallas")
+    assert plan_cache_stats() == {"hits": 1, "misses": 2}
+    plan_cache_clear()
 
 
 def test_kernel_single_flush_traffic(tiny_tensor):

@@ -10,7 +10,9 @@ from repro.core.coo import SparseTensor, synthetic_tensor
 from repro.core.remap import (
     group_key,
     plan_blocks,
+    plan_blocks_reference,
     pointer_table,
+    radix_digits,
     remap_pointer_machine,
     remap_radix,
     remap_stable,
@@ -74,6 +76,81 @@ def test_remap_is_stable_sort_property(nnz, shape, mode, seed):
     # stability: within equal coords, perm increasing
     for v in np.unique(c):
         assert np.all(np.diff(perm[c == v]) > 0)
+
+
+@pytest.mark.parametrize("budget", [2, 4, 16])
+@pytest.mark.parametrize("power", [1, 2, 3])
+def test_radix_digits_exact_powers(budget, power):
+    """Regression: digit count at nbins == budget**k must be exactly k — the
+    float-log formulation (ceil(log(nbins)/log(budget))) returned k+1 at some
+    exact powers (log(64)/log(4) = 3.0000000000000004)."""
+    nbins = budget**power
+    assert radix_digits(nbins, budget) == power
+    assert radix_digits(nbins + 1, budget) == power + 1
+    assert radix_digits(max(nbins - 1, 1), budget) <= power
+
+
+def test_remap_radix_exact_power_of_budget():
+    """remap_radix at nbins == budget**k (the former float-log off-by-one
+    point) still reproduces the unbounded stable sort."""
+    st_t = synthetic_tensor((70, 64, 50), 3_000, seed=11, skew=0.7)  # 64 = 4**3
+    idx, val = jnp.asarray(st_t.indices), jnp.asarray(st_t.values)
+    si, sv, _ = remap_stable(idx, val, 1)
+    ri, rv, _ = remap_radix(idx, val, 1, 64, 4)
+    np.testing.assert_array_equal(np.asarray(si), np.asarray(ri))
+    np.testing.assert_array_equal(np.asarray(sv), np.asarray(rv))
+
+
+_PARITY_SHAPES = {
+    3: (40, 30, 50),
+    4: (20, 15, 25, 10),
+    5: (12, 10, 14, 8, 9),
+}
+
+
+@settings(max_examples=30, deadline=None)
+@given(
+    nmodes=st.sampled_from([3, 4, 5]),
+    nnz=st.integers(1, 300),
+    seed=st.integers(0, 10_000),
+    tiles=st.sampled_from([(8, 8, 8, 16), (16, 8, 4, 8), (32, 16, 16, 32), (7, 5, 3, 4)]),
+)
+def test_plan_blocks_matches_reference_property(nmodes, nnz, seed, tiles):
+    """Parity property: the vectorized scatter build is bit-identical to the
+    per-group loop reference — every stream array, the block order, the tile
+    metadata, and the locality statistics — on random 3/4/5-mode tensors."""
+    shape = _PARITY_SHAPES[nmodes]
+    mode = seed % nmodes
+    st_t = synthetic_tensor(shape, nnz, seed=seed, skew=0.7)
+    ti, tj, tk, blk = tiles
+    kw = dict(tile_i=ti, tile_j=tj, tile_k=tk, blk=blk)
+    a = plan_blocks(st_t, mode, **kw)
+    b = plan_blocks_reference(st_t, mode, **kw)
+    np.testing.assert_array_equal(a.vals, b.vals)
+    np.testing.assert_array_equal(a.iloc, b.iloc)
+    np.testing.assert_array_equal(a.block_it, b.block_it)
+    assert len(a.in_locs) == len(b.in_locs) and len(a.block_in) == len(b.block_in)
+    for x, y in zip(a.in_locs, b.in_locs):
+        np.testing.assert_array_equal(x, y)
+    for x, y in zip(a.block_in, b.block_in):
+        np.testing.assert_array_equal(x, y)
+    assert a.vals.dtype == b.vals.dtype and a.iloc.dtype == b.iloc.dtype
+    assert a.block_it.dtype == b.block_it.dtype
+    assert (a.tile_i, a.in_tiles, a.blk) == (b.tile_i, b.in_tiles, b.blk)
+    assert (a.out_rows, a.in_rows, a.mode, a.in_modes, a.nnz) == (
+        b.out_rows, b.in_rows, b.mode, b.in_modes, b.nnz)
+    assert a.tile_fills() == b.tile_fills()
+
+
+@pytest.mark.parametrize("tiles", [(8, 8, 8, 16), (16, 32, 8, 8), (64, 64, 64, 128)])
+def test_plan_blocks_reference_invariants(tiny_tensor, tiles):
+    """The loop reference satisfies the same layout invariants as the
+    production build (it is the executable spec, not dead code)."""
+    ti, tj, tk, blk = tiles
+    plan = plan_blocks_reference(tiny_tensor, 0, tile_i=ti, tile_j=tj, tile_k=tk, blk=blk)
+    assert plan.a_tile_single_flush()
+    assert plan.vals.shape[0] == plan.nblocks * blk
+    assert np.isclose(plan.vals.sum(), tiny_tensor.values.sum(), atol=1e-3)
 
 
 @pytest.mark.parametrize("tiles", [(8, 8, 8, 16), (16, 32, 8, 8), (64, 64, 64, 128)])
