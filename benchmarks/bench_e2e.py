@@ -17,7 +17,11 @@ Sections
                  solve -> normalize + on-device fit) for the planned Pallas
                  path (interpret mode on CPU) and the pure-JAX approaches.
   plan_cache     mttkrp_auto(method='pallas') keyed plan cache: first vs
-                 cached call, hit/miss counters.
+                 cached call, hit/miss counters (mttkrp kind).
+  tucker_*       the second workload on the same substrate: PlannedTucker
+                 plan-build time, one jitted HOOI iteration (every mode's
+                 TTMc -> Gram eigh -> factor update + core/fit), and the
+                 tucker_auto side of the kind-keyed plan cache.
 
   PYTHONPATH=src python benchmarks/bench_e2e.py [--fast] [--out PATH]
 """
@@ -145,10 +149,62 @@ def bench_plan_cache(results, preset: str, rank: int):
           f"hits={stats['hits']} misses={stats['misses']}")
 
 
+def bench_tucker(results, presets, core_rank: int, reps: int):
+    """Sparse Tucker HOOI on the planned TTM-chain kernel: layout-build cost,
+    steady-state jitted iteration, and the ttmc side of the plan cache."""
+    print("== tucker: plan build / jitted HOOI iteration / tucker_auto cache")
+    from repro.tucker import init_tucker_factors, make_planned_tucker
+
+    key = jax.random.PRNGKey(0)
+    for preset in presets:
+        st = frostt_like(preset)
+        ranks = (core_rank,) * st.nmodes
+        nxs = _norm_x_sq(st)
+
+        built = []
+        t_plan = _timed(lambda: built.append(make_planned_tucker(st, ranks, interpret=True)))
+        ws = built[0]
+        facs = ws.pad_factors(init_tucker_factors(key, st.shape, ranks))
+        facs, core, fit = ws.sweep(facs, nxs)
+        facs, core, fit = ws.sweep(facs, nxs)  # compile + steady state
+        jax.block_until_ready(fit)
+        t0 = time.perf_counter()
+        for _ in range(reps):
+            facs, core, fit = ws.sweep(facs, nxs)
+        jax.block_until_ready(fit)
+        t_iter = (time.perf_counter() - t0) / reps
+        results += [
+            result_record("tucker_plan_build", preset, "plan_s", t_plan, "s"),
+            result_record("tucker_hooi_iter", preset, "iter_s", t_iter, "s"),
+        ]
+        print(f"  {preset:10s} plan={t_plan:8.3f}s hooi(interpret) iter={t_iter:8.3f}s "
+              f"(plans: {ws.plan_bytes()/2**20:.1f} MiB, core ranks {ranks})")
+
+    # kind-keyed plan cache, ttmc side (mirrors bench_plan_cache)
+    st = frostt_like("tiny")
+    facs = random_factors(jax.random.PRNGKey(0), st.shape, core_rank)
+    ops.plan_cache_clear()
+    t_first = _timed(lambda: jax.block_until_ready(ops.tucker_auto(st, facs, 0)))
+    t_cached = min(
+        _timed(lambda: jax.block_until_ready(ops.tucker_auto(st, facs, 0)))
+        for _ in range(2)
+    )
+    stats = ops.plan_cache_stats()["by_kind"]["ttmc"]
+    results += [
+        result_record("tucker_plan_cache", "tiny", "first_call_s", t_first, "s"),
+        result_record("tucker_plan_cache", "tiny", "cached_call_s", t_cached, "s"),
+        result_record("tucker_plan_cache", "tiny", "hits", stats["hits"], "count"),
+        result_record("tucker_plan_cache", "tiny", "misses", stats["misses"], "count"),
+    ]
+    print(f"  tiny       first={t_first:.3f}s cached={t_cached:.3f}s "
+          f"hits={stats['hits']} misses={stats['misses']} (ttmc kind)")
+
+
 def main(fast: bool = False, out: str | None = None) -> dict:
     plan_presets = ("small", "4d_small", "5d_small") if fast else (
         "small", "medium", "4d_small", "5d_small")
     als_presets = ("small", "4d_small", "5d_small")
+    tucker_presets = ("tiny",) if fast else ("small", "4d_small")
     reps = 1 if fast else 3
     rank = 16
 
@@ -157,6 +213,7 @@ def main(fast: bool = False, out: str | None = None) -> dict:
     bench_plan_build(plan_presets, results, reps=max(2, reps))
     bench_als_iter(als_presets, results, rank=rank, reps=reps)
     bench_plan_cache(results, preset="tiny", rank=rank)
+    bench_tucker(results, tucker_presets, core_rank=4, reps=reps)
 
     path = Path(out) if out else ROOT / "BENCH_kernel.json"
     report = write_report(path, results)

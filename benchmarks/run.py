@@ -2,10 +2,16 @@
 dispatch experiment and (if dry-run artifacts exist) the roofline table.
 
   PYTHONPATH=src python -m benchmarks.run [--quick]
+
+--quick runs only the kernel-side sections (traffic models, remapper, PMS,
+kernel layout, and the end-to-end fast path covering BOTH decompositions —
+CP-ALS and Tucker HOOI), skipping the LM-side extras.  The end-to-end
+section always writes to a scratch path so neither mode clobbers the
+committed full-run baseline JSON at the repo root.
 """
 from __future__ import annotations
 
-import sys
+import argparse
 import time
 
 
@@ -13,7 +19,7 @@ def _section(title: str):
     print(f"\n{'='*72}\n== {title}\n{'='*72}")
 
 
-def main() -> None:
+def main(quick: bool = False) -> None:
     t0 = time.time()
 
     _section("Table 1 / Sec.3 — Approach 1 vs Approach 2 (traffic + time)")
@@ -32,7 +38,8 @@ def main() -> None:
     from . import bench_kernel
     bench_kernel.main()
 
-    _section("End-to-end fast path (plan build / jitted ALS iter / plan cache)")
+    _section("End-to-end fast path (plan build / jitted CP-ALS iter / "
+             "Tucker HOOI iter / plan caches)")
     import tempfile
     from . import bench_e2e
     # Write to a scratch path: the fast-mode subset must not clobber the
@@ -40,16 +47,20 @@ def main() -> None:
     with tempfile.TemporaryDirectory() as td:
         bench_e2e.main(fast=True, out=f"{td}/BENCH_kernel.json")
 
-    _section("MoE dispatch: the paper's approaches on the LM side")
-    from . import bench_moe_dispatch
-    bench_moe_dispatch.main()
+    if not quick:
+        _section("MoE dispatch: the paper's approaches on the LM side")
+        from . import bench_moe_dispatch
+        bench_moe_dispatch.main()
 
-    _section("Roofline (from dry-run artifacts, if present)")
-    from . import roofline
-    roofline.main()
+        _section("Roofline (from dry-run artifacts, if present)")
+        from . import roofline
+        roofline.main()
 
     print(f"\n[benchmarks] total {time.time()-t0:.1f}s")
 
 
 if __name__ == "__main__":
-    main()
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="kernel-side sections only (both decompositions)")
+    main(quick=ap.parse_args().quick)

@@ -1,10 +1,17 @@
-"""Quickstart: decompose a synthetic FROSTT-like sparse tensor with CP-ALS,
-with the memory-controller-planned Pallas MTTKRP as the compute engine —
-`cp_als(method="pallas")` builds a `PlannedCPALS` workspace (one remapped,
-device-resident BlockPlan per output mode, paper Alg. 5) once and reuses it
-for every ALS iteration (paper Alg. 1).
+"""Quickstart: decompose a synthetic FROSTT-like sparse tensor on the
+memory-controller-planned Pallas kernels — both decompositions the substrate
+serves run from this one entry point:
 
-  PYTHONPATH=src python examples/quickstart.py [--fast]
+  * --algo cp      (default)  CP-ALS on the planned MTTKRP kernel:
+    `cp_als(method="pallas")` builds a `PlannedCPALS` workspace (one
+    remapped, device-resident BlockPlan per output mode, paper Alg. 5) once
+    and reuses it for every ALS iteration (paper Alg. 1).
+  * --algo tucker             Sparse Tucker (HOOI) on the planned TTM-chain
+    kernel: `tucker_hooi(method="pallas")` drives the same per-mode BlockPlan
+    layouts through the Kronecker-chain kernel — the controller is
+    programmable, not CP-specific.
+
+  PYTHONPATH=src python examples/quickstart.py [--algo {cp,tucker}] [--fast]
 """
 import argparse
 import time
@@ -16,29 +23,29 @@ from repro.core.cp_als import cp_als
 from repro.core.hypergraph import approach1_traffic, approach2_traffic, remap_overhead
 from repro.core.pms import search
 from repro.kernels.ops import make_planned_cp_als
+from repro.tucker import make_planned_tucker, tucker_hooi
 
 
-def main(fast: bool = False):
-    # 1. A sparse tensor shaped like the FROSTT repository's (paper Table 2)
-    st = frostt_like("tiny" if fast else "small")
-    rank = 16
-    print(f"tensor: shape={st.shape} nnz={st.nnz:,} density={st.density:.2e}")
-
-    # 2. The paper's Table 1: why Approach 1 (output-direction) wins
-    t1 = approach1_traffic(st, 0, rank)
-    t2 = approach2_traffic(st, 0, rank)
-    print(f"traffic (elements): approach1={t1.total_elems:,} approach2={t2.total_elems:,} "
-          f"(x{t2.total_elems/t1.total_elems:.2f}); remap overhead={remap_overhead(st, 0, rank):.2%}")
-
-    # 3. PMS (Sec 5.3): pick the memory-controller configuration
-    best = search(st, 0, rank, top_k=3)
+def _print_pms(best):
     for e in best:
         c, d = e.cfg.cache, e.cfg.dma
         print(f"PMS: tiles=({c.tile_i},{c.tile_j},{c.tile_k}) blk={d.blk} "
               f"-> t={e.t_total*1e6:.1f}us [{e.bottleneck}-bound] vmem={e.vmem_bytes/2**20:.0f}MiB")
 
-    # 4. CP-ALS entirely on the planned Pallas kernel (interpret mode on CPU):
-    #    plans are built once per mode and amortized over all iterations.
+
+def run_cp(st, fast: bool):
+    rank = 16
+    # The paper's Table 1: why Approach 1 (output-direction) wins
+    t1 = approach1_traffic(st, 0, rank)
+    t2 = approach2_traffic(st, 0, rank)
+    print(f"traffic (elements): approach1={t1.total_elems:,} approach2={t2.total_elems:,} "
+          f"(x{t2.total_elems/t1.total_elems:.2f}); remap overhead={remap_overhead(st, 0, rank):.2%}")
+
+    # PMS (Sec 5.3): pick the memory-controller configuration for MTTKRP
+    _print_pms(search(st, 0, rank, top_k=3))
+
+    # CP-ALS entirely on the planned Pallas kernel (interpret mode on CPU):
+    # plans are built once per mode and amortized over all iterations.
     small = frostt_like("tiny")
     planned = make_planned_cp_als(small, 8, interpret=True)
     print(f"planned workspace: {small.nmodes} mode plans, "
@@ -50,14 +57,56 @@ def main(fast: bool = False):
     print(f"CP-ALS fit={state.fit_history[-1]:.4f} in {time.time()-t0:.1f}s "
           f"(PlannedCPALS, interpret mode)")
 
-    # 5. The same workspace drives higher-order tensors (Table 2 has 3–5 modes)
+    # The same workspace drives higher-order tensors (Table 2 has 3–5 modes)
     if not fast:
         st4 = frostt_like("4d_small")
         s4 = cp_als(st4, rank=8, iters=2, method="pallas")
         print(f"4-mode CP-ALS fit={s4.fit_history[-1]:.4f} (N-mode kernel)")
 
 
+def run_tucker(st, fast: bool):
+    core_ranks = (8, 8, 8)
+    # PMS scored for the TTM-chain kernel: the core-tensor tile (Kronecker
+    # width prod(R_m) lanes) changes both the VMEM fit and the roofline.
+    _print_pms(search(st, 0, 16, kernel="ttmc", core_ranks=core_ranks, top_k=3))
+
+    # HOOI entirely on the planned TTMc kernel — the SAME BlockPlan layouts
+    # MTTKRP uses, built once per mode and amortized over all iterations.
+    small = frostt_like("tiny")
+    ranks_small = (4, 4, 4)
+    planned = make_planned_tucker(small, ranks_small, interpret=True)
+    print(f"planned workspace: {small.nmodes} mode plans, "
+          f"{planned.plan_bytes()/2**20:.2f} MiB of remapped copies on HBM")
+
+    iters = 2 if fast else 5
+    t0 = time.time()
+    state = tucker_hooi(small, ranks_small, iters=iters, method="pallas",
+                        planned=planned, verbose=True)
+    print(f"Tucker HOOI fit={state.fit_history[-1]:.4f} core={state.core.shape} "
+          f"in {time.time()-t0:.1f}s (PlannedTucker, interpret mode)")
+
+    if not fast:
+        st4 = frostt_like("4d_small")
+        s4 = tucker_hooi(st4, (3, 3, 3, 3), iters=2, method="pallas")
+        print(f"4-mode Tucker fit={s4.fit_history[-1]:.4f} (N-mode TTMc kernel)")
+
+
+def main(fast: bool = False, algo: str = "cp"):
+    # A sparse tensor shaped like the FROSTT repository's (paper Table 2)
+    st = frostt_like("tiny" if fast else "small")
+    print(f"tensor: shape={st.shape} nnz={st.nnz:,} density={st.density:.2e} algo={algo}")
+    if algo == "cp":
+        run_cp(st, fast)
+    elif algo == "tucker":
+        run_tucker(st, fast)
+    else:
+        raise ValueError(f"unknown algo {algo!r}: expected 'cp' or 'tucker'")
+
+
 if __name__ == "__main__":
     ap = argparse.ArgumentParser()
     ap.add_argument("--fast", action="store_true", help="CI smoke subset")
-    main(fast=ap.parse_args().fast)
+    ap.add_argument("--algo", choices=("cp", "tucker"), default="cp",
+                    help="decomposition to run on the planned kernels")
+    a = ap.parse_args()
+    main(fast=a.fast, algo=a.algo)

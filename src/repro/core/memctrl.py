@@ -90,3 +90,29 @@ class MemoryControllerConfig:
 
     def fits(self, spec: TPUSpec, rank_padded: int, n_in: int = 2) -> bool:
         return self.vmem_bytes(rank_padded, n_in) <= spec.vmem_bytes * spec.vmem_usable_frac
+
+    def vmem_bytes_ttmc(self, out_cols_padded: int, in_rank_pads: tuple[int, ...]) -> int:
+        """VMEM footprint of one TTM-chain kernel instance (per buffer set).
+
+        Differs from the MTTKRP model in the tile widths: the output
+        accumulator is a *core-tensor slice* of out_cols_padded =
+        cols_padded(prod input ranks) lanes — the Kronecker chain widens the
+        accumulator multiplicatively in the ranks, which is exactly why the
+        TTMc search needs its own fit constraint — and each resident input
+        factor tile carries its own lane padding rank_padded(R_m) instead of
+        a shared R_pad.  Stream cost is identical (same BlockPlan layout)."""
+        c, d, r = self.cache, self.dma, self.remapper
+        n_in = len(in_rank_pads)
+        tiles = (
+            c.tile_i * out_cols_padded
+            + sum(t * rp for t, rp in zip(c.input_tiles(n_in), in_rank_pads))
+            * c.resident_tiles
+        ) * r.value_bytes
+        stream = d.blk * (r.value_bytes + (n_in + 1) * r.index_bytes)
+        return d.buffers * (tiles + stream)
+
+    def fits_ttmc(self, spec: TPUSpec, out_cols_padded: int, in_rank_pads: tuple[int, ...]) -> bool:
+        return (
+            self.vmem_bytes_ttmc(out_cols_padded, in_rank_pads)
+            <= spec.vmem_bytes * spec.vmem_usable_frac
+        )

@@ -31,7 +31,15 @@ from .hypergraph import HypergraphStats, stats as hg_stats
 from .memctrl import MemoryControllerConfig, CacheEngineConfig, DMAEngineConfig, RemapperConfig, TPUSpec
 from .remap import BlockPlan, plan_blocks
 
-__all__ = ["PMSEstimate", "predict_from_plan", "predict_analytic", "search", "DEFAULT_TILE_CHOICES"]
+__all__ = [
+    "PMSEstimate",
+    "predict_from_plan",
+    "predict_analytic",
+    "predict_ttmc",
+    "predict_ttmc_analytic",
+    "search",
+    "DEFAULT_TILE_CHOICES",
+]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -123,6 +131,91 @@ def predict_from_plan(plan: BlockPlan, rank: int, cfg: MemoryControllerConfig, s
     )
 
 
+def _ttmc_kernel_times(
+    cfg: MemoryControllerConfig,
+    in_ranks: tuple[int, ...],
+    nblocks: int,
+    fills: dict[str, int],
+    spec: TPUSpec,
+    *,
+    tile_i: int | None = None,
+    in_tiles: tuple[int, ...] | None = None,
+    blk: int | None = None,
+) -> tuple[float, float, float, float]:
+    """Roofline terms for the TTM-chain kernel.  Same stream model as MTTKRP
+    (the BlockPlan layout is shared); the factor term pays each input mode's
+    own lane padding, the output term pays the core-tensor slice width
+    Pp = cols_padded(prod(in_ranks)), and compute adds the Kronecker-chain
+    widening (one (blk, P_k) elementwise multiply per input mode) on top of
+    the one-hot segment matmul."""
+    n_in = len(in_ranks)
+    pp = _rank_padded(math.prod(in_ranks))
+    c, r = cfg.cache, cfg.remapper
+    tile_i = c.tile_i if tile_i is None else tile_i
+    in_tiles = c.input_tiles(n_in) if in_tiles is None else in_tiles
+    blk = cfg.dma.blk if blk is None else blk
+    stream_bytes = nblocks * blk * (r.value_bytes + (n_in + 1) * r.index_bytes)
+    factor_bytes = (
+        sum(
+            fills[chr(ord("B") + n)] * t * _rank_padded(rk)
+            for n, (t, rk) in enumerate(zip(in_tiles, in_ranks))
+        )
+        * r.value_bytes
+    )
+    out_bytes = fills["A"] * tile_i * pp * r.value_bytes
+    # Kronecker chain: after input mode k the per-element row is prod(R_1..R_k)
+    # wide; each widening step is one multiply per produced element (+ the
+    # gather), then the one-hot segment matmul runs at the padded width.
+    widen = 0
+    p_k = 1
+    for rk in in_ranks:
+        p_k *= rk
+        widen += 2 * p_k
+    flops = nblocks * (2 * tile_i * blk * pp + blk * widen)
+    return (
+        stream_bytes / spec.hbm_bw,
+        factor_bytes / spec.hbm_bw,
+        out_bytes / spec.hbm_bw,
+        flops / spec.peak_flops_f32,
+    )
+
+
+def _ttmc_in_ranks(core_ranks: Sequence[int], mode: int) -> tuple[int, ...]:
+    return tuple(int(r) for m, r in enumerate(core_ranks) if m != mode)
+
+
+def _ttmc_vmem(cfg: MemoryControllerConfig, in_ranks: tuple[int, ...]) -> int:
+    return cfg.vmem_bytes_ttmc(
+        _rank_padded(math.prod(in_ranks)), tuple(_rank_padded(r) for r in in_ranks)
+    )
+
+
+def predict_ttmc(
+    plan: BlockPlan,
+    core_ranks: Sequence[int],
+    cfg: MemoryControllerConfig,
+    spec: TPUSpec = TPUSpec(),
+) -> PMSEstimate:
+    """Exact PMS terms for the TTM-chain kernel from a built memory layout
+    (measured fills/padding; the layout is the same one MTTKRP uses)."""
+    in_ranks = tuple(int(core_ranks[m]) for m in plan.in_modes)
+    fills = plan.tile_fills()
+    ts, tf, to, tc = _ttmc_kernel_times(
+        cfg, in_ranks, plan.nblocks, fills, spec,
+        tile_i=plan.tile_i, in_tiles=plan.in_tiles, blk=plan.blk,
+    )
+    return PMSEstimate(
+        cfg=cfg,
+        t_stream=ts,
+        t_factor=tf,
+        t_out=to,
+        t_compute=tc,
+        vmem_bytes=_ttmc_vmem(cfg, in_ranks),
+        nblocks=plan.nblocks,
+        padding_fraction=plan.padding_fraction(),
+    )
+
+
 def _expected_occupied(bins: float, balls: float) -> float:
     """E[# occupied bins] for `balls` uniform balls in `bins` bins."""
     if bins <= 1:
@@ -130,16 +223,12 @@ def _expected_occupied(bins: float, balls: float) -> float:
     return bins * (1.0 - math.exp(-balls / bins))
 
 
-def predict_analytic(
-    hs: HypergraphStats,
-    mode: int,
-    rank: int,
-    cfg: MemoryControllerConfig,
-    spec: TPUSpec = TPUSpec(),
-) -> PMSEstimate:
-    """Analytic PMS: no plan construction.  Estimates group structure with a
-    balls-in-bins occupancy model (skew makes it conservative: skewed tensors
-    have fewer, hotter groups, i.e. fewer fills than predicted)."""
+def _analytic_layout(
+    hs: HypergraphStats, mode: int, cfg: MemoryControllerConfig
+) -> tuple[int, dict[str, int], float]:
+    """Balls-in-bins occupancy estimate of the BlockPlan geometry — shared by
+    the MTTKRP and TTMc analytic predictors (the group structure depends only
+    on the layout, not the kernel).  Returns (nblocks, fills, padding)."""
     in_modes = [m for m in range(hs.nmodes) if m != mode]
     n_in = len(in_modes)
     c, d = cfg.cache, cfg.dma
@@ -154,8 +243,47 @@ def predict_analytic(
     for n in range(n_in):
         fills[chr(ord("B") + n)] = groups  # each id changes at most once/group
     fills = {k: int(max(1, v)) for k, v in fills.items()}
+    padding = max(0.0, 1.0 - hs.nnz / float(nblocks * d.blk))
+    return nblocks, fills, padding
+
+
+def predict_ttmc_analytic(
+    hs: HypergraphStats,
+    mode: int,
+    core_ranks: Sequence[int],
+    cfg: MemoryControllerConfig,
+    spec: TPUSpec = TPUSpec(),
+) -> PMSEstimate:
+    """Analytic TTMc PMS: the shared occupancy model (`_analytic_layout`)
+    with TTMc roofline terms."""
+    in_ranks = _ttmc_in_ranks(core_ranks, mode)
+    nblocks, fills, padding = _analytic_layout(hs, mode, cfg)
+    ts, tf, to, tc = _ttmc_kernel_times(cfg, in_ranks, nblocks, fills, spec)
+    return PMSEstimate(
+        cfg=cfg,
+        t_stream=ts,
+        t_factor=tf,
+        t_out=to,
+        t_compute=tc,
+        vmem_bytes=_ttmc_vmem(cfg, in_ranks),
+        nblocks=nblocks,
+        padding_fraction=padding,
+    )
+
+
+def predict_analytic(
+    hs: HypergraphStats,
+    mode: int,
+    rank: int,
+    cfg: MemoryControllerConfig,
+    spec: TPUSpec = TPUSpec(),
+) -> PMSEstimate:
+    """Analytic PMS: no plan construction.  Estimates group structure with a
+    balls-in-bins occupancy model (skew makes it conservative: skewed tensors
+    have fewer, hotter groups, i.e. fewer fills than predicted)."""
+    n_in = hs.nmodes - 1
+    nblocks, fills, padding = _analytic_layout(hs, mode, cfg)
     ts, tf, to, tc = _kernel_times(cfg, rank, nblocks, fills, spec, n_in=n_in)
-    padding = 1.0 - hs.nnz / float(nblocks * d.blk)
     return PMSEstimate(
         cfg=cfg,
         t_stream=ts,
@@ -164,7 +292,7 @@ def predict_analytic(
         t_compute=tc,
         vmem_bytes=cfg.vmem_bytes(_rank_padded(rank), n_in=n_in),
         nblocks=nblocks,
-        padding_fraction=max(0.0, padding),
+        padding_fraction=padding,
     )
 
 
@@ -182,10 +310,22 @@ def search(
     blk_choices: Sequence[int] = DEFAULT_BLK_CHOICES,
     exact: bool = False,
     top_k: int = 5,
+    kernel: str = "mttkrp",
+    core_ranks: Sequence[int] | None = None,
 ) -> list[PMSEstimate]:
     """Exhaustive module-by-module parameter search (paper Sec. 5.3), pruned
     by the VMEM-fit constraint.  exact=True builds a BlockPlan per candidate
-    (accurate, slower) — use for final configuration of a dataset domain."""
+    (accurate, slower) — use for final configuration of a dataset domain.
+
+    kernel: 'mttkrp' (CP-ALS, scored at `rank`) or 'ttmc' (Tucker HOOI,
+    scored at `core_ranks` — the full N-tuple; `rank` is ignored).  The
+    search tunes the controller *per kernel*: TTMc's core-tensor output tile
+    and per-factor lane paddings change both the VMEM constraint and the
+    roofline, so the best configuration generally differs from MTTKRP's."""
+    if kernel not in ("mttkrp", "ttmc"):
+        raise ValueError(f"unknown kernel {kernel!r}: expected 'mttkrp' or 'ttmc'")
+    if kernel == "ttmc" and core_ranks is None:
+        raise ValueError("kernel='ttmc' requires core_ranks (the full N-tuple)")
     if isinstance(st_or_stats, SparseTensor):
         hs = hg_stats(st_or_stats)
         st = st_or_stats
@@ -193,6 +333,14 @@ def search(
         hs, st = st_or_stats, None
         exact = False
     n_in = hs.nmodes - 1
+    if kernel == "ttmc":
+        if len(core_ranks) != hs.nmodes:
+            raise ValueError(
+                f"core_ranks has {len(core_ranks)} entries for a "
+                f"{hs.nmodes}-mode tensor (pass the full N-tuple, not the "
+                f"N-1 input ranks)"
+            )
+        in_ranks = _ttmc_in_ranks(core_ranks, mode)
 
     results: list[PMSEstimate] = []
     for ti, tj, tk, blk in itertools.product(tile_choices, tile_choices, tile_choices, blk_choices):
@@ -200,13 +348,26 @@ def search(
             cache=CacheEngineConfig(tile_i=ti, tile_j=tj, tile_k=tk),
             dma=DMAEngineConfig(blk=blk),
         )
-        if not cfg.fits(spec, _rank_padded(rank), n_in=n_in):
+        if kernel == "ttmc":
+            fits = cfg.fits_ttmc(
+                spec,
+                _rank_padded(math.prod(in_ranks)),
+                tuple(_rank_padded(r) for r in in_ranks),
+            )
+        else:
+            fits = cfg.fits(spec, _rank_padded(rank), n_in=n_in)
+        if not fits:
             continue
         if exact and st is not None:
             plan = plan_blocks(
                 st, mode, tile_i=ti, blk=blk, in_tiles=cfg.cache.input_tiles(n_in)
             )
-            results.append(predict_from_plan(plan, rank, cfg, spec))
+            if kernel == "ttmc":
+                results.append(predict_ttmc(plan, core_ranks, cfg, spec))
+            else:
+                results.append(predict_from_plan(plan, rank, cfg, spec))
+        elif kernel == "ttmc":
+            results.append(predict_ttmc_analytic(hs, mode, core_ranks, cfg, spec))
         else:
             results.append(predict_analytic(hs, mode, rank, cfg, spec))
     results.sort(key=lambda e: e.t_total)

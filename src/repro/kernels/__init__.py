@@ -1,30 +1,52 @@
-"""Pallas MTTKRP kernel layer: the BlockPlan-driven memory controller
-(mttkrp_pallas), plan construction + dispatch (ops), and pure-jnp oracles
-(ref)."""
+"""Pallas kernel layer: the BlockPlan-driven memory controller for MTTKRP
+(mttkrp_pallas) and the Tucker TTM-chain (ttm_pallas), plan construction +
+dispatch (ops), and pure-jnp oracles (ref)."""
 from .mttkrp_pallas import mttkrp_pallas_call, pad_factor, rank_padded
+from .ttm_pallas import cols_padded, kron_cols, ttmc_pallas_call
 from .ops import (
     PlannedCPALS,
     PlannedMTTKRP,
+    PlannedTTMC,
     make_planned_cp_als,
     make_planned_mttkrp,
+    make_planned_ttmc,
     mttkrp_auto,
     plan_cache_clear,
     plan_cache_stats,
+    planned_padded_rows,
+    tucker_auto,
 )
-from .ref import mttkrp_ref, mttkrp_ref_dense, mttkrp_plan_ref
+from .ref import (
+    mttkrp_plan_ref,
+    mttkrp_ref,
+    mttkrp_ref_dense,
+    ttmc_plan_ref,
+    ttmc_ref,
+    ttmc_ref_dense,
+)
 
 __all__ = [
     "mttkrp_pallas_call",
     "pad_factor",
     "rank_padded",
+    "ttmc_pallas_call",
+    "cols_padded",
+    "kron_cols",
     "PlannedCPALS",
     "PlannedMTTKRP",
+    "PlannedTTMC",
     "make_planned_cp_als",
     "make_planned_mttkrp",
+    "make_planned_ttmc",
     "mttkrp_auto",
+    "tucker_auto",
     "plan_cache_clear",
     "plan_cache_stats",
+    "planned_padded_rows",
     "mttkrp_ref",
     "mttkrp_ref_dense",
     "mttkrp_plan_ref",
+    "ttmc_ref",
+    "ttmc_ref_dense",
+    "ttmc_plan_ref",
 ]

@@ -1,12 +1,25 @@
-"""Jit'd wrappers for the MTTKRP kernels: plan construction + padding +
-dispatch between the Pallas kernel, its interpret-mode validation path, and
-the pure-JAX approaches.
+"""Jit'd wrappers for the decomposition kernels: plan construction + padding +
+dispatch between the Pallas kernels, their interpret-mode validation paths,
+and the pure-JAX references.
+
+Two kernel families share the BlockPlan substrate (the memory controller is
+*programmable*, not MTTKRP-specific):
+  * MTTKRP  — `PlannedMTTKRP` / `mttkrp_auto` / `PlannedCPALS` (CP-ALS,
+              paper Alg. 1 + Alg. 5);
+  * TTMc    — `PlannedTTMC` / `tucker_auto` (sparse Tucker HOOI; see
+              repro.tucker).  Same remapped layout, Kronecker-chain compute.
 
 `PlannedCPALS` is the workspace that makes the Pallas kernel the *production*
 decomposition path (paper Alg. 1 + Alg. 5): one PMS-tunable BlockPlan +
 device-resident layout per output mode, built once and cached across every
 ALS iteration (the paper's layout="copies" posture — per-mode remapped
-copies, a legitimate space/time trade on HBM).
+copies, a legitimate space/time trade on HBM).  `PlannedTucker`
+(repro.tucker.hooi) mirrors it for the HOOI loop.
+
+The one-shot dispatchers share a keyed LRU plan cache.  The key leads with a
+kernel-kind discriminator ("mttkrp" / "ttmc"): two kernels sharing a tensor
+fingerprint + mode + rank must never silently reuse each other's plans (the
+layouts coincide today, but the cached objects carry kernel-specific state).
 """
 from __future__ import annotations
 
@@ -24,16 +37,67 @@ from ..core.pms import search as pms_search
 from ..core.remap import BlockPlan, plan_blocks
 from ..core.mttkrp import mttkrp as mttkrp_jax
 from .mttkrp_pallas import mttkrp_pallas_call, pad_factor, rank_padded
+from .ref import ttmc_ref
+from .ttm_pallas import kron_cols, ttmc_pallas_call
 
 __all__ = [
     "PlannedMTTKRP",
     "make_planned_mttkrp",
     "PlannedCPALS",
     "make_planned_cp_als",
+    "PlannedTTMC",
+    "make_planned_ttmc",
     "mttkrp_auto",
+    "tucker_auto",
     "plan_cache_stats",
     "plan_cache_clear",
+    "planned_padded_rows",
+    "planned_layout_bytes",
 ]
+
+
+def _plan_device_arrays(plan: BlockPlan) -> dict:
+    """Move a BlockPlan's layout to device in the shape the kernels consume:
+    (nblocks, blk) stream tiles + per-block tile-id streams."""
+    nb, blk = plan.nblocks, plan.blk
+    return dict(
+        block_it=jnp.asarray(plan.block_it),
+        block_in=tuple(jnp.asarray(t) for t in plan.block_in),
+        vals=jnp.asarray(plan.vals).reshape(nb, blk),
+        iloc=jnp.asarray(plan.iloc).reshape(nb, blk),
+        in_locs=tuple(jnp.asarray(l).reshape(nb, blk) for l in plan.in_locs),
+    )
+
+
+def planned_layout_bytes(ops: dict[int, "PlannedMTTKRP | PlannedTTMC"]) -> int:
+    """HBM held by a per-mode plan family's remapped layouts (the 'copies'
+    space/time trade, Sec. 3).  Element widths come from each mode's Remapper
+    configuration; identical for MTTKRP and TTMc — the layout is shared."""
+    total = 0
+    for op in ops.values():
+        p, r = op.plan, op.cfg.remapper
+        slots = p.vals.shape[0]
+        total += slots * (r.value_bytes + (1 + p.n_in) * r.index_bytes)
+        total += p.nblocks * (1 + p.n_in) * r.index_bytes
+    return total
+
+
+def planned_padded_rows(ops: dict[int, "PlannedMTTKRP | PlannedTTMC"], nmodes: int) -> tuple[int, ...]:
+    """Device-resident row padding per mode for a per-mode plan family: the
+    largest padding any plan requires of that factor (its own plan's
+    out_rows, plus in_rows wherever it appears as an input mode).  Each
+    plan's kernel slices the rows it needs — a static, zero-copy slice
+    inside a sweep jit."""
+    rows = []
+    for m in range(nmodes):
+        r = ops[m].plan.out_rows
+        for op in ops.values():
+            p = op.plan
+            for n, im in enumerate(p.in_modes):
+                if im == m:
+                    r = max(r, p.in_rows[n])
+        rows.append(r)
+    return tuple(rows)
 
 
 @dataclasses.dataclass
@@ -50,15 +114,7 @@ class PlannedMTTKRP:
     _dev: dict = dataclasses.field(default_factory=dict)
 
     def __post_init__(self):
-        p = self.plan
-        nb, blk = p.nblocks, p.blk
-        self._dev = dict(
-            block_it=jnp.asarray(p.block_it),
-            block_in=tuple(jnp.asarray(t) for t in p.block_in),
-            vals=jnp.asarray(p.vals).reshape(nb, blk),
-            iloc=jnp.asarray(p.iloc).reshape(nb, blk),
-            in_locs=tuple(jnp.asarray(l).reshape(nb, blk) for l in p.in_locs),
-        )
+        self._dev = _plan_device_arrays(self.plan)
 
     def __call__(self, *in_factors: jax.Array) -> jax.Array:
         """Factors for the N-1 *input* modes (plan.in_modes order).
@@ -122,6 +178,111 @@ def make_planned_mttkrp(
 
 
 @dataclasses.dataclass
+class PlannedTTMC:
+    """A compiled memory-controller instance of the TTM-chain kernel for one
+    (tensor, output mode): the same device-resident BlockPlan layout as
+    MTTKRP, driving the Kronecker-chain Pallas kernel (repro.tucker HOOI's
+    per-mode contraction).  `in_ranks` are the input-factor ranks in
+    plan.in_modes order; the output has prod(in_ranks) true columns."""
+
+    plan: BlockPlan
+    in_ranks: tuple[int, ...]
+    interpret: bool
+    cfg: MemoryControllerConfig = dataclasses.field(
+        default_factory=MemoryControllerConfig
+    )
+    _dev: dict = dataclasses.field(default_factory=dict)
+
+    def __post_init__(self):
+        self.in_ranks = tuple(int(r) for r in self.in_ranks)
+        self._dev = _plan_device_arrays(self.plan)
+
+    @property
+    def out_cols(self) -> int:
+        return kron_cols(self.in_ranks)
+
+    def __call__(self, *in_factors: jax.Array) -> jax.Array:
+        """Factors for the N-1 *input* modes (plan.in_modes order), true
+        shapes.  Returns (out_rows_unpadded, prod(in_ranks))."""
+        p = self.plan
+        assert len(in_factors) == p.n_in
+        pads = tuple(
+            pad_factor(f, rows, rank_padded(r))
+            for f, rows, r in zip(in_factors, p.in_rows, self.in_ranks)
+        )
+        out = self.call_padded(pads)
+        return out[: p.out_rows, : self.out_cols]
+
+    def call_padded(self, in_factors_pad: Sequence[jax.Array]) -> jax.Array:
+        """Run the kernel on already row/lane-padded input factors (the
+        PlannedTucker sweep path).  Returns the padded (out_rows, Pp) tile."""
+        p = self.plan
+        return ttmc_pallas_call(
+            self._dev["block_it"],
+            self._dev["block_in"],
+            self._dev["vals"],
+            self._dev["iloc"],
+            self._dev["in_locs"],
+            tuple(in_factors_pad),
+            tile_i=p.tile_i,
+            in_tiles=p.in_tiles,
+            in_ranks=self.in_ranks,
+            blk=p.blk,
+            out_rows=p.out_rows,
+            interpret=self.interpret,
+        )
+
+    def output(self, factors: Sequence[jax.Array], true_rows: int) -> jax.Array:
+        return self(*(factors[m] for m in self.plan.in_modes))[:true_rows]
+
+
+def make_planned_ttmc(
+    st: SparseTensor,
+    mode: int,
+    core_ranks: Sequence[int],
+    *,
+    cfg: MemoryControllerConfig | None = None,
+    auto_tune: bool = False,
+    spec: TPUSpec = TPUSpec(),
+    interpret: bool = True,
+) -> PlannedTTMC:
+    """Build the memory layout + TTMc kernel instance for one output mode.
+    `core_ranks` is the full N-tuple of Tucker core ranks; the N-1 input
+    ranks are taken from it.  With auto_tune=True the PMS tunes the
+    controller for the TTMc kernel (core-tensor output tile in the VMEM
+    model)."""
+    core_ranks = tuple(int(r) for r in core_ranks)
+    if len(core_ranks) != st.nmodes:
+        raise ValueError(
+            f"core_ranks has {len(core_ranks)} entries for a "
+            f"{st.nmodes}-mode tensor (pass the full N-tuple)"
+        )
+    if auto_tune:
+        best = pms_search(
+            st, mode, max(core_ranks), spec=spec, top_k=1,
+            kernel="ttmc", core_ranks=core_ranks,
+        )
+        if not best:
+            raise ValueError(
+                f"PMS found no VMEM-feasible controller configuration for "
+                f"TTMc mode {mode} at core ranks {core_ranks} (spec budget "
+                f"{spec.vmem_bytes * spec.vmem_usable_frac:.0f} bytes)"
+            )
+        cfg = best[0].cfg
+    cfg = cfg or MemoryControllerConfig()
+    n_in = st.nmodes - 1
+    plan = plan_blocks(
+        st,
+        mode,
+        tile_i=cfg.cache.tile_i,
+        blk=cfg.dma.blk,
+        in_tiles=cfg.cache.input_tiles(n_in),
+    )
+    in_ranks = tuple(core_ranks[m] for m in plan.in_modes)
+    return PlannedTTMC(plan=plan, in_ranks=in_ranks, interpret=interpret, cfg=cfg)
+
+
+@dataclasses.dataclass
 class PlannedCPALS:
     """Per-mode plan cache driving the whole CP-ALS loop on the memory
     controller (paper Alg. 1 on the Alg. 5 layout).
@@ -159,20 +320,8 @@ class PlannedCPALS:
 
     @property
     def padded_rows(self) -> tuple[int, ...]:
-        """Device-resident row padding per mode: the largest padding any plan
-        requires of that factor (its own plan's out_rows, plus in_rows
-        wherever it appears as an input mode).  Each plan's kernel slices the
-        rows it needs — a static, zero-copy slice inside the sweep jit."""
-        rows = []
-        for m in range(self.nmodes):
-            r = self.ops[m].plan.out_rows
-            for op in self.ops.values():
-                p = op.plan
-                for n, im in enumerate(p.in_modes):
-                    if im == m:
-                        r = max(r, p.in_rows[n])
-            rows.append(r)
-        return tuple(rows)
+        """Per-mode device-resident row padding (see `planned_padded_rows`)."""
+        return planned_padded_rows(self.ops, self.nmodes)
 
     def pad_factors(self, factors: Sequence[jax.Array]) -> tuple[jax.Array, ...]:
         """One pad per mode for the whole decomposition (not N x iters)."""
@@ -237,15 +386,8 @@ class PlannedCPALS:
         return self.ops[mode].output(factors, out_rows)
 
     def plan_bytes(self) -> int:
-        """HBM held by the per-mode layouts (the 'copies' trade, Sec. 3).
-        Element widths come from each mode's Remapper configuration."""
-        total = 0
-        for op in self.ops.values():
-            p, r = op.plan, op.cfg.remapper
-            slots = p.vals.shape[0]
-            total += slots * (r.value_bytes + (1 + p.n_in) * r.index_bytes)
-            total += p.nblocks * (1 + p.n_in) * r.index_bytes
-        return total
+        """HBM held by the per-mode layouts (the 'copies' trade, Sec. 3)."""
+        return planned_layout_bytes(self.ops)
 
 
 def make_planned_cp_als(
@@ -272,50 +414,66 @@ def make_planned_cp_als(
 
 
 # ---------------------------------------------------------------------------
-# Keyed plan cache for the one-shot dispatcher
+# Keyed plan cache for the one-shot dispatchers (mttkrp_auto / tucker_auto)
 # ---------------------------------------------------------------------------
 
-_PLAN_CACHE: OrderedDict[tuple, PlannedMTTKRP] = OrderedDict()
+_PLAN_CACHE: OrderedDict[tuple, "PlannedMTTKRP | PlannedTTMC"] = OrderedDict()
 _PLAN_CACHE_CAP = 32  # LRU bound: each entry pins a device-resident layout
-_PLAN_CACHE_STATS = {"hits": 0, "misses": 0}
+_PLAN_CACHE_KINDS = ("mttkrp", "ttmc")
+_PLAN_CACHE_STATS = {k: {"hits": 0, "misses": 0} for k in _PLAN_CACHE_KINDS}
 
 
-def plan_cache_stats() -> dict[str, int]:
-    """Hit/miss counters of the `mttkrp_auto` plan cache (bench_e2e reports
-    them: a hit means a call skipped the whole remap/layout build)."""
-    return dict(_PLAN_CACHE_STATS)
+def plan_cache_stats() -> dict:
+    """Hit/miss counters of the shared plan cache (bench_e2e reports them: a
+    hit means a call skipped the whole remap/layout build).  Totals at the
+    top level plus per-kernel-kind counters under "by_kind" — the kinds are
+    tracked separately precisely because the cache key carries a kind
+    discriminator (no cross-kind collisions by construction)."""
+    by_kind = {k: dict(v) for k, v in _PLAN_CACHE_STATS.items()}
+    return {
+        "hits": sum(v["hits"] for v in by_kind.values()),
+        "misses": sum(v["misses"] for v in by_kind.values()),
+        "by_kind": by_kind,
+    }
 
 
 def plan_cache_clear() -> None:
     _PLAN_CACHE.clear()
-    _PLAN_CACHE_STATS["hits"] = 0
-    _PLAN_CACHE_STATS["misses"] = 0
+    for v in _PLAN_CACHE_STATS.values():
+        v["hits"] = 0
+        v["misses"] = 0
 
 
-def _planned_mttkrp_cached(
+def _planned_cached(
+    kind: str,
     st: SparseTensor,
     mode: int,
-    rank: int,
+    rank_key,
     cfg: MemoryControllerConfig | None,
     interpret: bool,
-) -> PlannedMTTKRP:
-    """LRU-cached plan lookup keyed by (tensor content fingerprint, mode,
-    rank, controller config, interpret) — repeated test/benchmark calls stop
-    repaying the Tensor Remapper on every invocation."""
+    build: Callable,
+):
+    """LRU-cached plan lookup keyed by (kernel kind, tensor content
+    fingerprint, mode, rank key, controller config, interpret) — repeated
+    test/benchmark calls stop repaying the Tensor Remapper on every
+    invocation.  The leading `kind` field keeps MTTKRP and TTMc plans for
+    the same tensor/mode/rank from silently aliasing each other."""
     key = (
+        kind,
         st.fingerprint(),
         mode,
-        rank,
+        rank_key,
         cfg or MemoryControllerConfig(),
         bool(interpret),
     )
+    stats = _PLAN_CACHE_STATS[kind]
     op = _PLAN_CACHE.get(key)
     if op is not None:
-        _PLAN_CACHE_STATS["hits"] += 1
+        stats["hits"] += 1
         _PLAN_CACHE.move_to_end(key)
         return op
-    _PLAN_CACHE_STATS["misses"] += 1
-    op = make_planned_mttkrp(st, mode, rank, cfg=cfg, interpret=interpret)
+    stats["misses"] += 1
+    op = build()
     _PLAN_CACHE[key] = op
     while len(_PLAN_CACHE) > _PLAN_CACHE_CAP:
         _PLAN_CACHE.popitem(last=False)
@@ -341,7 +499,10 @@ def mttkrp_auto(
     to XLA, not a hint, so it is never asserted for an unsorted stream."""
     rank = int(factors[0].shape[1])
     if method == "pallas":
-        op = _planned_mttkrp_cached(st, mode, rank, cfg, interpret)
+        op = _planned_cached(
+            "mttkrp", st, mode, rank, cfg, interpret,
+            lambda: make_planned_mttkrp(st, mode, rank, cfg=cfg, interpret=interpret),
+        )
         return op.output(factors, st.shape[mode])
     if sorted_by_mode is None:
         sorted_by_mode = st.is_sorted_by(mode)
@@ -349,4 +510,37 @@ def mttkrp_auto(
     return mttkrp_jax(
         idx, val, factors, mode, st.shape[mode],
         method=method, sorted_by_mode=sorted_by_mode,
+    )
+
+
+def tucker_auto(
+    st: SparseTensor,
+    factors: Sequence[jax.Array],
+    mode: int,
+    *,
+    method: str = "pallas",
+    interpret: bool = True,
+    cfg: MemoryControllerConfig | None = None,
+) -> jax.Array:
+    """One-shot sparse TTM-chain dispatcher (the Tucker-side analogue of
+    `mttkrp_auto`): contract every factor but `mode` into X, returning the
+    unfolding Y_(mode) of shape (I_mode, prod of input ranks).
+
+    method: 'pallas' — the planned memory-controller kernel, with its
+    BlockPlan cached in the shared kind-keyed LRU (`plan_cache_stats()["by_kind"]
+    ["ttmc"]`); 'reference' — the pure-jnp gather/Kronecker/segment_sum
+    oracle.  `factors` holds all N factor matrices; the mode-th is not
+    contracted (and its rank is not part of the cache key)."""
+    core_ranks = tuple(int(f.shape[1]) for f in factors)
+    if method == "pallas":
+        in_ranks = tuple(r for m, r in enumerate(core_ranks) if m != mode)
+        op = _planned_cached(
+            "ttmc", st, mode, in_ranks, cfg, interpret,
+            lambda: make_planned_ttmc(st, mode, core_ranks, cfg=cfg, interpret=interpret),
+        )
+        return op.output(factors, st.shape[mode])
+    if method != "reference":
+        raise ValueError(f"unknown method {method!r}: expected 'pallas' or 'reference'")
+    return ttmc_ref(
+        jnp.asarray(st.indices), jnp.asarray(st.values), factors, mode, st.shape[mode]
     )

@@ -1,9 +1,15 @@
-"""Pure-jnp oracles for the MTTKRP kernels.
+"""Pure-jnp oracles for the MTTKRP and TTM-chain (TTMc) kernels.
 
-Two independent references:
+Independent references per kernel family:
   * `mttkrp_ref`        — gather -> Hadamard -> segment_sum (mirrors Alg. 2).
   * `mttkrp_ref_dense`  — densify + einsum; O(I*J*K*R), tiny shapes only, used
                           to cross-check the sparse reference itself.
+  * `ttmc_ref`          — gather -> Kronecker chain -> segment_sum: the sparse
+                          TTMc unfolding Y_(n) = X_(n) (kron of input factors)
+                          that drives the Tucker HOOI loop.
+  * `ttmc_ref_dense`    — densify + einsum cross-check, any order >= 3.
+Each family also has a `*_plan_ref` oracle operating on the kernel's own
+BlockPlan layout (including padded rows).
 """
 from __future__ import annotations
 
@@ -13,7 +19,14 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-__all__ = ["mttkrp_ref", "mttkrp_ref_dense", "mttkrp_plan_ref"]
+__all__ = [
+    "mttkrp_ref",
+    "mttkrp_ref_dense",
+    "mttkrp_plan_ref",
+    "ttmc_ref",
+    "ttmc_ref_dense",
+    "ttmc_plan_ref",
+]
 
 
 def mttkrp_ref(
@@ -50,6 +63,76 @@ def mttkrp_ref_dense(
     spec = f"ijk,{letters[ins[0]]}r,{letters[ins[1]]}r->{letters[mode]}r"
     out = np.einsum(spec, dense, factors[ins[0]].astype(np.float64), factors[ins[1]].astype(np.float64))
     return out[:out_rows].astype(np.float32)
+
+
+def ttmc_ref(
+    indices: jax.Array,
+    values: jax.Array,
+    factors: Sequence[jax.Array],
+    mode: int,
+    out_rows: int,
+) -> jax.Array:
+    """Sparse TTM-chain: Y[i_n, :] += v * kron(rows of every factor != mode),
+    columns in row-major order over ascending input-mode index.  `factors`
+    holds all N factor matrices; the mode-th is ignored.  Returns
+    (out_rows, prod of input ranks)."""
+    nnz = values.shape[0]
+    contrib = values[:, None].astype(jnp.float32)
+    for n, f in enumerate(factors):
+        if n == mode:
+            continue
+        rows = f[indices[:, n]].astype(jnp.float32)  # (nnz, R_n)
+        contrib = (contrib[:, :, None] * rows[:, None, :]).reshape(nnz, -1)
+    return jax.ops.segment_sum(contrib, indices[:, mode], num_segments=out_rows)
+
+
+def ttmc_ref_dense(
+    indices: np.ndarray,
+    values: np.ndarray,
+    factors: Sequence[np.ndarray],
+    mode: int,
+    out_rows: int,
+) -> np.ndarray:
+    """Densify-and-einsum cross-check for any order >= 3 (duplicate-
+    accumulating, float64 internally): contracts every mode but `mode` with
+    its factor and flattens the rank axes row-major."""
+    nmodes = len(factors)
+    assert nmodes <= 5, "dense oracle is for tiny cross-check shapes only"
+    shape = tuple(int(f.shape[0]) for f in factors)
+    dense = np.zeros(shape, np.float64)
+    np.add.at(dense, tuple(indices[:, m] for m in range(nmodes)), values.astype(np.float64))
+    ins = [n for n in range(nmodes) if n != mode]
+    letters, ranks = "abcde"[:nmodes], "vwxyz"
+    spec = (
+        letters
+        + ","
+        + ",".join(letters[n] + ranks[k] for k, n in enumerate(ins))
+        + "->"
+        + letters[mode]
+        + ranks[: len(ins)]
+    )
+    out = np.einsum(spec, dense, *[factors[n].astype(np.float64) for n in ins])
+    return out.reshape(shape[mode], -1)[:out_rows].astype(np.float32)
+
+
+def ttmc_plan_ref(
+    plan, factors_padded: Sequence[jax.Array], in_ranks: Sequence[int]
+) -> jax.Array:
+    """Oracle on the kernel's BlockPlan layout: exactly what the Pallas TTMc
+    kernel should produce, including padded rows (true columns only — the
+    caller compares against out[:, :prod(in_ranks)]).  One lane-padded factor
+    per input mode, in plan.in_modes order."""
+    blk = plan.blk
+    vals = jnp.asarray(plan.vals)
+    gi = jnp.repeat(jnp.asarray(plan.block_it), blk) * plan.tile_i + jnp.asarray(plan.iloc)
+    contrib = vals[:, None]
+    for f_pad, tids, loc, tile, r in zip(
+        factors_padded, plan.block_in, plan.in_locs, plan.in_tiles, in_ranks
+    ):
+        g = jnp.repeat(jnp.asarray(tids), blk) * tile + jnp.asarray(loc)
+        rows = f_pad[g][:, :r]
+        contrib = (contrib[:, :, None] * rows[:, None, :]).reshape(vals.shape[0], -1)
+    return jax.ops.segment_sum(contrib, gi, num_segments=plan.out_rows)
 
 
 def mttkrp_plan_ref(plan, factors_padded: Sequence[jax.Array], rank_padded: int) -> jax.Array:

@@ -1,0 +1,25 @@
+"""Sparse Tucker decomposition (HOOI) on the programmable memory controller:
+the TTM-chain kernel family reuses the MTTKRP BlockPlan substrate (see
+kernels/ttm_pallas.py); `tucker_auto` is the one-shot TTMc dispatcher sharing
+the kind-keyed plan cache in kernels/ops.py."""
+from ..kernels.ops import PlannedTTMC, make_planned_ttmc, tucker_auto
+from .hooi import (
+    PlannedTucker,
+    TuckerState,
+    core_fit_value,
+    init_tucker_factors,
+    make_planned_tucker,
+    tucker_hooi,
+)
+
+__all__ = [
+    "TuckerState",
+    "tucker_hooi",
+    "PlannedTucker",
+    "make_planned_tucker",
+    "init_tucker_factors",
+    "core_fit_value",
+    "PlannedTTMC",
+    "make_planned_ttmc",
+    "tucker_auto",
+]

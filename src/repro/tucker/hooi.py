@@ -1,0 +1,385 @@
+"""Sparse Tucker decomposition (HOOI) on the programmable memory controller.
+
+The second real workload of the substrate: the paper designs the Tensor
+Remapper / per-mode layouts / PMS to be *programmable*, i.e. reusable across
+tensor-decomposition kernels, and sparse Tucker exercises exactly the same
+irregular-access problem through the TTM chain (Jiang et al., "Sparse Tucker
+Tensor Decomposition on a Hybrid FPGA-CPU Platform").  HOOI (higher-order
+orthogonal iteration):
+
+    repeat:
+      for each mode n:
+        Y_(n) = X_(n) (kron of U^(m), m != n)     # sparse TTMc — the kernel
+        U^(n) = top-R_n left singular vectors of Y_(n)
+      G = Y_(N-1) x_{N-1} U^(N-1)^T               # core, free from the last Y
+      fit = 1 - sqrt(||X||^2 - ||G||^2) / ||X||   # factors orthonormal
+
+The truncated SVD runs through the *unfolding Gram*: G_Y = Y^T Y is only
+(P x P) with P = prod of the other core ranks, so the eigh never touches an
+I_n-sized matrix; U^(n) = Y V_top diag(1/sigma_top) recovers the left
+singular vectors (classic tall-matrix economy SVD).
+
+Two methods, mirroring cp_als:
+  * 'pallas'    — the planned TTM-chain kernel (kernels/ttm_pallas.py) on a
+                  `PlannedTucker` workspace: one PMS-tunable BlockPlan +
+                  device-resident layout per output mode, built once and
+                  reused across every HOOI iteration (plan amortization,
+                  exactly the PlannedCPALS posture).  jit_sweep=True runs
+                  each iteration as one compiled sweep with rank-padded,
+                  device-resident factors; jit_sweep=False keeps the eager
+                  per-mode dispatch loop as the parity baseline.
+  * 'reference' — the pure-jnp TTMc oracle (kernels/ref.py), also available
+                  as a jitted whole-iteration sweep.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from functools import partial
+from typing import Callable, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..core.coo import SparseTensor
+from ..core.memctrl import MemoryControllerConfig, TPUSpec
+from ..kernels.mttkrp_pallas import pad_factor, rank_padded
+from ..kernels.ops import (
+    PlannedTTMC,
+    make_planned_ttmc,
+    planned_layout_bytes,
+    planned_padded_rows,
+)
+from ..kernels.ref import ttmc_ref
+
+__all__ = [
+    "TuckerState",
+    "tucker_hooi",
+    "PlannedTucker",
+    "make_planned_tucker",
+    "init_tucker_factors",
+    "core_fit_value",
+]
+
+
+@dataclasses.dataclass
+class TuckerState:
+    factors: list[jax.Array]  # one (I_m, R_m) per mode, orthonormal columns
+    core: jax.Array  # (R_0, ..., R_{N-1}) in natural mode order
+    fit_history: list[float]
+
+    @property
+    def core_ranks(self) -> tuple[int, ...]:
+        return tuple(int(s) for s in self.core.shape)
+
+
+def _validated_core_ranks(st: SparseTensor, core_ranks: Sequence[int]) -> tuple[int, ...]:
+    cr = tuple(int(r) for r in core_ranks)
+    if len(cr) != st.nmodes:
+        raise ValueError(
+            f"core_ranks has {len(cr)} entries for a {st.nmodes}-mode tensor"
+        )
+    for m, (r, s) in enumerate(zip(cr, st.shape)):
+        if not 1 <= r <= s:
+            raise ValueError(
+                f"core rank {r} for mode {m} out of range [1, {s}] (mode length)"
+            )
+        others = math.prod(cr[k] for k in range(len(cr)) if k != m)
+        if r > others:
+            raise ValueError(
+                f"core rank {r} for mode {m} exceeds the product of the other "
+                f"ranks ({others}): the mode-{m} unfolding of the core cannot "
+                f"have full row rank"
+            )
+    return cr
+
+
+def init_tucker_factors(
+    key: jax.Array, shape: Sequence[int], core_ranks: Sequence[int], dtype=jnp.float32
+) -> list[jax.Array]:
+    """Random *orthonormal* factor matrices (reduced QR of a Gaussian), one
+    (I_m, R_m) per mode — HOOI's fit formula assumes orthonormal columns from
+    the first iteration."""
+    keys = jax.random.split(key, len(shape))
+    facs = []
+    for k, s, r in zip(keys, shape, core_ranks):
+        q, _ = jnp.linalg.qr(jax.random.normal(k, (int(s), int(r)), dtype))
+        facs.append(q)
+    return facs
+
+
+def _factor_from_unfolding(y: jax.Array, r: int) -> jax.Array:
+    """Top-r left singular vectors of the unfolding y (I_n, P) via eigh of
+    the (P, P) Gram — the truncated SVD never materializes an I_n x I_n
+    matrix.  Columns with (relatively) vanishing singular values are zeroed
+    rather than divided by ~0; HOOI only uses the spanned subspace."""
+    g = y.T @ y
+    w, v = jnp.linalg.eigh(g)  # ascending eigenvalues
+    top_v = v[:, ::-1][:, :r]
+    sigma = jnp.sqrt(jnp.maximum(w[::-1][:r], 0.0))
+    thresh = jnp.maximum(sigma[0], 1e-30) * 1e-7
+    inv = jnp.where(sigma > thresh, 1.0 / jnp.maximum(sigma, thresh), 0.0)
+    return y @ (top_v * inv[None, :])
+
+
+def _core_from_unfolding(
+    y: jax.Array, u: jax.Array, mode: int, core_ranks: tuple[int, ...]
+) -> jax.Array:
+    """Fold U^(mode)^T Y_(mode) back into the (R_0, ..., R_{N-1}) core in
+    natural mode order (Y's columns are row-major over ascending input
+    mode)."""
+    nmodes = len(core_ranks)
+    in_modes = tuple(m for m in range(nmodes) if m != mode)
+    mat = u.T @ y  # (R_mode, P)
+    core = mat.reshape((core_ranks[mode],) + tuple(core_ranks[m] for m in in_modes))
+    axes = (mode,) + in_modes  # axes[k] = the tensor mode of core axis k
+    perm = tuple(axes.index(m) for m in range(nmodes))
+    return jnp.transpose(core, perm)
+
+
+def core_fit_value(core: jax.Array, norm_x_sq: jax.Array) -> jax.Array:
+    """fit = 1 - ||X - X_hat|| / ||X||.  With orthonormal factors,
+    ||X - X_hat||^2 = ||X||^2 - ||G||^2 — no pass over the non-zeros."""
+    resid_sq = jnp.maximum(norm_x_sq - jnp.sum(core * core), 0.0)
+    return 1.0 - jnp.sqrt(resid_sq) / jnp.sqrt(norm_x_sq)
+
+
+@partial(jax.jit, static_argnames=("shape", "core_ranks"))
+def _sweep_reference(factors, idx, val, norm_x_sq, *, shape, core_ranks):
+    """One full jitted HOOI iteration on the pure-jnp TTMc oracle: every
+    mode's TTMc -> Gram eigh -> factor update, plus core + fit, in a single
+    compiled function."""
+    factors = list(factors)
+    y = None
+    for m in range(len(shape)):
+        y = ttmc_ref(idx, val, factors, m, shape[m])
+        factors[m] = _factor_from_unfolding(y, core_ranks[m])
+    last = len(shape) - 1
+    core = _core_from_unfolding(y, factors[last], last, core_ranks)
+    return tuple(factors), core, core_fit_value(core, norm_x_sq)
+
+
+def _finish_iter(fits, fit, it, tol, verbose) -> bool:
+    """Host-side bookkeeping per iteration: record the fit scalar and decide
+    the tol early-exit (the only device->host sync in the jitted loops)."""
+    fits.append(float(fit))
+    if verbose:
+        print(f"[tucker_hooi] iter {it:3d} fit={fits[-1]:.6f}")
+    return tol is not None and it > 0 and abs(fits[-1] - fits[-2]) < tol
+
+
+@dataclasses.dataclass
+class PlannedTucker:
+    """Per-mode plan cache driving the whole HOOI loop on the memory
+    controller — the Tucker mirror of `PlannedCPALS`.
+
+    One `PlannedTTMC` per output mode — each holds its own remapped,
+    device-resident copy of the non-zero stream — constructed once and reused
+    for every HOOI iteration.  The steady-state iteration is `sweep`: one
+    jitted function running a full HOOI iteration (every mode's TTMc -> Gram
+    eigh -> factor update, plus the core fold and fit).  Factors stay
+    rank-padded (each mode to its own rank_padded(R_m)) and device-resident
+    across iterations; `pad_factors` / `unpad_factors` bracket the loop.
+    """
+
+    ops: dict[int, PlannedTTMC]
+    shape: tuple[int, ...]
+    core_ranks: tuple[int, ...]
+    _sweep_fn: Callable | None = dataclasses.field(default=None, repr=False)
+
+    @property
+    def nmodes(self) -> int:
+        return len(self.shape)
+
+    @property
+    def rank_pads(self) -> tuple[int, ...]:
+        """Per-mode lane padding: each factor carries its own R_m padding
+        (unlike CP's shared rank)."""
+        return tuple(rank_padded(r) for r in self.core_ranks)
+
+    def plan_for(self, mode: int):
+        return self.ops[mode].plan
+
+    @property
+    def padded_rows(self) -> tuple[int, ...]:
+        """Per-mode device-resident row padding (see `planned_padded_rows`)."""
+        return planned_padded_rows(self.ops, self.nmodes)
+
+    def pad_factors(self, factors: Sequence[jax.Array]) -> tuple[jax.Array, ...]:
+        """One pad per mode for the whole decomposition (not N x iters)."""
+        return tuple(
+            pad_factor(f, rows, rp)
+            for f, rows, rp in zip(factors, self.padded_rows, self.rank_pads)
+        )
+
+    def unpad_factors(self, padded: Sequence[jax.Array]) -> list[jax.Array]:
+        return [
+            f[:s, :r] for f, s, r in zip(padded, self.shape, self.core_ranks)
+        ]
+
+    def plan_bytes(self) -> int:
+        """HBM held by the per-mode layouts (the 'copies' trade, Sec. 3)."""
+        return planned_layout_bytes(self.ops)
+
+    def _build_sweep(self) -> Callable:
+        shape, core_ranks, nmodes = self.shape, self.core_ranks, self.nmodes
+        rps, prows = self.rank_pads, self.padded_rows
+        ops = self.ops
+
+        def sweep(facs, norm_x_sq):
+            facs = list(facs)
+            y = None
+            for m in range(nmodes):
+                op, p = ops[m], ops[m].plan
+                in_facs = tuple(
+                    facs[im][: p.in_rows[n]] for n, im in enumerate(p.in_modes)
+                )
+                out = op.call_padded(in_facs)
+                y = out[: shape[m], : op.out_cols]
+                u = _factor_from_unfolding(y, core_ranks[m])
+                # Re-pad in place of the old padded factor (padding rows and
+                # lanes stay exactly zero, so the next mode's kernel gathers
+                # zeros for padding elements).
+                facs[m] = (
+                    jnp.zeros((prows[m], rps[m]), u.dtype)
+                    .at[: shape[m], : core_ranks[m]]
+                    .set(u)
+                )
+            last = nmodes - 1
+            u_last = facs[last][: shape[last], : core_ranks[last]]
+            core = _core_from_unfolding(y, u_last, last, core_ranks)
+            return tuple(facs), core, core_fit_value(core, norm_x_sq)
+
+        return jax.jit(sweep)
+
+    def sweep(self, facs, norm_x_sq):
+        """One jitted HOOI iteration in padded space.  Returns
+        (new padded factors, core, fit scalar on device)."""
+        if self._sweep_fn is None:
+            self._sweep_fn = self._build_sweep()
+        return self._sweep_fn(facs, norm_x_sq)
+
+
+def make_planned_tucker(
+    st: SparseTensor,
+    core_ranks: Sequence[int],
+    *,
+    cfg: MemoryControllerConfig | None = None,
+    auto_tune: bool = False,
+    spec: TPUSpec = TPUSpec(),
+    interpret: bool = True,
+) -> PlannedTucker:
+    """Build the full HOOI workspace: one tuned TTMc plan per output mode.
+
+    With auto_tune=True each mode gets its own PMS-selected controller
+    configuration scored for the TTMc kernel (core-tensor tile in the VMEM
+    model); otherwise `cfg` (or the default) is shared by every mode."""
+    cr = _validated_core_ranks(st, core_ranks)
+    ops = {
+        m: make_planned_ttmc(
+            st, m, cr, cfg=cfg, auto_tune=auto_tune, spec=spec, interpret=interpret
+        )
+        for m in range(st.nmodes)
+    }
+    return PlannedTucker(ops=ops, shape=st.shape, core_ranks=cr)
+
+
+def tucker_hooi(
+    st: SparseTensor,
+    core_ranks: Sequence[int],
+    *,
+    iters: int = 10,
+    method: str = "pallas",
+    seed: int = 0,
+    tol: float | None = None,
+    planned: PlannedTucker | None = None,
+    interpret: bool = True,
+    auto_tune: bool = False,
+    cfg: MemoryControllerConfig | None = None,
+    jit_sweep: bool = True,
+    verbose: bool = False,
+) -> TuckerState:
+    """Run sparse Tucker HOOI.
+
+    method: 'pallas' — the planned TTM-chain memory-controller kernel: a
+            `PlannedTucker` workspace is built once (one remapped,
+            device-resident BlockPlan per output mode) and reused for every
+            iteration; 'reference' — the pure-jnp TTMc oracle.
+    planned / interpret / auto_tune / cfg: method='pallas' knobs — pass a
+            prebuilt `PlannedTucker` to reuse plans across calls, or let
+            auto_tune run the TTMc-aware PMS per mode.
+    jit_sweep: run each iteration as one jitted sweep (factors stay
+            device-resident, rank-padded for the pallas path); False keeps
+            the eager per-mode dispatch loop as the parity baseline.
+    """
+    cr = _validated_core_ranks(st, core_ranks)
+    nmodes = st.nmodes
+    key = jax.random.PRNGKey(seed)
+    factors = init_tucker_factors(key, st.shape, cr)
+    norm_x_sq = jnp.asarray(float(np.sum(st.values.astype(np.float64) ** 2)), jnp.float32)
+    fits: list[float] = []
+
+    if planned is not None and method != "pallas":
+        raise ValueError(
+            "a PlannedTucker workspace was passed but method != 'pallas'; "
+            "the workspace would be silently ignored"
+        )
+    if method == "pallas":
+        if planned is None:
+            planned = make_planned_tucker(
+                st, cr, cfg=cfg, auto_tune=auto_tune, interpret=interpret
+            )
+        elif planned.shape != st.shape or planned.core_ranks != cr:
+            raise ValueError(
+                f"PlannedTucker workspace was built for shape={planned.shape} "
+                f"core_ranks={planned.core_ranks}, got shape={st.shape} "
+                f"core_ranks={cr}"
+            )
+        if jit_sweep:
+            # Fast path: factors padded once, updated in padded space by one
+            # jitted sweep per iteration; sliced back only for the state.
+            facs_p = planned.pad_factors(factors)
+            core = None
+            for it in range(iters):
+                facs_p, core, fit = planned.sweep(facs_p, norm_x_sq)
+                if _finish_iter(fits, fit, it, tol, verbose):
+                    break
+            return TuckerState(
+                factors=planned.unpad_factors(facs_p), core=core, fit_history=fits
+            )
+    elif method != "reference":
+        raise ValueError(f"unknown method {method!r}: expected 'pallas' or 'reference'")
+
+    if method == "reference":
+        # Only the reference oracle walks the raw COO stream; the pallas
+        # paths consume the per-mode device-resident plan layouts instead,
+        # so the transfer would duplicate HBM the plans already hold.
+        idx, val = jnp.asarray(st.indices), jnp.asarray(st.values)
+
+    if method == "reference" and jit_sweep:
+        factors_t = tuple(factors)
+        core = None
+        for it in range(iters):
+            factors_t, core, fit = _sweep_reference(
+                factors_t, idx, val, norm_x_sq, shape=st.shape, core_ranks=cr
+            )
+            if _finish_iter(fits, fit, it, tol, verbose):
+                break
+        return TuckerState(factors=list(factors_t), core=core, fit_history=fits)
+
+    # Eager per-mode dispatch loop: jit_sweep=False (both methods).
+    core = None
+    for it in range(iters):
+        y = None
+        for m in range(nmodes):
+            if method == "pallas":
+                y = planned.ops[m].output(factors, st.shape[m])
+            else:
+                y = ttmc_ref(idx, val, factors, m, st.shape[m])
+            factors[m] = _factor_from_unfolding(y, cr[m])
+        last = nmodes - 1
+        core = _core_from_unfolding(y, factors[last], last, cr)
+        if _finish_iter(fits, core_fit_value(core, norm_x_sq), it, tol, verbose):
+            break
+    return TuckerState(factors=factors, core=core, fit_history=fits)

@@ -19,6 +19,11 @@ from repro.kernels.ops import (
 from repro.kernels.ref import mttkrp_plan_ref, mttkrp_ref
 
 
+def _totals(stats: dict) -> tuple[int, int]:
+    """(hits, misses) totals of the kind-keyed plan-cache stats."""
+    return stats["hits"], stats["misses"]
+
+
 def _check(st_t, mode, rank, cfg=None, rtol=2e-4):
     facs = random_factors(jax.random.PRNGKey(0), st_t.shape, rank)
     out = mttkrp_auto(st_t, facs, mode, method="pallas", interpret=True, cfg=cfg)
@@ -189,7 +194,7 @@ def test_plan_cache_hits_and_counters(tiny_tensor):
     import repro.kernels.ops as ops_mod
 
     plan_cache_clear()
-    assert plan_cache_stats() == {"hits": 0, "misses": 0}
+    assert _totals(plan_cache_stats()) == (0, 0)
     calls = []
     orig = ops_mod.plan_blocks
 
@@ -203,16 +208,18 @@ def test_plan_cache_hits_and_counters(tiny_tensor):
         out1 = mttkrp_auto(tiny_tensor, facs, 0, method="pallas")
         out2 = mttkrp_auto(tiny_tensor, facs, 0, method="pallas")
         assert len(calls) == 1  # second call served from the plan cache
-        assert plan_cache_stats() == {"hits": 1, "misses": 1}
+        assert _totals(plan_cache_stats()) == (1, 1)
+        # mttkrp_auto's traffic is tracked under its own kernel kind
+        assert plan_cache_stats()["by_kind"]["mttkrp"] == {"hits": 1, "misses": 1}
         np.testing.assert_array_equal(np.asarray(out1), np.asarray(out2))
         mttkrp_auto(tiny_tensor, facs, 1, method="pallas")  # new mode -> miss
-        assert plan_cache_stats() == {"hits": 1, "misses": 2}
+        assert _totals(plan_cache_stats()) == (1, 2)
         cfg = MemoryControllerConfig(
             cache=CacheEngineConfig(tile_i=32, tile_j=32, tile_k=32),
             dma=DMAEngineConfig(blk=32),
         )
         mttkrp_auto(tiny_tensor, facs, 0, method="pallas", cfg=cfg)  # new cfg -> miss
-        assert plan_cache_stats() == {"hits": 1, "misses": 3}
+        assert _totals(plan_cache_stats()) == (1, 3)
         assert len(calls) == 3
     finally:
         ops_mod.plan_blocks = orig
@@ -229,14 +236,14 @@ def test_plan_cache_keys_on_content(tiny_tensor):
         tiny_tensor.indices.copy(), tiny_tensor.values.copy(), tiny_tensor.shape
     )
     mttkrp_auto(clone, facs, 0, method="pallas")
-    assert plan_cache_stats() == {"hits": 1, "misses": 1}
+    assert _totals(plan_cache_stats()) == (1, 1)
     bumped = SparseTensor(
         tiny_tensor.indices.copy(),
         np.concatenate([[np.float32(2.0) * tiny_tensor.values[0]], tiny_tensor.values[1:]]),
         tiny_tensor.shape,
     )
     mttkrp_auto(bumped, facs, 0, method="pallas")
-    assert plan_cache_stats() == {"hits": 1, "misses": 2}
+    assert _totals(plan_cache_stats()) == (1, 2)
     plan_cache_clear()
 
 

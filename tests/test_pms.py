@@ -9,7 +9,13 @@ from repro.core.memctrl import (
     MemoryControllerConfig,
     TPUSpec,
 )
-from repro.core.pms import predict_analytic, predict_from_plan, search
+from repro.core.pms import (
+    predict_analytic,
+    predict_from_plan,
+    predict_ttmc,
+    predict_ttmc_analytic,
+    search,
+)
 from repro.core.remap import plan_blocks
 from repro.core.hypergraph import stats
 
@@ -74,6 +80,81 @@ def test_analytic_within_factor_of_exact(small_tensor):
     approx = predict_analytic(stats(small_tensor), 0, 16, cfg)
     assert approx.t_total / exact.t_total < 3.0
     assert exact.t_total / approx.t_total < 3.0
+
+
+def test_vmem_model_ttmc_counts_core_tile():
+    """The TTMc VMEM model pays the core-tensor slice width (Pp lanes) on
+    the accumulator tile and each input factor's own lane padding."""
+    cfg = MemoryControllerConfig(
+        cache=CacheEngineConfig(tile_i=256, tile_j=512, tile_k=128),
+        dma=DMAEngineConfig(blk=256, buffers=2),
+    )
+    pp, in_rps = 256, (128, 128)
+    want = 2 * ((256 * 256 + (512 + 128) * 128) * 4 + 256 * (4 + 12))
+    assert cfg.vmem_bytes_ttmc(pp, in_rps) == want
+    # the kron widening makes TTMc strictly hungrier than MTTKRP at equal rank
+    assert cfg.vmem_bytes_ttmc(256, (128, 128)) > cfg.vmem_bytes(128)
+
+
+def test_predict_ttmc_uses_measured_fills(small_tensor):
+    cfg = MemoryControllerConfig(
+        cache=CacheEngineConfig(tile_i=256, tile_j=256, tile_k=256),
+        dma=DMAEngineConfig(blk=256),
+    )
+    plan = plan_blocks(small_tensor, 0, tile_i=256, tile_j=256, tile_k=256, blk=256)
+    core_ranks = (8, 8, 8)
+    est = predict_ttmc(plan, core_ranks, cfg)
+    fills = plan.tile_fills()
+    spec = TPUSpec()
+    # input factors each pad their own rank to 128; the output pays Pp=128
+    assert est.t_factor == pytest.approx(
+        (fills["B"] * 256 + fills["C"] * 256) * 128 * 4 / spec.hbm_bw
+    )
+    assert est.t_out == pytest.approx(fills["A"] * 256 * 128 * 4 / spec.hbm_bw)
+    assert est.nblocks == plan.nblocks
+    # stream term identical to the MTTKRP model: the layout is shared
+    assert est.t_stream == pytest.approx(predict_from_plan(plan, 8, cfg).t_stream)
+
+
+def test_ttmc_analytic_within_factor_of_exact(small_tensor):
+    cfg = MemoryControllerConfig(
+        cache=CacheEngineConfig(tile_i=256, tile_j=256, tile_k=256),
+        dma=DMAEngineConfig(blk=256),
+    )
+    plan = plan_blocks(small_tensor, 0, tile_i=256, tile_j=256, tile_k=256, blk=256)
+    exact = predict_ttmc(plan, (8, 8, 8), cfg)
+    approx = predict_ttmc_analytic(stats(small_tensor), 0, (8, 8, 8), cfg)
+    assert approx.t_total / exact.t_total < 3.0
+    assert exact.t_total / approx.t_total < 3.0
+
+
+def test_search_kernel_ttmc(small_tensor):
+    """The per-kernel search: TTMc candidates respect the TTMc VMEM fit, and
+    a core-rank tuple whose Kronecker width blows the budget prunes configs
+    that MTTKRP at the same per-mode rank would keep."""
+    spec = TPUSpec()
+    res = search(small_tensor, 0, 16, kernel="ttmc", core_ranks=(16, 16, 16), top_k=20)
+    assert res, "ttmc search returned nothing"
+    for e in res:
+        assert e.vmem_bytes <= spec.vmem_bytes * spec.vmem_usable_frac
+    times = [e.t_total for e in res]
+    assert times == sorted(times)
+    # kron width 64*64=4096 lanes on an 8192-row output tile >> budget
+    wide = search(
+        small_tensor, 0, 16, kernel="ttmc", core_ranks=(64, 64, 64),
+        tile_choices=(8192,), blk_choices=(1024,), top_k=10,
+    )
+    assert wide == []
+
+
+def test_search_validates_kernel_args(small_tensor):
+    with pytest.raises(ValueError, match="kernel"):
+        search(small_tensor, 0, 16, kernel="ttm")
+    with pytest.raises(ValueError, match="core_ranks"):
+        search(small_tensor, 0, 16, kernel="ttmc")
+    with pytest.raises(ValueError, match="N-tuple"):
+        # natural mistake: the N-1 input ranks instead of the full N-tuple
+        search(small_tensor, 0, 16, kernel="ttmc", core_ranks=(8, 8))
 
 
 def test_mttkrp_is_memory_bound_at_paper_scale(small_tensor):
