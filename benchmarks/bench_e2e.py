@@ -22,12 +22,28 @@ Sections
                  plan-build time, one jitted HOOI iteration (every mode's
                  TTMc -> Gram eigh -> factor update + core/fit), and the
                  tucker_auto side of the kind-keyed plan cache.
+  sharded_*      the distributed planned path (repro.dist.planned) on a
+                 forced multi-device CPU host platform: workspace build
+                 (per-mode partitions + shard-local layouts), one jitted
+                 shard_map ALS sweep, and the partition balance.  Runs in a
+                 subprocess because XLA_FLAGS=--xla_force_host_platform_
+                 device_count must be set before jax initializes.
 
   PYTHONPATH=src python benchmarks/bench_e2e.py [--fast] [--out PATH]
+
+Non-clobber contract: the committed BENCH_kernel.json at the repo root is
+the *full-run* baseline trajectory.  `--fast` (the CI smoke subset) and
+`benchmarks/run.py --quick` must never overwrite it — `main` refuses the
+baseline path in fast mode (see `_resolve_out`), instead of relying on the
+caller picking a scratch path by convention.
 """
 from __future__ import annotations
 
 import argparse
+import json
+import os
+import subprocess
+import sys
 import time
 from pathlib import Path
 
@@ -42,6 +58,21 @@ from repro.core.remap import plan_blocks, plan_blocks_reference
 from repro.kernels import ops
 
 ROOT = Path(__file__).resolve().parent.parent
+BASELINE_PATH = ROOT / "BENCH_kernel.json"
+
+
+def _resolve_out(out: str | None, fast: bool) -> Path:
+    """Enforce the non-clobber contract: fast/scratch runs may write anywhere
+    EXCEPT the committed full-run baseline at the repo root."""
+    path = Path(out) if out else BASELINE_PATH
+    if fast and path.resolve() == BASELINE_PATH.resolve():
+        raise SystemExit(
+            f"refusing to overwrite the committed full-run baseline "
+            f"{BASELINE_PATH} with a --fast subset: pass --out <scratch path> "
+            f"(benchmarks/run.py --quick uses a tempdir), or run without "
+            f"--fast to regenerate the baseline"
+        )
+    return path
 
 # blk=256 is the kernel default; blk=32 is the layout-generation stress regime
 # (groups on the scaled presets hold only a few non-zeros each, so the padded
@@ -200,11 +231,77 @@ def bench_tucker(results, presets, core_rank: int, reps: int):
           f"hits={stats['hits']} misses={stats['misses']} (ttmc kind)")
 
 
+_SHARDED_BENCH_CODE = """
+import json, time
+import jax, jax.numpy as jnp, numpy as np
+from repro.core.coo import frostt_like, random_factors
+from repro.dist.sharding import stream_imbalance
+from repro.kernels.ops import make_sharded_planned_cp_als
+
+preset, rank, devices, reps = {preset!r}, {rank}, {devices}, {reps}
+assert jax.device_count() == devices, jax.devices()
+st = frostt_like(preset)
+t0 = time.perf_counter()
+ws = make_sharded_planned_cp_als(st, rank, devices=devices)
+t_build = time.perf_counter() - t0
+facs = ws.pad_factors(random_factors(jax.random.PRNGKey(0), st.shape, rank))
+nxs = jnp.asarray(float(np.sum(st.values.astype(np.float64) ** 2)), jnp.float32)
+facs, lam, fit = ws.sweep(facs, nxs, first=True)
+facs, lam, fit = ws.sweep(facs, nxs, first=False)  # compile steady state
+jax.block_until_ready(fit)
+t0 = time.perf_counter()
+for _ in range(reps):
+    facs, lam, fit = ws.sweep(facs, nxs, first=False)
+jax.block_until_ready(fit)
+print("RESULT " + json.dumps({{
+    "build_s": t_build,
+    "iter_s": (time.perf_counter() - t0) / reps,
+    "imbalance_x": stream_imbalance(ws.stacks[0].shard_nnz),
+    "plan_mib": ws.plan_bytes() / 2**20,
+}}))
+"""
+
+
+def bench_sharded(results, presets, rank: int, devices: int, reps: int):
+    """Distributed planned CP-ALS on a forced multi-device host platform:
+    subprocess-spawned (the device count locks at first jax init), reporting
+    workspace build, steady-state shard_map sweep, and partition balance."""
+    print(f"== sharded planned path ({devices} forced host devices, subprocess)")
+    for preset in presets:
+        code = _SHARDED_BENCH_CODE.format(
+            preset=preset, rank=rank, devices=devices, reps=reps
+        )
+        env = dict(os.environ)
+        env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={devices}"
+        env["PYTHONPATH"] = str(ROOT / "src")
+        out = subprocess.run(
+            [sys.executable, "-c", code], env=env, capture_output=True,
+            text=True, timeout=900, cwd=ROOT,
+        )
+        if out.returncode != 0:
+            raise RuntimeError(
+                f"sharded bench subprocess failed:\n{out.stdout}\n{out.stderr[-3000:]}"
+            )
+        line = [l for l in out.stdout.splitlines() if l.startswith("RESULT ")][-1]
+        r = json.loads(line[len("RESULT "):])
+        results += [
+            result_record("sharded_plan_build", preset, "build_s", r["build_s"], "s"),
+            result_record("sharded_als_iter", preset, "iter_s", r["iter_s"], "s"),
+            result_record("sharded_als_iter", preset, "devices", devices, "count"),
+            result_record("sharded_partition", preset, "imbalance_x", r["imbalance_x"], "x"),
+        ]
+        print(f"  {preset:10s} build={r['build_s']:7.3f}s sweep={r['iter_s']:7.3f}s "
+              f"imbalance={r['imbalance_x']:.2f}x plans={r['plan_mib']:.1f} MiB "
+              f"({devices} devices)")
+
+
 def main(fast: bool = False, out: str | None = None) -> dict:
+    path = _resolve_out(out, fast)
     plan_presets = ("small", "4d_small", "5d_small") if fast else (
         "small", "medium", "4d_small", "5d_small")
     als_presets = ("small", "4d_small", "5d_small")
     tucker_presets = ("tiny",) if fast else ("small", "4d_small")
+    sharded_presets = ("tiny",) if fast else ("tiny", "small")
     reps = 1 if fast else 3
     rank = 16
 
@@ -214,8 +311,8 @@ def main(fast: bool = False, out: str | None = None) -> dict:
     bench_als_iter(als_presets, results, rank=rank, reps=reps)
     bench_plan_cache(results, preset="tiny", rank=rank)
     bench_tucker(results, tucker_presets, core_rank=4, reps=reps)
+    bench_sharded(results, sharded_presets, rank=rank, devices=2, reps=reps)
 
-    path = Path(out) if out else ROOT / "BENCH_kernel.json"
     report = write_report(path, results)
     print(f"[bench_e2e] {len(results)} results -> {path} "
           f"(commit {report['commit'][:12]}, {time.time()-t0:.1f}s total)")

@@ -5,14 +5,20 @@ dispatch experiment and (if dry-run artifacts exist) the roofline table.
 
 --quick runs only the kernel-side sections (traffic models, remapper, PMS,
 kernel layout, and the end-to-end fast path covering BOTH decompositions —
-CP-ALS and Tucker HOOI), skipping the LM-side extras.  The end-to-end
-section always writes to a scratch path so neither mode clobbers the
-committed full-run baseline JSON at the repo root.
+CP-ALS and Tucker HOOI), skipping the LM-side extras.
+
+Non-clobber contract: the end-to-end section always writes to a tempdir
+scratch path, so neither mode can overwrite the committed full-run baseline
+`BENCH_kernel.json` at the repo root.  This is *enforced*, not conventional:
+`bench_e2e._resolve_out` refuses the baseline path for any fast/subset run
+(regenerate the baseline with a full `PYTHONPATH=src python
+benchmarks/bench_e2e.py`).
 """
 from __future__ import annotations
 
 import argparse
 import time
+from pathlib import Path
 
 
 def _section(title: str):
@@ -42,10 +48,12 @@ def main(quick: bool = False) -> None:
              "Tucker HOOI iter / plan caches)")
     import tempfile
     from . import bench_e2e
-    # Write to a scratch path: the fast-mode subset must not clobber the
-    # committed full-run baseline at the repo root.
+    # Scratch path (bench_e2e additionally *refuses* the committed baseline
+    # path in fast mode — see its _resolve_out guard).
     with tempfile.TemporaryDirectory() as td:
-        bench_e2e.main(fast=True, out=f"{td}/BENCH_kernel.json")
+        out = f"{td}/BENCH_kernel.json"
+        assert Path(out).resolve() != bench_e2e.BASELINE_PATH.resolve()
+        bench_e2e.main(fast=True, out=out)
 
     if not quick:
         _section("MoE dispatch: the paper's approaches on the LM side")

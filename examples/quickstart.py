@@ -10,20 +10,20 @@ serves run from this one entry point:
     kernel: `tucker_hooi(method="pallas")` drives the same per-mode BlockPlan
     layouts through the Kronecker-chain kernel — the controller is
     programmable, not CP-specific.
+  * --devices N               Distribute either algorithm over N devices
+    (`method="pallas_sharded"`, repro.dist.planned): the stream is
+    partitioned into balanced output-tile ranges per mode, each shard's
+    remapped layout is device-local, and every iteration is one shard_map
+    sweep with a single psum per mode.  On CPU this forces an N-device host
+    platform via XLA_FLAGS, which must happen BEFORE jax initializes — hence
+    the deferred imports below.
 
   PYTHONPATH=src python examples/quickstart.py [--algo {cp,tucker}] [--fast]
+                                               [--devices N]
 """
 import argparse
+import os
 import time
-
-import jax
-
-from repro.core.coo import frostt_like
-from repro.core.cp_als import cp_als
-from repro.core.hypergraph import approach1_traffic, approach2_traffic, remap_overhead
-from repro.core.pms import search
-from repro.kernels.ops import make_planned_cp_als
-from repro.tucker import make_planned_tucker, tucker_hooi
 
 
 def _print_pms(best):
@@ -33,7 +33,13 @@ def _print_pms(best):
               f"-> t={e.t_total*1e6:.1f}us [{e.bottleneck}-bound] vmem={e.vmem_bytes/2**20:.0f}MiB")
 
 
-def run_cp(st, fast: bool):
+def run_cp(st, fast: bool, devices: int):
+    from repro.core.coo import frostt_like
+    from repro.core.cp_als import cp_als
+    from repro.core.hypergraph import approach1_traffic, approach2_traffic, remap_overhead
+    from repro.core.pms import search
+    from repro.kernels.ops import make_planned_cp_als
+
     rank = 16
     # The paper's Table 1: why Approach 1 (output-direction) wins
     t1 = approach1_traffic(st, 0, rank)
@@ -57,6 +63,17 @@ def run_cp(st, fast: bool):
     print(f"CP-ALS fit={state.fit_history[-1]:.4f} in {time.time()-t0:.1f}s "
           f"(PlannedCPALS, interpret mode)")
 
+    if devices > 1:
+        # The same loop distributed: per-mode balanced stream partitions,
+        # shard-local BlockPlans, one psum of factor rows per mode.
+        t0 = time.time()
+        sh = cp_als(small, rank=8, iters=iters, method="pallas_sharded",
+                    devices=devices, verbose=True)
+        print(f"CP-ALS (sharded x{devices}) fit={sh.fit_history[-1]:.4f} in "
+              f"{time.time()-t0:.1f}s (single-device fit "
+              f"{state.fit_history[-1]:.4f} — must match)")
+        assert abs(sh.fit_history[-1] - state.fit_history[-1]) < 1e-4
+
     # The same workspace drives higher-order tensors (Table 2 has 3–5 modes)
     if not fast:
         st4 = frostt_like("4d_small")
@@ -64,7 +81,11 @@ def run_cp(st, fast: bool):
         print(f"4-mode CP-ALS fit={s4.fit_history[-1]:.4f} (N-mode kernel)")
 
 
-def run_tucker(st, fast: bool):
+def run_tucker(st, fast: bool, devices: int):
+    from repro.core.coo import frostt_like
+    from repro.core.pms import search
+    from repro.tucker import make_planned_tucker, tucker_hooi
+
     core_ranks = (8, 8, 8)
     # PMS scored for the TTM-chain kernel: the core-tensor tile (Kronecker
     # width prod(R_m) lanes) changes both the VMEM fit and the roofline.
@@ -85,20 +106,40 @@ def run_tucker(st, fast: bool):
     print(f"Tucker HOOI fit={state.fit_history[-1]:.4f} core={state.core.shape} "
           f"in {time.time()-t0:.1f}s (PlannedTucker, interpret mode)")
 
+    if devices > 1:
+        t0 = time.time()
+        sh = tucker_hooi(small, ranks_small, iters=iters,
+                         method="pallas_sharded", devices=devices, verbose=True)
+        print(f"Tucker HOOI (sharded x{devices}) fit={sh.fit_history[-1]:.4f} in "
+              f"{time.time()-t0:.1f}s (single-device fit "
+              f"{state.fit_history[-1]:.4f} — must match)")
+        assert abs(sh.fit_history[-1] - state.fit_history[-1]) < 1e-4
+
     if not fast:
         st4 = frostt_like("4d_small")
         s4 = tucker_hooi(st4, (3, 3, 3, 3), iters=2, method="pallas")
         print(f"4-mode Tucker fit={s4.fit_history[-1]:.4f} (N-mode TTMc kernel)")
 
 
-def main(fast: bool = False, algo: str = "cp"):
+def main(fast: bool = False, algo: str = "cp", devices: int = 1):
+    import jax
+
+    from repro.core.coo import frostt_like
+
+    if devices > 1 and jax.device_count() < devices:
+        raise SystemExit(
+            f"need {devices} devices but jax sees {jax.device_count()}; on "
+            f"CPU run through `python examples/quickstart.py --devices "
+            f"{devices}` (it sets XLA_FLAGS before jax initializes)"
+        )
     # A sparse tensor shaped like the FROSTT repository's (paper Table 2)
     st = frostt_like("tiny" if fast else "small")
-    print(f"tensor: shape={st.shape} nnz={st.nnz:,} density={st.density:.2e} algo={algo}")
+    print(f"tensor: shape={st.shape} nnz={st.nnz:,} density={st.density:.2e} "
+          f"algo={algo} devices={devices}")
     if algo == "cp":
-        run_cp(st, fast)
+        run_cp(st, fast, devices)
     elif algo == "tucker":
-        run_tucker(st, fast)
+        run_tucker(st, fast, devices)
     else:
         raise ValueError(f"unknown algo {algo!r}: expected 'cp' or 'tucker'")
 
@@ -108,5 +149,28 @@ if __name__ == "__main__":
     ap.add_argument("--fast", action="store_true", help="CI smoke subset")
     ap.add_argument("--algo", choices=("cp", "tucker"), default="cp",
                     help="decomposition to run on the planned kernels")
+    ap.add_argument("--devices", type=int, default=1,
+                    help="run the sharded planned path over N devices "
+                         "(forces an N-device CPU host platform if needed)")
     a = ap.parse_args()
-    main(fast=a.fast, algo=a.algo)
+    if a.devices > 1:
+        # Must precede the first jax import: the host device count locks at
+        # jax init.  Honor a pre-existing forced count only if it is large
+        # enough — otherwise fail here with the actual conflict, not after
+        # jax has locked the smaller count.
+        import re
+
+        flags = os.environ.get("XLA_FLAGS", "")
+        m = re.search(r"xla_force_host_platform_device_count=(\d+)", flags)
+        if m is None:
+            os.environ["XLA_FLAGS"] = (
+                f"{flags} --xla_force_host_platform_device_count={a.devices}".strip()
+            )
+        elif int(m.group(1)) < a.devices:
+            raise SystemExit(
+                f"XLA_FLAGS already forces {m.group(1)} host devices but "
+                f"--devices {a.devices} was requested; unset "
+                f"xla_force_host_platform_device_count or raise it to "
+                f">= {a.devices}"
+            )
+    main(fast=a.fast, algo=a.algo, devices=a.devices)

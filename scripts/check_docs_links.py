@@ -1,0 +1,70 @@
+"""Docs link check: every intra-repo markdown link in docs/ (and README.md)
+must resolve to an existing file.  Zero dependencies; CI runs it on every
+push so the handbook cannot silently rot as modules move.
+
+  python scripts/check_docs_links.py [root]
+
+Checked: relative `[text](target)` links (with optional #anchor stripped and
+verified against the target's headings when the target is markdown).
+Skipped: absolute URLs (http/https/mailto) and pure #anchors into the same
+file (those are checked against the file's own headings).
+"""
+from __future__ import annotations
+
+import re
+import sys
+from pathlib import Path
+
+LINK_RE = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
+HEADING_RE = re.compile(r"^#{1,6}\s+(.*)$", re.MULTILINE)
+
+
+def _anchor(text: str) -> str:
+    """GitHub-style heading anchor: lowercase, drop non-word chars except
+    hyphens/spaces, spaces to hyphens."""
+    text = re.sub(r"[`*_]", "", text.strip().lower())
+    text = re.sub(r"[^\w\- ]", "", text)
+    return re.sub(r"\s+", "-", text)
+
+
+def _headings(path: Path) -> set[str]:
+    return {_anchor(m.group(1)) for m in HEADING_RE.finditer(path.read_text())}
+
+
+def check_file(md: Path, root: Path) -> list[str]:
+    errors = []
+    for m in LINK_RE.finditer(md.read_text()):
+        target = m.group(1)
+        if target.startswith(("http://", "https://", "mailto:")):
+            continue
+        path_part, _, frag = target.partition("#")
+        dest = md if not path_part else (md.parent / path_part).resolve()
+        if not dest.exists():
+            errors.append(f"{md.relative_to(root)}: dangling link -> {target}")
+            continue
+        if frag and dest.suffix == ".md":
+            if _anchor(frag) not in _headings(dest):
+                errors.append(
+                    f"{md.relative_to(root)}: missing anchor -> {target}"
+                )
+    return errors
+
+
+def main(root: Path) -> int:
+    files = sorted((root / "docs").glob("**/*.md")) + [root / "README.md"]
+    missing = [f for f in files if not f.exists()]
+    errors = [f"missing expected file: {f}" for f in missing]
+    for md in files:
+        if md.exists():
+            errors += check_file(md, root)
+    if errors:
+        print("\n".join(errors))
+        print(f"[check_docs_links] FAILED: {len(errors)} problem(s)")
+        return 1
+    print(f"[check_docs_links] OK: {len(files)} files, all intra-repo links resolve")
+    return 0
+
+
+if __name__ == "__main__":
+    root = Path(sys.argv[1]).resolve() if len(sys.argv) > 1 else Path(__file__).resolve().parent.parent
+    sys.exit(main(root))

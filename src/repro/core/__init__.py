@@ -5,5 +5,5 @@ from .hypergraph import TrafficModel, approach1_traffic, approach2_traffic, rema
 from .remap import remap_stable, remap_pointer_machine, remap_radix, radix_digits, plan_blocks, plan_blocks_reference, BlockPlan, pointer_table, group_key
 from .mttkrp import mttkrp, mttkrp_approach1, mttkrp_approach2, mttkrp_sharded, hadamard_rows
 from .memctrl import MemoryControllerConfig, CacheEngineConfig, DMAEngineConfig, RemapperConfig, TPUSpec
-from .pms import PMSEstimate, predict_from_plan, predict_analytic, search
+from .pms import PMSEstimate, ShardedPMSEstimate, predict_from_plan, predict_analytic, predict_sharded, search, search_sharded
 from .cp_als import cp_als, CPState, fit_value, gram_hadamard

@@ -174,6 +174,8 @@ def cp_als(
     auto_tune: bool = False,
     cfg=None,
     jit_sweep: bool = True,
+    devices: int | None = None,
+    dist=None,
     verbose: bool = False,
 ) -> CPState:
     """Run CP-ALS.
@@ -182,22 +184,32 @@ def cp_als(
             'pallas' — the memory-controller kernel: a `PlannedCPALS`
             workspace (kernels/ops.py) is built once — one remapped,
             device-resident BlockPlan per output mode — and reused for every
-            iteration (plan amortization, Alg. 1 on the Alg. 5 layout).
+            iteration (plan amortization, Alg. 1 on the Alg. 5 layout); or
+            'pallas_sharded' — the distributed planned path
+            (repro.dist.planned): the stream is partitioned into balanced
+            output-tile ranges per mode, each shard's remapped layout is
+            device-local, and every iteration is one jitted shard_map sweep
+            with a single psum of partial factor rows per mode.
     layout: 'remap'  — single stream, remapped (re-sorted) before each mode
                        (Alg. 5; remap runs on device via remap_stable);
             'copies' — per-mode pre-sorted copies (more HBM, no remap traffic).
-            Ignored for method='pallas': the per-mode plans *are* the copies.
+            Ignored for the pallas paths: the per-mode plans *are* the copies.
     mttkrp_fn: optional override with signature (indices, values, factors,
                mode, out_rows) -> (I_mode, R).  Forces the eager loop (the
                override may not be jit-traceable).
-    planned / interpret / auto_tune / cfg: method='pallas' knobs — pass a
-               prebuilt `PlannedCPALS` to reuse plans across calls, or let
-               auto_tune run the PMS per mode (Sec. 5.3).
+    planned / interpret / auto_tune / cfg: pallas-path knobs — pass a
+               prebuilt `PlannedCPALS` (or `ShardedPlannedCPALS` for
+               'pallas_sharded') to reuse plans across calls, or let
+               auto_tune run the PMS per mode (Sec. 5.3; worst-shard
+               makespan for the sharded path).
     jit_sweep: run each iteration as one jitted sweep (factors stay
                device-resident — rank-padded for the pallas path — across
                iterations; `tol` is checked on the host against the
                per-iteration fit scalar).  False restores the eager per-mode
-               dispatch loop, kept as the parity baseline.
+               dispatch loop, kept as the parity baseline ('pallas_sharded'
+               is sweep-only and rejects jit_sweep=False).
+    devices / dist: 'pallas_sharded' placement — a device count for the
+               default 1-D `shard` mesh, or an explicit ShardingPlan.
     """
     if layout not in ("remap", "copies"):
         raise ValueError(f"unknown layout {layout!r}: expected 'remap' or 'copies'")
@@ -208,18 +220,68 @@ def cp_als(
     norm_x_sq = jnp.asarray(float(np.sum(st.values.astype(np.float64) ** 2)), jnp.float32)
     fits: list[float] = []
 
-    if planned is not None and method != "pallas":
+    if planned is not None and method not in ("pallas", "pallas_sharded"):
         raise ValueError(
-            "a PlannedCPALS workspace was passed but method != 'pallas'; "
-            "the workspace would be silently ignored"
+            "a planned workspace was passed but method is not 'pallas' / "
+            "'pallas_sharded'; the workspace would be silently ignored"
+        )
+    if method != "pallas_sharded" and (devices is not None or dist is not None):
+        raise ValueError(
+            f"devices/dist apply only to method='pallas_sharded' (got "
+            f"method={method!r}); they would be silently ignored"
+        )
+    if method == "pallas_sharded":
+        if mttkrp_fn is not None:
+            raise ValueError("mttkrp_fn cannot override the sharded planned path")
+        if not jit_sweep:
+            raise ValueError(
+                "method='pallas_sharded' runs only as the jitted shard_map "
+                "sweep; use method='pallas' for the eager parity baseline"
+            )
+        from ..kernels.ops import ShardedPlannedCPALS, make_sharded_planned_cp_als
+
+        if planned is None:
+            planned = make_sharded_planned_cp_als(
+                st, rank, dist=dist, devices=devices, cfg=cfg,
+                auto_tune=auto_tune, interpret=interpret,
+            )
+        elif not isinstance(planned, ShardedPlannedCPALS):
+            raise ValueError(
+                f"method='pallas_sharded' needs a ShardedPlannedCPALS "
+                f"workspace, got {type(planned).__name__}"
+            )
+        elif planned.shape != st.shape or planned.rank != rank:
+            raise ValueError(
+                f"ShardedPlannedCPALS workspace was built for "
+                f"shape={planned.shape} rank={planned.rank}, got "
+                f"shape={st.shape} rank={rank}"
+            )
+        elif devices is not None and planned.nshards != devices:
+            raise ValueError(
+                f"ShardedPlannedCPALS workspace spans {planned.nshards} "
+                f"shards but devices={devices} was requested"
+            )
+        facs_p = planned.pad_factors(factors)
+        for it in range(iters):
+            facs_p, lam, fit = planned.sweep(facs_p, norm_x_sq, first=(it == 0))
+            if _finish_iter(fits, fit, it, tol, verbose):
+                break
+        return CPState(
+            factors=planned.unpad_factors(facs_p), lam=lam, fit_history=fits
         )
     if method == "pallas" and mttkrp_fn is None:
         # Lazy import: kernels builds on core, not the other way around.
-        from ..kernels.ops import make_planned_cp_als
+        from ..kernels.ops import PlannedCPALS, make_planned_cp_als
 
         if planned is None:
             planned = make_planned_cp_als(
                 st, rank, cfg=cfg, auto_tune=auto_tune, interpret=interpret
+            )
+        elif not isinstance(planned, PlannedCPALS):
+            raise ValueError(
+                f"method='pallas' needs a PlannedCPALS workspace, got "
+                f"{type(planned).__name__} (use method='pallas_sharded' for "
+                f"sharded workspaces)"
             )
         elif planned.shape != st.shape or planned.rank != rank:
             raise ValueError(

@@ -117,6 +117,10 @@ def mttkrp_sharded(
     method: str = "approach1",
     *,
     sorted_by_mode: bool = False,
+    st=None,
+    rank: int | None = None,
+    cfg=None,
+    interpret: bool = True,
 ):
     """Build a shard_map'd MTTKRP from a ``ShardingPlan``: the non-zero
     stream is sharded over the plan's data axes (``plan.stream()``), factor
@@ -131,8 +135,34 @@ def mttkrp_sharded(
     satisfies this — the remap posture); the default assumes an unsorted
     stream, since ``indices_are_sorted`` is a correctness promise to XLA,
     not a hint.
-    """
+
+    method="pallas" dispatches the *planned* route instead: the host-side
+    ``st`` (SparseTensor) and ``rank`` are required, the stream is
+    partitioned into balanced output-tile ranges and each shard gets its own
+    device-local BlockPlan layout (kernels/ops.make_sharded_planned_mttkrp).
+    The returned callable keeps the (indices, values, factors) signature for
+    drop-in use, but the stream arguments are ignored — each shard's
+    remapped copy already lives on its device."""
     from jax.experimental.shard_map import shard_map
+
+    if method == "pallas":
+        if st is None or rank is None:
+            raise ValueError(
+                "mttkrp_sharded(method='pallas') needs the host-side stream: "
+                "pass st=<SparseTensor> and rank=<int> (the BlockPlan "
+                "partitioner runs on host-side numpy)"
+            )
+        from ..kernels.ops import make_sharded_planned_mttkrp
+
+        op = make_sharded_planned_mttkrp(
+            st, mode, rank, dist=plan, cfg=cfg, interpret=interpret
+        )
+
+        def call_planned(indices, values, factors):
+            del indices, values  # per-shard layouts are device-resident
+            return op.output(factors, out_rows)
+
+        return call_planned
 
     axis_names = plan.data_axes()
 

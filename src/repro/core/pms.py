@@ -33,11 +33,14 @@ from .remap import BlockPlan, plan_blocks
 
 __all__ = [
     "PMSEstimate",
+    "ShardedPMSEstimate",
     "predict_from_plan",
     "predict_analytic",
     "predict_ttmc",
     "predict_ttmc_analytic",
+    "predict_sharded",
     "search",
+    "search_sharded",
     "DEFAULT_TILE_CHOICES",
 ]
 
@@ -300,6 +303,52 @@ DEFAULT_TILE_CHOICES: tuple[int, ...] = (128, 256, 512, 1024)
 DEFAULT_BLK_CHOICES: tuple[int, ...] = (128, 256, 512, 1024)
 
 
+def _validate_kernel_args(kernel: str, core_ranks, nmodes: int) -> None:
+    """Shared argument contract of every per-kernel PMS entry point."""
+    if kernel not in ("mttkrp", "ttmc"):
+        raise ValueError(f"unknown kernel {kernel!r}: expected 'mttkrp' or 'ttmc'")
+    if kernel == "ttmc":
+        if core_ranks is None:
+            raise ValueError("kernel='ttmc' requires core_ranks (the full N-tuple)")
+        if len(core_ranks) != nmodes:
+            raise ValueError(
+                f"core_ranks has {len(core_ranks)} entries for a "
+                f"{nmodes}-mode tensor (pass the full N-tuple, not the "
+                f"N-1 input ranks)"
+            )
+
+
+def _feasible_configs(
+    n_in: int,
+    rank: int,
+    spec: TPUSpec,
+    tile_choices: Sequence[int],
+    blk_choices: Sequence[int],
+    kernel: str,
+    in_ranks: tuple[int, ...] | None,
+):
+    """The one enumeration of the controller design space, pruned by the
+    per-kernel VMEM-fit constraint — `search` and `search_sharded` both
+    consume this, so they always explore the identical candidate grid."""
+    for ti, tj, tk, blk in itertools.product(
+        tile_choices, tile_choices, tile_choices, blk_choices
+    ):
+        cfg = MemoryControllerConfig(
+            cache=CacheEngineConfig(tile_i=ti, tile_j=tj, tile_k=tk),
+            dma=DMAEngineConfig(blk=blk),
+        )
+        if kernel == "ttmc":
+            fits = cfg.fits_ttmc(
+                spec,
+                _rank_padded(math.prod(in_ranks)),
+                tuple(_rank_padded(r) for r in in_ranks),
+            )
+        else:
+            fits = cfg.fits(spec, _rank_padded(rank), n_in=n_in)
+        if fits:
+            yield cfg
+
+
 def search(
     st_or_stats: SparseTensor | HypergraphStats,
     mode: int,
@@ -322,45 +371,24 @@ def search(
     search tunes the controller *per kernel*: TTMc's core-tensor output tile
     and per-factor lane paddings change both the VMEM constraint and the
     roofline, so the best configuration generally differs from MTTKRP's."""
-    if kernel not in ("mttkrp", "ttmc"):
-        raise ValueError(f"unknown kernel {kernel!r}: expected 'mttkrp' or 'ttmc'")
-    if kernel == "ttmc" and core_ranks is None:
-        raise ValueError("kernel='ttmc' requires core_ranks (the full N-tuple)")
     if isinstance(st_or_stats, SparseTensor):
         hs = hg_stats(st_or_stats)
         st = st_or_stats
     else:
         hs, st = st_or_stats, None
         exact = False
+    _validate_kernel_args(kernel, core_ranks, hs.nmodes)
     n_in = hs.nmodes - 1
-    if kernel == "ttmc":
-        if len(core_ranks) != hs.nmodes:
-            raise ValueError(
-                f"core_ranks has {len(core_ranks)} entries for a "
-                f"{hs.nmodes}-mode tensor (pass the full N-tuple, not the "
-                f"N-1 input ranks)"
-            )
-        in_ranks = _ttmc_in_ranks(core_ranks, mode)
+    in_ranks = _ttmc_in_ranks(core_ranks, mode) if kernel == "ttmc" else None
 
     results: list[PMSEstimate] = []
-    for ti, tj, tk, blk in itertools.product(tile_choices, tile_choices, tile_choices, blk_choices):
-        cfg = MemoryControllerConfig(
-            cache=CacheEngineConfig(tile_i=ti, tile_j=tj, tile_k=tk),
-            dma=DMAEngineConfig(blk=blk),
-        )
-        if kernel == "ttmc":
-            fits = cfg.fits_ttmc(
-                spec,
-                _rank_padded(math.prod(in_ranks)),
-                tuple(_rank_padded(r) for r in in_ranks),
-            )
-        else:
-            fits = cfg.fits(spec, _rank_padded(rank), n_in=n_in)
-        if not fits:
-            continue
+    for cfg in _feasible_configs(
+        n_in, rank, spec, tile_choices, blk_choices, kernel, in_ranks
+    ):
         if exact and st is not None:
             plan = plan_blocks(
-                st, mode, tile_i=ti, blk=blk, in_tiles=cfg.cache.input_tiles(n_in)
+                st, mode, tile_i=cfg.cache.tile_i, blk=cfg.dma.blk,
+                in_tiles=cfg.cache.input_tiles(n_in),
             )
             if kernel == "ttmc":
                 results.append(predict_ttmc(plan, core_ranks, cfg, spec))
@@ -370,5 +398,180 @@ def search(
             results.append(predict_ttmc_analytic(hs, mode, core_ranks, cfg, spec))
         else:
             results.append(predict_analytic(hs, mode, rank, cfg, spec))
+    results.sort(key=lambda e: e.t_total)
+    return results[:top_k]
+
+
+# ---------------------------------------------------------------------------
+# Sharded PMS: score a configuration by its worst shard (parallel makespan)
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class ShardedPMSEstimate:
+    """PMS estimate for the distributed planned path: the stream is
+    partitioned into `nshards` balanced output-tile ranges
+    (dist/sharding.partition_stream) and every shard runs the kernel on its
+    own device, so wall-clock is the *makespan* — the slowest shard, not the
+    sum.  `t_total` therefore reports max over shards; the collective's
+    `I_out*R` all-reduce is shared by every configuration of the same rank
+    and does not reorder candidates, so it is not modeled here."""
+
+    cfg: MemoryControllerConfig
+    per_shard: tuple[PMSEstimate, ...]
+    shard_nnz: tuple[int, ...]
+
+    @property
+    def nshards(self) -> int:
+        return len(self.per_shard)
+
+    @property
+    def t_total(self) -> float:
+        """Parallel makespan: the slowest shard's roofline time."""
+        return max(e.t_total for e in self.per_shard)
+
+    @property
+    def critical_shard(self) -> int:
+        """Index of the shard that sets the makespan."""
+        ts = [e.t_total for e in self.per_shard]
+        return ts.index(max(ts))
+
+    @property
+    def vmem_bytes(self) -> int:
+        """Per-device VMEM footprint (identical across shards: one cfg)."""
+        return self.per_shard[0].vmem_bytes
+
+    @property
+    def imbalance(self) -> float:
+        """max / mean shard nnz (1.0 = perfectly balanced partition)."""
+        from ..dist.sharding import stream_imbalance
+
+        return stream_imbalance(self.shard_nnz)
+
+    @property
+    def bottleneck(self) -> str:
+        return self.per_shard[self.critical_shard].bottleneck
+
+
+def _empty_shard_estimate(
+    cfg: MemoryControllerConfig,
+    rank: int,
+    n_in: int,
+    kernel: str,
+    in_ranks: tuple[int, ...] | None,
+) -> PMSEstimate:
+    """Zero-cost estimate for a shard that owns no non-zeros (its kernel
+    streams one all-padding block; negligible against any real shard)."""
+    if kernel == "ttmc":
+        vmem = _ttmc_vmem(cfg, in_ranks)
+    else:
+        vmem = cfg.vmem_bytes(_rank_padded(rank), n_in=n_in)
+    return PMSEstimate(
+        cfg=cfg, t_stream=0.0, t_factor=0.0, t_out=0.0, t_compute=0.0,
+        vmem_bytes=vmem, nblocks=0, padding_fraction=0.0,
+    )
+
+
+def _shard_estimate(
+    shard: SparseTensor,
+    hs: HypergraphStats | None,
+    mode: int,
+    rank: int,
+    cfg: MemoryControllerConfig,
+    spec: TPUSpec,
+    kernel: str,
+    core_ranks: Sequence[int] | None,
+    exact: bool,
+) -> PMSEstimate:
+    n_in = shard.nmodes - 1
+    if shard.nnz == 0:
+        in_ranks = _ttmc_in_ranks(core_ranks, mode) if kernel == "ttmc" else None
+        return _empty_shard_estimate(cfg, rank, n_in, kernel, in_ranks)
+    if exact:
+        plan = plan_blocks(
+            shard, mode, tile_i=cfg.cache.tile_i, blk=cfg.dma.blk,
+            in_tiles=cfg.cache.input_tiles(n_in),
+        )
+        if kernel == "ttmc":
+            return predict_ttmc(plan, core_ranks, cfg, spec)
+        return predict_from_plan(plan, rank, cfg, spec)
+    hs = hs if hs is not None else hg_stats(shard)
+    if kernel == "ttmc":
+        return predict_ttmc_analytic(hs, mode, core_ranks, cfg, spec)
+    return predict_analytic(hs, mode, rank, cfg, spec)
+
+
+def predict_sharded(
+    st: SparseTensor,
+    mode: int,
+    rank: int,
+    nshards: int,
+    cfg: MemoryControllerConfig,
+    *,
+    spec: TPUSpec = TPUSpec(),
+    kernel: str = "mttkrp",
+    core_ranks: Sequence[int] | None = None,
+    exact: bool = True,
+) -> ShardedPMSEstimate:
+    """PMS terms for one configuration of the sharded planned path: the
+    stream is partitioned exactly as the workspace builder partitions it
+    (balanced nnz, tile_i-aligned) and each shard is scored independently —
+    exact=True builds every shard's BlockPlan (measured fills), exact=False
+    uses the analytic occupancy model per shard (conservative: it spreads
+    each shard's nnz over the *global* tile space, overestimating fills)."""
+    _validate_kernel_args(kernel, core_ranks, st.nmodes)
+    from ..dist.sharding import partition_stream
+
+    part = partition_stream(st, mode, nshards, tile=cfg.cache.tile_i)
+    ests = tuple(
+        _shard_estimate(sh, None, mode, rank, cfg, spec, kernel, core_ranks, exact)
+        for sh in part.shards
+    )
+    return ShardedPMSEstimate(cfg=cfg, per_shard=ests, shard_nnz=part.shard_nnz)
+
+
+def search_sharded(
+    st: SparseTensor,
+    mode: int,
+    rank: int,
+    nshards: int,
+    *,
+    spec: TPUSpec = TPUSpec(),
+    tile_choices: Sequence[int] = DEFAULT_TILE_CHOICES,
+    blk_choices: Sequence[int] = DEFAULT_BLK_CHOICES,
+    exact: bool = False,
+    top_k: int = 5,
+    kernel: str = "mttkrp",
+    core_ranks: Sequence[int] | None = None,
+) -> list[ShardedPMSEstimate]:
+    """`search`, distributed: rank every VMEM-feasible configuration by the
+    time of its *worst shard* — a configuration that wins on the balanced
+    average can lose on the critical shard, and the critical shard is what
+    the shard_map sweep waits for (the makespan).  Partitions (and per-shard
+    hypergraph stats) are cached per tile_i, since the split depends only on
+    the output tile granularity."""
+    _validate_kernel_args(kernel, core_ranks, st.nmodes)
+    from ..dist.sharding import partition_stream
+
+    n_in = st.nmodes - 1
+    in_ranks = _ttmc_in_ranks(core_ranks, mode) if kernel == "ttmc" else None
+    parts: dict[int, tuple] = {}  # tile_i -> (partition, per-shard stats)
+    results: list[ShardedPMSEstimate] = []
+    for cfg in _feasible_configs(
+        n_in, rank, spec, tile_choices, blk_choices, kernel, in_ranks
+    ):
+        ti = cfg.cache.tile_i
+        if ti not in parts:
+            part = partition_stream(st, mode, nshards, tile=ti)
+            sstats = [hg_stats(s) if s.nnz else None for s in part.shards]
+            parts[ti] = (part, sstats)
+        part, sstats = parts[ti]
+        ests = tuple(
+            _shard_estimate(sh, hs, mode, rank, cfg, spec, kernel, core_ranks, exact)
+            for sh, hs in zip(part.shards, sstats)
+        )
+        results.append(
+            ShardedPMSEstimate(cfg=cfg, per_shard=ests, shard_nnz=part.shard_nnz)
+        )
     results.sort(key=lambda e: e.t_total)
     return results[:top_k]

@@ -1,14 +1,29 @@
 """Distribution layer: sharding plans (mesh-axis partitioning of every model,
-the trainer and the server) and gradient compression.  The TPU analogue of
-the paper's programmable memory controller — see sharding.py."""
+the trainer and the server), the COO stream partitioner, gradient
+compression, and the distributed planned decomposition path
+(`repro.dist.planned` — imported lazily here, since it pulls in the kernel
+layer).  The TPU analogue of the paper's programmable memory controller —
+see sharding.py and docs/architecture.md."""
 from .compression import compress_decompress, dequantize_int8, quantize_int8
 from .sharding import (
     NOPLAN,
     ShardingPlan,
+    StreamPartition,
     batch_pspecs,
     batch_specs,
     make_plan,
     param_pspecs,
+    partition_stream,
     shard,
     valid_spec,
 )
+
+
+def __getattr__(name):
+    # Lazy: repro.dist.planned imports repro.kernels.ops, which in turn may
+    # be mid-import when this package loads (ops lazily imports dist).
+    if name == "planned":
+        import importlib
+
+        return importlib.import_module(".planned", __name__)
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

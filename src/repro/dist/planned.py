@@ -1,0 +1,85 @@
+"""Distributed planned decomposition — the composition of the repo's four
+subsystems (see docs/architecture.md for the full data-path diagram):
+
+    Tensor Remapper  (core/remap.plan_blocks, per shard)
+      -> BlockPlan substrate  (shard-local remapped layouts)
+        -> Pallas kernels  (kernels/mttkrp_pallas, kernels/ttm_pallas)
+          -> shard_map over a ShardingPlan's data axes (this layer)
+            -> one psum of partial factor rows per mode
+
+The paper's traffic model already assumes this split: the non-zero stream is
+partitioned and each partition's remapped layout is served independently by
+its own DMA/Cache engine pair (Sec. 5); GenTen and the hybrid FPGA-CPU
+Tucker system scale the same way — partition the stream across execution
+units, reduce partial factor updates.  Here each "execution unit" is one
+device of a 1-D `shard` mesh: `partition_stream` splits the COO stream into
+balanced, tile-aligned output ranges per mode, every shard gets its own
+BlockPlan (device-local remapped layout), and the unchanged Pallas kernels
+run under shard_map with a single collective per mode.
+
+Entry points (all re-exported here; built in kernels/ops.py):
+
+  * ``cp_als(st, rank, method="pallas_sharded", devices=D)`` /
+    ``tucker_hooi(st, core_ranks, method="pallas_sharded", devices=D)`` —
+    the full decomposition loops, fully-jitted sweep preserved;
+  * ``make_sharded_planned_cp_als`` / ``make_sharded_planned_tucker`` —
+    prebuilt workspaces for reuse across calls;
+  * ``make_sharded_planned_mttkrp`` — one (tensor, mode) distributed kernel,
+    also reachable through ``mttkrp_sharded(..., method="pallas")``;
+  * ``shard_plan`` — the default 1-D mesh -> ShardingPlan;
+  * ``partition_stream`` / ``StreamPartition`` — the stream partitioner.
+
+CPU containers: force a multi-device host platform with
+``XLA_FLAGS=--xla_force_host_platform_device_count=N`` *before* importing
+jax (``examples/quickstart.py --devices N`` does this for you).
+"""
+from __future__ import annotations
+
+import jax
+import numpy as np
+
+from ..kernels.ops import (
+    ShardedPlannedCPALS,
+    ShardedPlannedMTTKRP,
+    ShardedPlannedTucker,
+    make_sharded_planned_cp_als,
+    make_sharded_planned_mttkrp,
+    make_sharded_planned_tucker,
+)
+from .sharding import ShardingPlan, StreamPartition, partition_stream
+
+__all__ = [
+    "shard_plan",
+    "partition_stream",
+    "StreamPartition",
+    "ShardingPlan",
+    "ShardedPlannedMTTKRP",
+    "ShardedPlannedCPALS",
+    "ShardedPlannedTucker",
+    "make_sharded_planned_mttkrp",
+    "make_sharded_planned_cp_als",
+    "make_sharded_planned_tucker",
+]
+
+
+def shard_plan(devices: int | None = None) -> ShardingPlan:
+    """The canonical ShardingPlan for the sharded planned path: a 1-D
+    ``shard`` mesh over the first `devices` local devices (None = all), as
+    the plan's data axis — every spec rule of `ShardingPlan` (notably
+    ``stream()``) then applies unchanged.
+
+    Raises with the XLA_FLAGS recipe when more devices are requested than
+    the platform exposes (on CPU the host device count locks at first jax
+    init, so the flag must be set before importing jax)."""
+    devs = jax.devices()
+    n = len(devs) if devices is None else int(devices)
+    if n < 1:
+        raise ValueError(f"devices must be >= 1, got {devices}")
+    if n > len(devs):
+        raise ValueError(
+            f"requested {n} devices but the platform exposes {len(devs)}; "
+            f"on CPU set XLA_FLAGS=--xla_force_host_platform_device_count={n} "
+            f"before importing jax"
+        )
+    mesh = jax.sharding.Mesh(np.asarray(devs[:n]), ("shard",))
+    return ShardingPlan(mesh=mesh, dp=("shard",))

@@ -7,9 +7,15 @@ from .ops import (
     PlannedCPALS,
     PlannedMTTKRP,
     PlannedTTMC,
+    ShardedPlannedCPALS,
+    ShardedPlannedMTTKRP,
+    ShardedPlannedTucker,
     make_planned_cp_als,
     make_planned_mttkrp,
     make_planned_ttmc,
+    make_sharded_planned_cp_als,
+    make_sharded_planned_mttkrp,
+    make_sharded_planned_tucker,
     mttkrp_auto,
     plan_cache_clear,
     plan_cache_stats,
@@ -35,9 +41,15 @@ __all__ = [
     "PlannedCPALS",
     "PlannedMTTKRP",
     "PlannedTTMC",
+    "ShardedPlannedCPALS",
+    "ShardedPlannedMTTKRP",
+    "ShardedPlannedTucker",
     "make_planned_cp_als",
     "make_planned_mttkrp",
     "make_planned_ttmc",
+    "make_sharded_planned_cp_als",
+    "make_sharded_planned_mttkrp",
+    "make_sharded_planned_tucker",
     "mttkrp_auto",
     "tucker_auto",
     "plan_cache_clear",

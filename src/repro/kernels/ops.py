@@ -24,14 +24,18 @@ layouts coincide today, but the cached objects carry kernel-specific state).
 from __future__ import annotations
 
 import dataclasses
+import functools
 from collections import OrderedDict
-from typing import Callable, Sequence
+from typing import Any, Callable, Sequence
 
 import jax
 import jax.numpy as jnp
+import numpy as np
+from jax.experimental.shard_map import shard_map
+from jax.sharding import NamedSharding, PartitionSpec as P
 
 from ..core.coo import SparseTensor
-from ..core.cp_als import _update_mode, fit_value
+from ..core.cp_als import _update_mode, fit_value, inner_with_model, model_norm_sq
 from ..core.memctrl import MemoryControllerConfig, TPUSpec
 from ..core.pms import search as pms_search
 from ..core.remap import BlockPlan, plan_blocks
@@ -53,12 +57,39 @@ __all__ = [
     "plan_cache_clear",
     "planned_padded_rows",
     "planned_layout_bytes",
+    "ShardedPlannedMTTKRP",
+    "ShardedPlannedCPALS",
+    "ShardedPlannedTucker",
+    "make_sharded_planned_mttkrp",
+    "make_sharded_planned_cp_als",
+    "make_sharded_planned_tucker",
 ]
+
+
+def _apply_row_mask(out: jax.Array, mask: jax.Array) -> jax.Array:
+    """Zero the masked-out rows with `where`, NOT multiplication: unvisited
+    tiles hold NaN in interpret mode and 0 * NaN = NaN."""
+    return jnp.where(mask[:, None] > 0, out, 0.0)
+
+
+def _visited_row_mask(block_it: np.ndarray, tile_i: int, out_rows: int) -> np.ndarray:
+    """1.0 for every output row whose tile some block visits, else 0.0.
+
+    The Pallas kernels zero an output tile only on its *first visit*; a tile
+    no block targets keeps whatever the output buffer held (NaN in interpret
+    mode, undefined on hardware).  Such tiles exist whenever a tile_i range
+    of the output coordinate owns no non-zeros — their MTTKRP/TTMc rows are
+    mathematically zero, so every planned call multiplies by this mask."""
+    ntiles = out_rows // tile_i
+    tile_mask = np.zeros((ntiles,), np.float32)
+    tile_mask[np.unique(block_it)] = 1.0
+    return np.repeat(tile_mask, tile_i)
 
 
 def _plan_device_arrays(plan: BlockPlan) -> dict:
     """Move a BlockPlan's layout to device in the shape the kernels consume:
-    (nblocks, blk) stream tiles + per-block tile-id streams."""
+    (nblocks, blk) stream tiles + per-block tile-id streams + the
+    visited-row mask zeroing tiles the plan never touches."""
     nb, blk = plan.nblocks, plan.blk
     return dict(
         block_it=jnp.asarray(plan.block_it),
@@ -66,6 +97,9 @@ def _plan_device_arrays(plan: BlockPlan) -> dict:
         vals=jnp.asarray(plan.vals).reshape(nb, blk),
         iloc=jnp.asarray(plan.iloc).reshape(nb, blk),
         in_locs=tuple(jnp.asarray(l).reshape(nb, blk) for l in plan.in_locs),
+        row_mask=jnp.asarray(
+            _visited_row_mask(plan.block_it, plan.tile_i, plan.out_rows)
+        ),
     )
 
 
@@ -82,22 +116,29 @@ def planned_layout_bytes(ops: dict[int, "PlannedMTTKRP | PlannedTTMC"]) -> int:
     return total
 
 
+def _padded_rows_from(geoms: dict[int, Any], nmodes: int) -> tuple[int, ...]:
+    """Shared row-padding rule over any per-mode layout family exposing
+    BlockPlan geometry (`out_rows` / `in_modes` / `in_rows`): single-device
+    plans and sharded `_ShardStack`s use identical padding, so factors can
+    move between the two paths without re-padding."""
+    rows = []
+    for m in range(nmodes):
+        r = geoms[m].out_rows
+        for g in geoms.values():
+            for n, im in enumerate(g.in_modes):
+                if im == m:
+                    r = max(r, g.in_rows[n])
+        rows.append(r)
+    return tuple(rows)
+
+
 def planned_padded_rows(ops: dict[int, "PlannedMTTKRP | PlannedTTMC"], nmodes: int) -> tuple[int, ...]:
     """Device-resident row padding per mode for a per-mode plan family: the
     largest padding any plan requires of that factor (its own plan's
     out_rows, plus in_rows wherever it appears as an input mode).  Each
     plan's kernel slices the rows it needs — a static, zero-copy slice
     inside a sweep jit."""
-    rows = []
-    for m in range(nmodes):
-        r = ops[m].plan.out_rows
-        for op in ops.values():
-            p = op.plan
-            for n, im in enumerate(p.in_modes):
-                if im == m:
-                    r = max(r, p.in_rows[n])
-        rows.append(r)
-    return tuple(rows)
+    return _padded_rows_from({m: op.plan for m, op in ops.items()}, nmodes)
 
 
 @dataclasses.dataclass
@@ -138,6 +179,7 @@ class PlannedMTTKRP:
             out_rows=p.out_rows,
             interpret=self.interpret,
         )
+        out = _apply_row_mask(out, self._dev["row_mask"])  # zero unvisited tiles
         return out[: p.out_rows, : self.rank]
 
     def output(self, factors: Sequence[jax.Array], true_rows: int) -> jax.Array:
@@ -215,9 +257,10 @@ class PlannedTTMC:
 
     def call_padded(self, in_factors_pad: Sequence[jax.Array]) -> jax.Array:
         """Run the kernel on already row/lane-padded input factors (the
-        PlannedTucker sweep path).  Returns the padded (out_rows, Pp) tile."""
+        PlannedTucker sweep path).  Returns the padded (out_rows, Pp) tile
+        with unvisited output tiles zeroed."""
         p = self.plan
-        return ttmc_pallas_call(
+        out = ttmc_pallas_call(
             self._dev["block_it"],
             self._dev["block_in"],
             self._dev["vals"],
@@ -231,6 +274,7 @@ class PlannedTTMC:
             out_rows=p.out_rows,
             interpret=self.interpret,
         )
+        return _apply_row_mask(out, self._dev["row_mask"])
 
     def output(self, factors: Sequence[jax.Array], true_rows: int) -> jax.Array:
         return self(*(factors[m] for m in self.plan.in_modes))[:true_rows]
@@ -247,10 +291,27 @@ def make_planned_ttmc(
     interpret: bool = True,
 ) -> PlannedTTMC:
     """Build the memory layout + TTMc kernel instance for one output mode.
-    `core_ranks` is the full N-tuple of Tucker core ranks; the N-1 input
-    ranks are taken from it.  With auto_tune=True the PMS tunes the
-    controller for the TTMc kernel (core-tensor output tile in the VMEM
-    model)."""
+
+    Args:
+      st: host-side COO tensor (>= 3 modes).
+      mode: the output mode n — the kernel computes the unfolding
+        Y_(n) = X_(n) (kron of the other factors).
+      core_ranks: the FULL N-tuple of Tucker core ranks (not the N-1 input
+        ranks); the instance's `in_ranks` are taken from it in
+        plan.in_modes order.  Each input factor is lane-padded to its own
+        `rank_padded(R_m)`; the output carries `prod(in_ranks)` true
+        columns, lane-padded to `cols_padded(prod R_m)`.
+      cfg / auto_tune / spec: controller configuration, or let the PMS tune
+        it for the TTMc kernel specifically (the core-tensor output tile
+        changes both the VMEM constraint and the roofline).
+      interpret: run the Pallas kernel in interpret mode.
+
+    Returns:
+      A `PlannedTTMC` holding the device-resident BlockPlan layout — the
+      SAME layout `make_planned_mttkrp` would build for this (tensor, mode,
+      cfg); only the kernel differs.  Invariant: `op(*in_factors)` expects
+      true-shape factors for plan.in_modes in order and returns
+      (I_mode, prod(in_ranks))."""
     core_ranks = tuple(int(r) for r in core_ranks)
     if len(core_ranks) != st.nmodes:
         raise ValueError(
@@ -359,6 +420,7 @@ class PlannedCPALS:
                     out_rows=p.out_rows,
                     interpret=op.interpret,
                 )
+                out = _apply_row_mask(out, op._dev["row_mask"])  # zero unvisited tiles
                 mt = out[: shape[m], :rank]
                 true = [f[:s, :rank] for f, s in zip(facs, shape)]
                 true, lam = _update_mode(mt, true, m, first)
@@ -374,8 +436,27 @@ class PlannedCPALS:
         return jax.jit(sweep, static_argnames=("first",))
 
     def sweep(self, facs, idx, val, norm_x_sq, *, first: bool = False):
-        """One jitted ALS iteration in padded space.  Returns
-        (new padded factors, lam, fit scalar on device)."""
+        """One jitted ALS iteration in padded space.
+
+        Args:
+          facs: the factor tuple in PADDED space — one (padded_rows[m],
+            rank_pad) array per mode, as produced by `pad_factors` or a
+            previous `sweep` call.  Invariant: padding rows and lanes are
+            exactly zero on entry and are kept exactly zero on exit, so
+            grams/fit computed in padded space match the true-shape
+            computation bit for bit.
+          idx, val: the raw COO stream (any order — only the fit's inner
+            product reads it; the per-mode remapped copies live inside the
+            plans).
+          norm_x_sq: ||X||_F^2 as a device scalar.
+          first: first-ALS-iteration normalization convention
+            (max(norm, 1)); static — one retrace when it flips to False.
+
+        Returns:
+          (new padded factors, lam, fit) — all device-resident; only read
+          `fit` back per iteration (the tol early-exit).  Device-residency
+          contract: feeding the returned factors straight into the next
+          `sweep` call incurs zero host transfers and zero re-padding."""
         if self._sweep_fn is None:
             self._sweep_fn = self._build_sweep()
         return self._sweep_fn(facs, idx, val, norm_x_sq, first=first)
@@ -401,9 +482,24 @@ def make_planned_cp_als(
 ) -> PlannedCPALS:
     """Build the full ALS workspace: one tuned plan per output mode.
 
-    With auto_tune=True each mode gets its own PMS-selected controller
-    configuration (modes have different shapes/locality, Sec. 5.3); otherwise
-    `cfg` (or the default) is shared by every mode."""
+    Args:
+      st: host-side COO tensor (>= 3 modes).  The Tensor Remapper runs once
+        per mode here — this call is the whole layout-generation cost the
+        paper amortizes over the ALS run.
+      rank: CP rank R.  Kernels compute at `rank_padded(R)` lanes (>= 128,
+        128-multiple); results are sliced back to R.
+      cfg: controller configuration shared by every mode (default config if
+        None).  Ignored when auto_tune=True.
+      auto_tune: run the PMS per output mode (modes have different shapes /
+        locality, Sec. 5.3) and take each mode's best configuration.
+      spec: target-hardware constants for the PMS search.
+      interpret: run the Pallas kernels in interpret mode (CPU containers).
+
+    Returns:
+      A `PlannedCPALS` whose per-mode remapped layouts are device-resident
+      for the workspace's lifetime (`plan_bytes()` reports the HBM spend —
+      the per-mode-copies trade).  Reuse it across `cp_als(planned=ws)`
+      calls to skip the remap entirely."""
     ops = {
         m: make_planned_mttkrp(
             st, m, rank, cfg=cfg, auto_tune=auto_tune, spec=spec, interpret=interpret
@@ -424,11 +520,19 @@ _PLAN_CACHE_STATS = {k: {"hits": 0, "misses": 0} for k in _PLAN_CACHE_KINDS}
 
 
 def plan_cache_stats() -> dict:
-    """Hit/miss counters of the shared plan cache (bench_e2e reports them: a
-    hit means a call skipped the whole remap/layout build).  Totals at the
-    top level plus per-kernel-kind counters under "by_kind" — the kinds are
-    tracked separately precisely because the cache key carries a kind
-    discriminator (no cross-kind collisions by construction)."""
+    """Hit/miss counters of the shared plan cache.
+
+    Returns:
+      ``{"hits": int, "misses": int, "by_kind": {"mttkrp": {...},
+      "ttmc": {...}}}`` — totals at the top level plus per-kernel-kind
+      counters.  A hit means a dispatcher call skipped the whole
+      remap/layout build (bench_e2e reports first-vs-cached call times).
+
+    Invariants: the kinds are tracked separately precisely because the
+    cache key carries a kind discriminator — no cross-kind collisions by
+    construction; per-shard BlockPlans of the distributed path count under
+    their kernel's kind (their keys additionally carry a shard field).
+    Counters reset on `plan_cache_clear()`."""
     by_kind = {k: dict(v) for k, v in _PLAN_CACHE_STATS.items()}
     return {
         "hits": sum(v["hits"] for v in by_kind.values()),
@@ -452,19 +556,29 @@ def _planned_cached(
     cfg: MemoryControllerConfig | None,
     interpret: bool,
     build: Callable,
+    *,
+    shard: tuple | None = None,
 ):
     """LRU-cached plan lookup keyed by (kernel kind, tensor content
-    fingerprint, mode, rank key, controller config, interpret) — repeated
-    test/benchmark calls stop repaying the Tensor Remapper on every
+    fingerprint, mode, rank key, controller config, interpret, shard) —
+    repeated test/benchmark calls stop repaying the Tensor Remapper on every
     invocation.  The leading `kind` field keeps MTTKRP and TTMc plans for
-    the same tensor/mode/rank from silently aliasing each other."""
+    the same tensor/mode/rank from silently aliasing each other: the cached
+    kernel instances carry kernel-specific state.  `shard` entries (a
+    `(shard_index, nshards)` pair, None for the single-device dispatchers)
+    are different: they cache raw, kernel-agnostic `BlockPlan`s, so their
+    keys use a shared "layout" kind — CP and Tucker sharded workspaces for
+    the same (tensor, cfg) reuse each other's shard layouts instead of
+    repaying the remap — while hit/miss STATS stay attributed to the
+    calling kernel's kind."""
     key = (
-        kind,
+        "layout" if shard is not None else kind,
         st.fingerprint(),
         mode,
         rank_key,
         cfg or MemoryControllerConfig(),
         bool(interpret),
+        shard,
     )
     stats = _PLAN_CACHE_STATS[kind]
     op = _PLAN_CACHE.get(key)
@@ -523,14 +637,26 @@ def tucker_auto(
     cfg: MemoryControllerConfig | None = None,
 ) -> jax.Array:
     """One-shot sparse TTM-chain dispatcher (the Tucker-side analogue of
-    `mttkrp_auto`): contract every factor but `mode` into X, returning the
-    unfolding Y_(mode) of shape (I_mode, prod of input ranks).
+    `mttkrp_auto`): contract every factor but `mode` into X.
 
-    method: 'pallas' — the planned memory-controller kernel, with its
-    BlockPlan cached in the shared kind-keyed LRU (`plan_cache_stats()["by_kind"]
-    ["ttmc"]`); 'reference' — the pure-jnp gather/Kronecker/segment_sum
-    oracle.  `factors` holds all N factor matrices; the mode-th is not
-    contracted (and its rank is not part of the cache key)."""
+    Args:
+      st: host-side COO tensor.
+      factors: ALL N factor matrices, true shapes (I_m, R_m); the mode-th is
+        not contracted (and its rank is not part of the cache key).  Input
+        ranks are read off the factor shapes.
+      mode: output mode of the unfolding.
+      method: 'pallas' — the planned memory-controller kernel, its BlockPlan
+        cached in the shared kind-keyed LRU (see
+        `plan_cache_stats()["by_kind"]["ttmc"]`); 'reference' — the pure-jnp
+        gather/Kronecker/segment_sum oracle.
+      interpret / cfg: pallas-path knobs (both are part of the cache key).
+
+    Returns:
+      The unfolding Y_(mode), shape (I_mode, prod of input ranks), float32,
+      column order row-major over ascending input mode.  Rank-padding
+      invariant: the kernel pads each input factor to `rank_padded(R_m)`
+      lanes internally and slices the true Kronecker width back out —
+      callers never see padded shapes."""
     core_ranks = tuple(int(f.shape[1]) for f in factors)
     if method == "pallas":
         in_ranks = tuple(r for m, r in enumerate(core_ranks) if m != mode)
@@ -543,4 +669,742 @@ def tucker_auto(
         raise ValueError(f"unknown method {method!r}: expected 'pallas' or 'reference'")
     return ttmc_ref(
         jnp.asarray(st.indices), jnp.asarray(st.values), factors, mode, st.shape[mode]
+    )
+
+
+# ---------------------------------------------------------------------------
+# Sharded planned decomposition (the repro.dist.planned substrate)
+# ---------------------------------------------------------------------------
+#
+# The distributed composition of the whole repo: the COO stream is partitioned
+# into balanced output-mode tile ranges (dist/sharding.partition_stream — the
+# paper's "each DMA engine serves one slice of the remapped stream" posture),
+# one BlockPlan is built per (shard, mode) so every shard's remapped layout is
+# local to its device, and the existing Pallas kernels run unchanged under
+# shard_map with ONE psum of partial factor rows per mode.  Because shard
+# boundaries are tile_i-aligned, each device's kernel writes a disjoint set of
+# output tiles and the psum is a pure reassembly (plus float reassociation).
+
+
+@dataclasses.dataclass
+class _ShardStack:
+    """Stacked (shard-major) BlockPlan layouts for one output mode: shard d's
+    layout occupies row d of every array, padded to the widest shard's block
+    count.  Padding blocks carry zero values and *repeat the last real
+    block's tile ids*, so they re-zero no accumulator, trigger no extra tile
+    fills, and contribute exactly nothing.  Geometry fields mirror BlockPlan
+    (identical across shards: same controller config, same global shape)."""
+
+    block_it: jax.Array  # (D, NB) int32 — global output tile ids
+    block_in: tuple  # n_in x (D, NB) int32
+    vals: jax.Array  # (D, NB, blk) f32
+    iloc: jax.Array  # (D, NB, blk) int32
+    in_locs: tuple  # n_in x (D, NB, blk) int32
+    row_mask: jax.Array  # (D, out_rows) f32 — 1.0 on each shard's visited tiles
+    tile_i: int
+    in_tiles: tuple[int, ...]
+    blk: int
+    out_rows: int  # padded global I_out (multiple of tile_i)
+    in_rows: tuple[int, ...]
+    mode: int
+    in_modes: tuple[int, ...]
+    shard_nblocks: tuple[int, ...]  # true per-shard block counts (pre-pad)
+    shard_nnz: tuple[int, ...]
+    tile_bounds: tuple[int, ...]  # partition cut points, in tile_i units
+
+    @property
+    def nshards(self) -> int:
+        return int(self.block_it.shape[0])
+
+    @property
+    def nblocks(self) -> int:
+        """Padded per-shard block count (the stack width)."""
+        return int(self.block_it.shape[1])
+
+    @property
+    def n_in(self) -> int:
+        return len(self.in_modes)
+
+    def tree(self) -> dict:
+        """The pytree handed through shard_map (leading dim = shard axis)."""
+        return {
+            "block_it": self.block_it,
+            "block_in": self.block_in,
+            "vals": self.vals,
+            "iloc": self.iloc,
+            "in_locs": self.in_locs,
+            "row_mask": self.row_mask,
+        }
+
+    def tree_specs(self, axes) -> dict:
+        """PartitionSpecs matching `tree()`: leading dim over the data axes."""
+        row, cube = P(axes, None), P(axes, None, None)
+        return {
+            "block_it": row,
+            "block_in": tuple(row for _ in self.block_in),
+            "vals": cube,
+            "iloc": cube,
+            "in_locs": tuple(cube for _ in self.in_locs),
+            "row_mask": row,
+        }
+
+
+def _empty_shard_plan(shape: tuple[int, ...], mode: int, cfg: MemoryControllerConfig) -> BlockPlan:
+    """An all-padding layout for a shard that owns no non-zeros (possible
+    when nnz or the output tile count is smaller than the shard count): one
+    zero-value block targeting tile 0, which accumulates exactly zero."""
+    nmodes = len(shape)
+    in_modes = tuple(m for m in range(nmodes) if m != mode)
+    n_in = len(in_modes)
+    in_tiles = cfg.cache.input_tiles(n_in)
+    blk, tile_i = cfg.dma.blk, cfg.cache.tile_i
+    ceil_to = lambda x, t: ((x + t - 1) // t) * t
+    return BlockPlan(
+        vals=np.zeros((blk,), np.float32),
+        iloc=np.zeros((blk,), np.int32),
+        in_locs=tuple(np.zeros((blk,), np.int32) for _ in range(n_in)),
+        block_it=np.zeros((1,), np.int32),
+        block_in=tuple(np.zeros((1,), np.int32) for _ in range(n_in)),
+        tile_i=tile_i,
+        in_tiles=in_tiles,
+        blk=blk,
+        out_rows=ceil_to(shape[mode], tile_i),
+        in_rows=tuple(ceil_to(shape[m], t) for m, t in zip(in_modes, in_tiles)),
+        mode=mode,
+        in_modes=in_modes,
+        nnz=0,
+    )
+
+
+def _stack_shard_plans(plans: Sequence[BlockPlan], part, dist) -> _ShardStack:
+    """Pad per-shard BlockPlans to a common block count and stack them
+    shard-major, then device_put every array with its NamedSharding so each
+    shard's layout is resident on its own device (never gathered)."""
+    p0 = plans[0]
+    for p in plans[1:]:
+        assert (
+            p.tile_i, p.in_tiles, p.blk, p.out_rows, p.in_rows, p.in_modes
+        ) == (
+            p0.tile_i, p0.in_tiles, p0.blk, p0.out_rows, p0.in_rows, p0.in_modes
+        ), "shard plans must share controller geometry"
+    nd = len(plans)
+    nb = max(p.nblocks for p in plans)
+    n_in, blk = p0.n_in, p0.blk
+    row_mask = np.stack(
+        [_visited_row_mask(p.block_it, p.tile_i, p.out_rows) for p in plans]
+    )
+    block_it = np.zeros((nd, nb), np.int32)
+    block_in = [np.zeros((nd, nb), np.int32) for _ in range(n_in)]
+    vals = np.zeros((nd, nb, blk), np.float32)
+    iloc = np.zeros((nd, nb, blk), np.int32)
+    in_locs = [np.zeros((nd, nb, blk), np.int32) for _ in range(n_in)]
+    for d, p in enumerate(plans):
+        k = p.nblocks
+        block_it[d, :k] = p.block_it
+        block_it[d, k:] = p.block_it[-1]
+        for n in range(n_in):
+            block_in[n][d, :k] = p.block_in[n]
+            block_in[n][d, k:] = p.block_in[n][-1]
+        vals[d, :k] = p.vals.reshape(k, blk)
+        iloc[d, :k] = p.iloc.reshape(k, blk)
+        for n in range(n_in):
+            in_locs[n][d, :k] = p.in_locs[n].reshape(k, blk)
+    mesh, axes = dist.mesh, dist.data_axes()
+    sh_row = NamedSharding(mesh, P(axes, None))
+    sh_cube = NamedSharding(mesh, P(axes, None, None))
+    return _ShardStack(
+        block_it=jax.device_put(block_it, sh_row),
+        block_in=tuple(jax.device_put(b, sh_row) for b in block_in),
+        vals=jax.device_put(vals, sh_cube),
+        iloc=jax.device_put(iloc, sh_cube),
+        in_locs=tuple(jax.device_put(l, sh_cube) for l in in_locs),
+        row_mask=jax.device_put(row_mask, sh_row),
+        tile_i=p0.tile_i,
+        in_tiles=p0.in_tiles,
+        blk=blk,
+        out_rows=p0.out_rows,
+        in_rows=p0.in_rows,
+        mode=p0.mode,
+        in_modes=p0.in_modes,
+        shard_nblocks=tuple(p.nblocks for p in plans),
+        shard_nnz=tuple(p.nnz for p in plans),
+        tile_bounds=part.tile_bounds,
+    )
+
+
+def _sharded_mode_stack(
+    st: SparseTensor,
+    mode: int,
+    cfg: MemoryControllerConfig,
+    dist,
+    kind: str,
+):
+    """Partition the stream for one output mode and build its shard-stacked
+    layout.  Per-shard BlockPlans go through the shared LRU with shard-aware
+    keys (`_planned_cached(shard=(d, nshards))`), so rebuilding a workspace
+    for the same tensor skips the per-shard Tensor Remapper.  The cached
+    objects are raw BlockPlans, which depend only on (stream, mode, cfg) —
+    the rank key is a constant sentinel and interpret is pinned False, so
+    rebuilding the same tensor at a different rank or interpret flag still
+    hits.  Returns (partition, stack)."""
+    from ..dist.sharding import partition_stream
+
+    nshards = dist.dp_size()
+    part = partition_stream(st, mode, nshards, tile=cfg.cache.tile_i)
+    n_in = st.nmodes - 1
+    plans = []
+    for d, shard in enumerate(part.shards):
+        if shard.nnz == 0:
+            plans.append(_empty_shard_plan(st.shape, mode, cfg))
+            continue
+        plans.append(
+            _planned_cached(
+                kind, shard, mode, "layout", cfg, False,
+                lambda shard=shard: plan_blocks(
+                    shard,
+                    mode,
+                    tile_i=cfg.cache.tile_i,
+                    blk=cfg.dma.blk,
+                    in_tiles=cfg.cache.input_tiles(n_in),
+                ),
+                shard=(d, nshards),
+            )
+        )
+    return part, _stack_shard_plans(plans, part, dist)
+
+
+def _stack_fit_stream(part, shape: tuple[int, ...], dist):
+    """Shard-stacked raw COO stream for on-device fit terms: each shard's
+    slice zero-padded to the widest shard (padding values are 0, so partial
+    inner products are unchanged).  Returns (idx, val) with leading shard
+    dim, device_put with their NamedShardings."""
+    nd = part.nshards
+    nnz_max = max(1, max(part.shard_nnz))
+    idx = np.zeros((nd, nnz_max, len(shape)), np.int32)
+    val = np.zeros((nd, nnz_max), np.float32)
+    for d, sh in enumerate(part.shards):
+        idx[d, : sh.nnz] = sh.indices
+        val[d, : sh.nnz] = sh.values
+    mesh, axes = dist.mesh, dist.data_axes()
+    return (
+        jax.device_put(idx, NamedSharding(mesh, P(axes, None, None))),
+        jax.device_put(val, NamedSharding(mesh, P(axes, None))),
+    )
+
+
+def _stack_mttkrp_call(stack: _ShardStack, arrs: dict, in_facs, interpret: bool) -> jax.Array:
+    """One shard's MTTKRP kernel over its row of the stack (inside shard_map
+    every stacked array arrives with a leading local dim of 1).
+
+    The result is multiplied by the shard's visited-row mask: the kernel's
+    output buffer is only *written* for tiles its blocks visit; every other
+    tile — outside the shard's partition range OR inside it but owning no
+    non-zeros — keeps whatever the buffer held (NaNs in interpret mode,
+    undefined on hardware).  Masking to the visited tiles zeroes both kinds
+    and makes the psum a pure reassembly of disjoint contributions."""
+    out = mttkrp_pallas_call(
+        arrs["block_it"][0],
+        tuple(t[0] for t in arrs["block_in"]),
+        arrs["vals"][0],
+        arrs["iloc"][0],
+        tuple(l[0] for l in arrs["in_locs"]),
+        in_facs,
+        tile_i=stack.tile_i,
+        in_tiles=stack.in_tiles,
+        blk=stack.blk,
+        out_rows=stack.out_rows,
+        interpret=interpret,
+    )
+    return _apply_row_mask(out, arrs["row_mask"][0])
+
+
+def _stack_ttmc_call(
+    stack: _ShardStack, arrs: dict, in_facs, in_ranks: tuple[int, ...], interpret: bool
+) -> jax.Array:
+    """One shard's TTM-chain kernel over its row of the stack (visited-row
+    masked — see `_stack_mttkrp_call`)."""
+    out = ttmc_pallas_call(
+        arrs["block_it"][0],
+        tuple(t[0] for t in arrs["block_in"]),
+        arrs["vals"][0],
+        arrs["iloc"][0],
+        tuple(l[0] for l in arrs["in_locs"]),
+        in_facs,
+        tile_i=stack.tile_i,
+        in_tiles=stack.in_tiles,
+        in_ranks=in_ranks,
+        blk=stack.blk,
+        out_rows=stack.out_rows,
+        interpret=interpret,
+    )
+    return _apply_row_mask(out, arrs["row_mask"][0])
+
+
+def sharded_layout_bytes(
+    stacks: dict[int, _ShardStack], cfgs: dict[int, MemoryControllerConfig]
+) -> int:
+    """HBM held by a per-mode shard-stack family, summed over every device
+    (the distributed 'copies' trade: N layouts per shard) — the sharded
+    analogue of `planned_layout_bytes`.  Counts the padded stack width, i.e.
+    what is actually resident."""
+    total = 0
+    for m, s in stacks.items():
+        r = cfgs[m].remapper
+        slots = s.nshards * s.nblocks * s.blk
+        total += slots * (r.value_bytes + (1 + s.n_in) * r.index_bytes)
+        total += s.nshards * s.nblocks * (1 + s.n_in) * r.index_bytes
+    return total
+
+
+def _tuned_cfg(
+    st: SparseTensor,
+    mode: int,
+    rank: int,
+    nshards: int,
+    cfg: MemoryControllerConfig | None,
+    auto_tune: bool,
+    spec: TPUSpec,
+    kernel: str = "mttkrp",
+    core_ranks: Sequence[int] | None = None,
+) -> MemoryControllerConfig:
+    """Resolve one mode's controller configuration for the sharded path:
+    the sharded PMS's worst-shard-makespan winner when auto_tune is set,
+    else the explicit cfg, else the default."""
+    if auto_tune:
+        from ..core.pms import search_sharded
+
+        best = search_sharded(
+            st, mode, rank, nshards, spec=spec, top_k=1,
+            kernel=kernel, core_ranks=core_ranks,
+        )
+        if not best:
+            raise ValueError(
+                f"sharded PMS found no VMEM-feasible {kernel} configuration "
+                f"for mode {mode} over {nshards} shards (spec budget "
+                f"{spec.vmem_bytes * spec.vmem_usable_frac:.0f} bytes)"
+            )
+        return best[0].cfg
+    return cfg or MemoryControllerConfig()
+
+
+def _resolve_dist(dist, devices: int | None):
+    """Default ShardingPlan for the sharded planned path: an explicit plan
+    wins; otherwise a 1-D `shard` mesh over the first `devices` (or all)
+    local devices (dist/planned.shard_plan)."""
+    if dist is None:
+        from ..dist.planned import shard_plan
+
+        dist = shard_plan(devices)
+    elif devices is not None and dist.dp_size() != devices:
+        raise ValueError(
+            f"both dist (dp_size={dist.dp_size()}) and devices={devices} "
+            f"were passed and they disagree"
+        )
+    if dist.mesh is None or not dist.data_axes():
+        raise ValueError(
+            "the sharded planned path needs a ShardingPlan with a mesh and "
+            "at least one data axis (see repro.dist.planned.shard_plan)"
+        )
+    return dist
+
+
+@dataclasses.dataclass
+class ShardedPlannedMTTKRP:
+    """One (tensor, mode) MTTKRP distributed over a ShardingPlan's data axes.
+
+    The stream is partitioned into balanced, tile_i-aligned output ranges;
+    each shard's remapped BlockPlan layout lives on its own device
+    (`_ShardStack` row) and a call runs the unchanged Pallas kernel under
+    shard_map, psum-reducing the partial factor rows — `mttkrp_sharded`'s
+    Table-1 `I_out*R` collective, now fed by the planned kernel instead of
+    the pure-JAX approaches."""
+
+    stack: _ShardStack
+    dist: Any  # ShardingPlan with mesh + data axes
+    rank: int
+    interpret: bool
+    cfg: MemoryControllerConfig = dataclasses.field(
+        default_factory=MemoryControllerConfig
+    )
+    _call_fn: Callable | None = dataclasses.field(default=None, repr=False)
+
+    def _build_call(self) -> Callable:
+        stack, interpret = self.stack, self.interpret
+        mesh, axes = self.dist.mesh, self.dist.data_axes()
+        fac_specs = tuple(P(None, None) for _ in range(stack.n_in))
+
+        def local_fn(arrs, pads):
+            out = _stack_mttkrp_call(stack, arrs, pads, interpret)
+            return jax.lax.psum(out, axes)
+
+        def call(arrs, pads):
+            return shard_map(
+                local_fn,
+                mesh=mesh,
+                in_specs=(stack.tree_specs(axes), fac_specs),
+                out_specs=P(None, None),
+                check_rep=False,
+            )(arrs, pads)
+
+        return jax.jit(call)
+
+    def __call__(self, *in_factors: jax.Array) -> jax.Array:
+        """Factors for the N-1 *input* modes (stack.in_modes order), true
+        shapes.  Returns (out_rows_padded, rank) sliced to true columns."""
+        s = self.stack
+        assert len(in_factors) == s.n_in
+        rp = rank_padded(self.rank)
+        pads = tuple(
+            pad_factor(f, rows, rp) for f, rows in zip(in_factors, s.in_rows)
+        )
+        if self._call_fn is None:
+            self._call_fn = self._build_call()
+        out = self._call_fn(s.tree(), pads)
+        return out[: s.out_rows, : self.rank]
+
+    def output(self, factors: Sequence[jax.Array], true_rows: int) -> jax.Array:
+        return self(*(factors[m] for m in self.stack.in_modes))[:true_rows]
+
+
+def make_sharded_planned_mttkrp(
+    st: SparseTensor,
+    mode: int,
+    rank: int,
+    *,
+    dist=None,
+    devices: int | None = None,
+    cfg: MemoryControllerConfig | None = None,
+    auto_tune: bool = False,
+    spec: TPUSpec = TPUSpec(),
+    interpret: bool = True,
+) -> ShardedPlannedMTTKRP:
+    """Build the distributed memory layout + kernel instance for one output
+    mode.  With auto_tune=True the PMS scores configurations by their *worst
+    shard* (`pms.search_sharded` makespan) before the layouts are built."""
+    dist = _resolve_dist(dist, devices)
+    cfg = _tuned_cfg(st, mode, rank, dist.dp_size(), cfg, auto_tune, spec)
+    _, stack = _sharded_mode_stack(st, mode, cfg, dist, "mttkrp")
+    return ShardedPlannedMTTKRP(
+        stack=stack, dist=dist, rank=rank, interpret=interpret, cfg=cfg
+    )
+
+
+@dataclasses.dataclass
+class ShardedPlannedCPALS:
+    """Distributed `PlannedCPALS`: the whole CP-ALS loop on shard-local
+    memory-controller layouts.
+
+    One `_ShardStack` per output mode — shard d of mode m's stack holds the
+    remapped, device-resident layout of shard d's slice of the stream,
+    partitioned by mode-m output tiles (`partition_stream`).  `sweep` runs a
+    full ALS iteration as ONE jitted shard_map: per mode, every device runs
+    the Pallas kernel on its local layout and a single `psum` reassembles the
+    factor rows (shards own disjoint tile ranges, so the sum merges rather
+    than accumulates); gram/solve/normalize then run replicated.  The fit is
+    computed from psum'd scalars — each shard contributes the inner product
+    over its own stream slice.  Factors follow the PlannedCPALS residency
+    contract: rank-padded and device-resident across iterations
+    (`pad_factors` once up front, `unpad_factors` at materialization)."""
+
+    stacks: dict[int, _ShardStack]
+    dist: Any  # ShardingPlan with mesh + data axes
+    shape: tuple[int, ...]
+    rank: int
+    interpret: bool
+    cfgs: dict[int, MemoryControllerConfig]
+    idx_sh: jax.Array  # (D, max shard nnz, N) fit stream, zero-padded
+    val_sh: jax.Array  # (D, max shard nnz)
+    _sweep_fn: Callable | None = dataclasses.field(default=None, repr=False)
+
+    @property
+    def nmodes(self) -> int:
+        return len(self.shape)
+
+    @property
+    def nshards(self) -> int:
+        return self.dist.dp_size()
+
+    @property
+    def rank_pad(self) -> int:
+        return rank_padded(self.rank)
+
+    @property
+    def padded_rows(self) -> tuple[int, ...]:
+        """Per-mode device-resident row padding (same rule as the
+        single-device workspace: `_padded_rows_from`)."""
+        return _padded_rows_from(self.stacks, self.nmodes)
+
+    def pad_factors(self, factors: Sequence[jax.Array]) -> tuple[jax.Array, ...]:
+        """One pad per mode for the whole decomposition (not N x iters)."""
+        rp = self.rank_pad
+        return tuple(
+            pad_factor(f, rows, rp) for f, rows in zip(factors, self.padded_rows)
+        )
+
+    def unpad_factors(self, padded: Sequence[jax.Array]) -> list[jax.Array]:
+        return [f[:s, : self.rank] for f, s in zip(padded, self.shape)]
+
+    def plan_bytes(self) -> int:
+        """HBM held by the shard-stacked layouts, summed over every device
+        (the distributed 'copies' trade: N layouts per shard)."""
+        return sharded_layout_bytes(self.stacks, self.cfgs)
+
+    def _build_sweep(self) -> Callable:
+        shape, rank, nmodes = self.shape, self.rank, self.nmodes
+        rp, prows = self.rank_pad, self.padded_rows
+        stacks, interpret = self.stacks, self.interpret
+        mesh, axes = self.dist.mesh, self.dist.data_axes()
+        arr_specs = {m: stacks[m].tree_specs(axes) for m in range(nmodes)}
+        fac_specs = tuple(P(None, None) for _ in range(nmodes))
+
+        def local_sweep(arrs, idx, val, facs, norm_x_sq, first):
+            facs = list(facs)
+            lam = None
+            for m in range(nmodes):
+                s = stacks[m]
+                in_facs = tuple(
+                    facs[im][: s.in_rows[n]] for n, im in enumerate(s.in_modes)
+                )
+                out = _stack_mttkrp_call(s, arrs[m], in_facs, interpret)
+                # The single collective per mode: partial factor rows from
+                # disjoint tile ranges -> the full MTTKRP output.
+                mt = jax.lax.psum(out, axes)[: shape[m], :rank]
+                true = [f[:sz, :rank] for f, sz in zip(facs, shape)]
+                true, lam = _update_mode(mt, true, m, first)
+                f = true[m]
+                facs[m] = (
+                    jnp.zeros((prows[m], rp), f.dtype).at[: shape[m], :rank].set(f)
+                )
+            true = [f[:sz, :rank] for f, sz in zip(facs, shape)]
+            # Fit from psum'd scalars: each shard's slice of <X, model>
+            # (padding entries carry value 0), reduced once.
+            inner = jax.lax.psum(inner_with_model(idx[0], val[0], true, lam), axes)
+            resid_sq = jnp.maximum(
+                norm_x_sq + model_norm_sq(true, lam) - 2.0 * inner, 0.0
+            )
+            fit = 1.0 - jnp.sqrt(resid_sq) / jnp.sqrt(norm_x_sq)
+            return tuple(facs), lam, fit
+
+        def sweep(arrs, idx_sh, val_sh, facs, norm_x_sq, first):
+            fn = functools.partial(local_sweep, first=first)
+            return shard_map(
+                fn,
+                mesh=mesh,
+                in_specs=(
+                    arr_specs,
+                    P(axes, None, None),
+                    P(axes, None),
+                    fac_specs,
+                    P(),
+                ),
+                out_specs=(fac_specs, P(None), P()),
+                check_rep=False,
+            )(arrs, idx_sh, val_sh, facs, norm_x_sq)
+
+        return jax.jit(sweep, static_argnames=("first",))
+
+    def sweep(self, facs, norm_x_sq, *, first: bool = False):
+        """One jitted distributed ALS iteration in padded space.
+
+        Args: `facs` — the rank-padded factor tuple from `pad_factors`
+        (replicated); `norm_x_sq` — ||X||^2 scalar.  Returns (new padded
+        factors, lam, fit scalar on device) — the same contract as
+        `PlannedCPALS.sweep` minus the stream arguments (each shard's slice
+        already lives on its device)."""
+        if self._sweep_fn is None:
+            self._sweep_fn = self._build_sweep()
+        arrs = {m: self.stacks[m].tree() for m in range(self.nmodes)}
+        return self._sweep_fn(arrs, self.idx_sh, self.val_sh, facs, norm_x_sq, first=first)
+
+
+def make_sharded_planned_cp_als(
+    st: SparseTensor,
+    rank: int,
+    *,
+    dist=None,
+    devices: int | None = None,
+    cfg: MemoryControllerConfig | None = None,
+    auto_tune: bool = False,
+    spec: TPUSpec = TPUSpec(),
+    interpret: bool = True,
+) -> ShardedPlannedCPALS:
+    """Build the distributed ALS workspace: one partition + shard-stacked
+    layout per output mode (each mode partitions by ITS OWN output
+    coordinate, exactly as each mode gets its own remap in Alg. 5).
+
+    dist/devices: a ShardingPlan with >= 1 data axis, or a device count for
+    the default 1-D `shard` mesh (None = all local devices).  With
+    auto_tune=True each mode's controller configuration is chosen by the
+    sharded PMS (worst-shard makespan, `pms.search_sharded`)."""
+    dist = _resolve_dist(dist, devices)
+    nshards = dist.dp_size()
+    stacks: dict[int, _ShardStack] = {}
+    cfgs: dict[int, MemoryControllerConfig] = {}
+    part0 = None
+    for m in range(st.nmodes):
+        mcfg = _tuned_cfg(st, m, rank, nshards, cfg, auto_tune, spec)
+        cfgs[m] = mcfg
+        part, stacks[m] = _sharded_mode_stack(st, m, mcfg, dist, "mttkrp")
+        if m == 0:
+            part0 = part
+    idx_sh, val_sh = _stack_fit_stream(part0, st.shape, dist)
+    return ShardedPlannedCPALS(
+        stacks=stacks,
+        dist=dist,
+        shape=st.shape,
+        rank=rank,
+        interpret=interpret,
+        cfgs=cfgs,
+        idx_sh=idx_sh,
+        val_sh=val_sh,
+    )
+
+
+@dataclasses.dataclass
+class ShardedPlannedTucker:
+    """Distributed `PlannedTucker`: the whole HOOI loop on shard-local
+    memory-controller layouts — the TTM-chain mirror of
+    `ShardedPlannedCPALS` (same partitions, same stacks, Kronecker-chain
+    kernel, per-mode `rank_padded(R_m)` lane contracts).  The fit needs no
+    stream at all: the core comes from the last mode's psum'd unfolding and
+    ||X||^2 - ||G||^2 gives the residual (orthonormal factors)."""
+
+    stacks: dict[int, _ShardStack]
+    dist: Any
+    shape: tuple[int, ...]
+    core_ranks: tuple[int, ...]
+    interpret: bool
+    cfgs: dict[int, MemoryControllerConfig]
+    _sweep_fn: Callable | None = dataclasses.field(default=None, repr=False)
+
+    @property
+    def nmodes(self) -> int:
+        return len(self.shape)
+
+    @property
+    def nshards(self) -> int:
+        return self.dist.dp_size()
+
+    @property
+    def rank_pads(self) -> tuple[int, ...]:
+        """Per-mode lane padding: each factor carries its own R_m padding."""
+        return tuple(rank_padded(r) for r in self.core_ranks)
+
+    @property
+    def padded_rows(self) -> tuple[int, ...]:
+        return _padded_rows_from(self.stacks, self.nmodes)
+
+    def in_ranks(self, mode: int) -> tuple[int, ...]:
+        return tuple(self.core_ranks[im] for im in self.stacks[mode].in_modes)
+
+    def pad_factors(self, factors: Sequence[jax.Array]) -> tuple[jax.Array, ...]:
+        return tuple(
+            pad_factor(f, rows, rp)
+            for f, rows, rp in zip(factors, self.padded_rows, self.rank_pads)
+        )
+
+    def unpad_factors(self, padded: Sequence[jax.Array]) -> list[jax.Array]:
+        return [
+            f[:s, :r] for f, s, r in zip(padded, self.shape, self.core_ranks)
+        ]
+
+    def plan_bytes(self) -> int:
+        """HBM held by the shard-stacked layouts, summed over every device."""
+        return sharded_layout_bytes(self.stacks, self.cfgs)
+
+    def _build_sweep(self) -> Callable:
+        # Lazy: repro.tucker imports this module at load time.
+        from ..tucker.hooi import (
+            _core_from_unfolding,
+            _factor_from_unfolding,
+            core_fit_value,
+        )
+
+        shape, core_ranks, nmodes = self.shape, self.core_ranks, self.nmodes
+        rps, prows = self.rank_pads, self.padded_rows
+        stacks, interpret = self.stacks, self.interpret
+        mesh, axes = self.dist.mesh, self.dist.data_axes()
+        in_ranks = {m: self.in_ranks(m) for m in range(nmodes)}
+        out_cols = {m: kron_cols(in_ranks[m]) for m in range(nmodes)}
+        arr_specs = {m: stacks[m].tree_specs(axes) for m in range(nmodes)}
+        fac_specs = tuple(P(None, None) for _ in range(nmodes))
+
+        def local_sweep(arrs, facs, norm_x_sq):
+            facs = list(facs)
+            y = None
+            for m in range(nmodes):
+                s = stacks[m]
+                in_facs = tuple(
+                    facs[im][: s.in_rows[n]] for n, im in enumerate(s.in_modes)
+                )
+                out = _stack_ttmc_call(s, arrs[m], in_facs, in_ranks[m], interpret)
+                y = jax.lax.psum(out, axes)[: shape[m], : out_cols[m]]
+                u = _factor_from_unfolding(y, core_ranks[m])
+                facs[m] = (
+                    jnp.zeros((prows[m], rps[m]), u.dtype)
+                    .at[: shape[m], : core_ranks[m]]
+                    .set(u)
+                )
+            last = nmodes - 1
+            u_last = facs[last][: shape[last], : core_ranks[last]]
+            core = _core_from_unfolding(y, u_last, last, core_ranks)
+            return tuple(facs), core, core_fit_value(core, norm_x_sq)
+
+        def sweep(arrs, facs, norm_x_sq):
+            return shard_map(
+                local_sweep,
+                mesh=mesh,
+                in_specs=(arr_specs, fac_specs, P()),
+                out_specs=(fac_specs, P(*([None] * nmodes)), P()),
+                check_rep=False,
+            )(arrs, facs, norm_x_sq)
+
+        return jax.jit(sweep)
+
+    def sweep(self, facs, norm_x_sq):
+        """One jitted distributed HOOI iteration in padded space.  Returns
+        (new padded factors, core, fit scalar on device) — the
+        `PlannedTucker.sweep` contract."""
+        if self._sweep_fn is None:
+            self._sweep_fn = self._build_sweep()
+        arrs = {m: self.stacks[m].tree() for m in range(self.nmodes)}
+        return self._sweep_fn(arrs, facs, norm_x_sq)
+
+
+def make_sharded_planned_tucker(
+    st: SparseTensor,
+    core_ranks: Sequence[int],
+    *,
+    dist=None,
+    devices: int | None = None,
+    cfg: MemoryControllerConfig | None = None,
+    auto_tune: bool = False,
+    spec: TPUSpec = TPUSpec(),
+    interpret: bool = True,
+) -> ShardedPlannedTucker:
+    """Build the distributed HOOI workspace: one partition + shard-stacked
+    TTMc layout per output mode.  Mirrors `make_sharded_planned_cp_als`;
+    with auto_tune=True the sharded PMS scores the TTMc roofline per mode
+    (`search_sharded(kernel="ttmc", core_ranks=...)`)."""
+    from ..tucker.hooi import _validated_core_ranks
+
+    cr = _validated_core_ranks(st, core_ranks)
+    dist = _resolve_dist(dist, devices)
+    nshards = dist.dp_size()
+    stacks: dict[int, _ShardStack] = {}
+    cfgs: dict[int, MemoryControllerConfig] = {}
+    for m in range(st.nmodes):
+        mcfg = _tuned_cfg(
+            st, m, max(cr), nshards, cfg, auto_tune, spec,
+            kernel="ttmc", core_ranks=cr,
+        )
+        cfgs[m] = mcfg
+        _, stacks[m] = _sharded_mode_stack(st, m, mcfg, dist, "ttmc")
+    return ShardedPlannedTucker(
+        stacks=stacks,
+        dist=dist,
+        shape=st.shape,
+        core_ranks=cr,
+        interpret=interpret,
+        cfgs=cfgs,
     )

@@ -293,11 +293,13 @@ def tucker_hooi(
     method: str = "pallas",
     seed: int = 0,
     tol: float | None = None,
-    planned: PlannedTucker | None = None,
+    planned: "PlannedTucker | None" = None,
     interpret: bool = True,
     auto_tune: bool = False,
     cfg: MemoryControllerConfig | None = None,
     jit_sweep: bool = True,
+    devices: int | None = None,
+    dist=None,
     verbose: bool = False,
 ) -> TuckerState:
     """Run sparse Tucker HOOI.
@@ -305,13 +307,21 @@ def tucker_hooi(
     method: 'pallas' — the planned TTM-chain memory-controller kernel: a
             `PlannedTucker` workspace is built once (one remapped,
             device-resident BlockPlan per output mode) and reused for every
-            iteration; 'reference' — the pure-jnp TTMc oracle.
-    planned / interpret / auto_tune / cfg: method='pallas' knobs — pass a
-            prebuilt `PlannedTucker` to reuse plans across calls, or let
-            auto_tune run the TTMc-aware PMS per mode.
+            iteration; 'pallas_sharded' — the distributed planned path
+            (repro.dist.planned): per-mode balanced stream partitions,
+            shard-local layouts, one jitted shard_map sweep per iteration
+            with a single psum of the partial TTMc unfolding per mode;
+            'reference' — the pure-jnp TTMc oracle.
+    planned / interpret / auto_tune / cfg: pallas-path knobs — pass a
+            prebuilt `PlannedTucker` (or `ShardedPlannedTucker`) to reuse
+            plans across calls, or let auto_tune run the TTMc-aware PMS per
+            mode (worst-shard makespan for the sharded path).
     jit_sweep: run each iteration as one jitted sweep (factors stay
             device-resident, rank-padded for the pallas path); False keeps
-            the eager per-mode dispatch loop as the parity baseline.
+            the eager per-mode dispatch loop as the parity baseline
+            ('pallas_sharded' is sweep-only and rejects jit_sweep=False).
+    devices / dist: 'pallas_sharded' placement — a device count for the
+            default 1-D `shard` mesh, or an explicit ShardingPlan.
     """
     cr = _validated_core_ranks(st, core_ranks)
     nmodes = st.nmodes
@@ -320,15 +330,64 @@ def tucker_hooi(
     norm_x_sq = jnp.asarray(float(np.sum(st.values.astype(np.float64) ** 2)), jnp.float32)
     fits: list[float] = []
 
-    if planned is not None and method != "pallas":
+    if planned is not None and method not in ("pallas", "pallas_sharded"):
         raise ValueError(
-            "a PlannedTucker workspace was passed but method != 'pallas'; "
-            "the workspace would be silently ignored"
+            "a planned workspace was passed but method is not 'pallas' / "
+            "'pallas_sharded'; the workspace would be silently ignored"
+        )
+    if method != "pallas_sharded" and (devices is not None or dist is not None):
+        raise ValueError(
+            f"devices/dist apply only to method='pallas_sharded' (got "
+            f"method={method!r}); they would be silently ignored"
+        )
+    if method == "pallas_sharded":
+        if not jit_sweep:
+            raise ValueError(
+                "method='pallas_sharded' runs only as the jitted shard_map "
+                "sweep; use method='pallas' for the eager parity baseline"
+            )
+        from ..kernels.ops import ShardedPlannedTucker, make_sharded_planned_tucker
+
+        if planned is None:
+            planned = make_sharded_planned_tucker(
+                st, cr, dist=dist, devices=devices, cfg=cfg,
+                auto_tune=auto_tune, interpret=interpret,
+            )
+        elif not isinstance(planned, ShardedPlannedTucker):
+            raise ValueError(
+                f"method='pallas_sharded' needs a ShardedPlannedTucker "
+                f"workspace, got {type(planned).__name__}"
+            )
+        elif planned.shape != st.shape or planned.core_ranks != cr:
+            raise ValueError(
+                f"ShardedPlannedTucker workspace was built for "
+                f"shape={planned.shape} core_ranks={planned.core_ranks}, got "
+                f"shape={st.shape} core_ranks={cr}"
+            )
+        elif devices is not None and planned.nshards != devices:
+            raise ValueError(
+                f"ShardedPlannedTucker workspace spans {planned.nshards} "
+                f"shards but devices={devices} was requested"
+            )
+        facs_p = planned.pad_factors(factors)
+        core = None
+        for it in range(iters):
+            facs_p, core, fit = planned.sweep(facs_p, norm_x_sq)
+            if _finish_iter(fits, fit, it, tol, verbose):
+                break
+        return TuckerState(
+            factors=planned.unpad_factors(facs_p), core=core, fit_history=fits
         )
     if method == "pallas":
         if planned is None:
             planned = make_planned_tucker(
                 st, cr, cfg=cfg, auto_tune=auto_tune, interpret=interpret
+            )
+        elif not isinstance(planned, PlannedTucker):
+            raise ValueError(
+                f"method='pallas' needs a PlannedTucker workspace, got "
+                f"{type(planned).__name__} (use method='pallas_sharded' for "
+                f"sharded workspaces)"
             )
         elif planned.shape != st.shape or planned.core_ranks != cr:
             raise ValueError(
