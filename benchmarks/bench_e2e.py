@@ -22,6 +22,10 @@ Sections
                  plan-build time, one jitted HOOI iteration (every mode's
                  TTMc -> Gram eigh -> factor update + core/fit), and the
                  tucker_auto side of the kind-keyed plan cache.
+  tt_*           the third workload: PlannedTT plan-build time, one jitted
+                 TT-ALS sweep (every mode's TT-core kernel -> kron(P,Q)
+                 normal solve -> core update + fit), and the tt_auto side
+                 of the kind-keyed plan cache.
   sharded_*      the distributed planned path (repro.dist.planned) on a
                  forced multi-device CPU host platform: workspace build
                  (per-mode partitions + shard-local layouts), one jitted
@@ -231,6 +235,59 @@ def bench_tucker(results, presets, core_rank: int, reps: int):
           f"hits={stats['hits']} misses={stats['misses']} (ttmc kind)")
 
 
+def bench_tt(results, presets, bond_rank: int, reps: int):
+    """Tensor-train ALS on the planned TT-core kernel: layout-build cost,
+    steady-state jitted sweep, and the tt side of the plan cache."""
+    print("== tt: plan build / jitted TT-ALS sweep / tt_auto cache")
+    from repro.tt import core_to_matrix, init_tt_cores, make_planned_tt
+
+    key = jax.random.PRNGKey(0)
+    for preset in presets:
+        st = frostt_like(preset)
+        tt_ranks = (bond_rank,) * (st.nmodes - 1)
+        nxs = _norm_x_sq(st)
+
+        built = []
+        t_plan = _timed(lambda: built.append(make_planned_tt(st, tt_ranks, interpret=True)))
+        ws = built[0]
+        cores = init_tt_cores(key, st.shape, tt_ranks)
+        facs = ws.pad_factors([core_to_matrix(c) for c in cores])
+        idx, val = jnp.asarray(st.indices), jnp.asarray(st.values)
+        facs, _, fit = ws.sweep(facs, idx, val, nxs)
+        facs, _, fit = ws.sweep(facs, idx, val, nxs)  # compile + steady state
+        jax.block_until_ready(fit)
+        t0 = time.perf_counter()
+        for _ in range(reps):
+            facs, _, fit = ws.sweep(facs, idx, val, nxs)
+        jax.block_until_ready(fit)
+        t_iter = (time.perf_counter() - t0) / reps
+        results += [
+            result_record("tt_plan_build", preset, "plan_s", t_plan, "s"),
+            result_record("tt_als_iter", preset, "iter_s", t_iter, "s"),
+        ]
+        print(f"  {preset:10s} plan={t_plan:8.3f}s tt-als(interpret) iter={t_iter:8.3f}s "
+              f"(plans: {ws.plan_bytes()/2**20:.1f} MiB, bond ranks {tt_ranks})")
+
+    # kind-keyed plan cache, tt side (mirrors bench_plan_cache)
+    st = frostt_like("tiny")
+    cores = init_tt_cores(jax.random.PRNGKey(0), st.shape, (bond_rank,) * (st.nmodes - 1))
+    ops.plan_cache_clear()
+    t_first = _timed(lambda: jax.block_until_ready(ops.tt_auto(st, cores, 0)))
+    t_cached = min(
+        _timed(lambda: jax.block_until_ready(ops.tt_auto(st, cores, 0)))
+        for _ in range(2)
+    )
+    stats = ops.plan_cache_stats()["by_kind"]["tt"]
+    results += [
+        result_record("tt_plan_cache", "tiny", "first_call_s", t_first, "s"),
+        result_record("tt_plan_cache", "tiny", "cached_call_s", t_cached, "s"),
+        result_record("tt_plan_cache", "tiny", "hits", stats["hits"], "count"),
+        result_record("tt_plan_cache", "tiny", "misses", stats["misses"], "count"),
+    ]
+    print(f"  tiny       first={t_first:.3f}s cached={t_cached:.3f}s "
+          f"hits={stats['hits']} misses={stats['misses']} (tt kind)")
+
+
 _SHARDED_BENCH_CODE = """
 import json, time
 import jax, jax.numpy as jnp, numpy as np
@@ -311,6 +368,7 @@ def main(fast: bool = False, out: str | None = None) -> dict:
     bench_als_iter(als_presets, results, rank=rank, reps=reps)
     bench_plan_cache(results, preset="tiny", rank=rank)
     bench_tucker(results, tucker_presets, core_rank=4, reps=reps)
+    bench_tt(results, tucker_presets, bond_rank=4, reps=reps)
     bench_sharded(results, sharded_presets, rank=rank, devices=2, reps=reps)
 
     report = write_report(path, results)

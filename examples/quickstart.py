@@ -1,16 +1,20 @@
 """Quickstart: decompose a synthetic FROSTT-like sparse tensor on the
-memory-controller-planned Pallas kernels — both decompositions the substrate
-serves run from this one entry point:
+memory-controller-planned Pallas kernels — every format the substrate serves
+runs from this one entry point, through the unified `decompose()` facade
+(repro/api.py):
 
   * --algo cp      (default)  CP-ALS on the planned MTTKRP kernel:
-    `cp_als(method="pallas")` builds a `PlannedCPALS` workspace (one
-    remapped, device-resident BlockPlan per output mode, paper Alg. 5) once
-    and reuses it for every ALS iteration (paper Alg. 1).
+    `decompose(st, rank, format="cp")` builds a `PlannedCPALS` workspace
+    (one remapped, device-resident BlockPlan per output mode, paper Alg. 5)
+    once and reuses it for every ALS iteration (paper Alg. 1).
   * --algo tucker             Sparse Tucker (HOOI) on the planned TTM-chain
-    kernel: `tucker_hooi(method="pallas")` drives the same per-mode BlockPlan
+    kernel: `decompose(format="tucker")` drives the same per-mode BlockPlan
     layouts through the Kronecker-chain kernel — the controller is
     programmable, not CP-specific.
-  * --devices N               Distribute either algorithm over N devices
+  * --algo tt                 Tensor-train ALS on the planned TT-core kernel:
+    `decompose(format="tt")` drives the same layouts through the
+    Kronecker-of-two-interfaces kernel — the third format on the substrate.
+  * --devices N               Distribute any algorithm over N devices
     (`method="pallas_sharded"`, repro.dist.planned): the stream is
     partitioned into balanced output-tile ranges per mode, each shard's
     remapped layout is device-local, and every iteration is one shard_map
@@ -18,8 +22,8 @@ serves run from this one entry point:
     platform via XLA_FLAGS, which must happen BEFORE jax initializes — hence
     the deferred imports below.
 
-  PYTHONPATH=src python examples/quickstart.py [--algo {cp,tucker}] [--fast]
-                                               [--devices N]
+  PYTHONPATH=src python examples/quickstart.py [--algo {cp,tucker,tt}]
+                                               [--fast] [--devices N]
 """
 import argparse
 import os
@@ -34,8 +38,8 @@ def _print_pms(best):
 
 
 def run_cp(st, fast: bool, devices: int):
+    from repro.api import decompose
     from repro.core.coo import frostt_like
-    from repro.core.cp_als import cp_als
     from repro.core.hypergraph import approach1_traffic, approach2_traffic, remap_overhead
     from repro.core.pms import search
     from repro.kernels.ops import make_planned_cp_als
@@ -59,7 +63,7 @@ def run_cp(st, fast: bool, devices: int):
 
     iters = 2 if fast else 5
     t0 = time.time()
-    state = cp_als(small, rank=8, iters=iters, method="pallas", planned=planned, verbose=True)
+    state = decompose(small, 8, format="cp", iters=iters, planned=planned, verbose=True)
     print(f"CP-ALS fit={state.fit_history[-1]:.4f} in {time.time()-t0:.1f}s "
           f"(PlannedCPALS, interpret mode)")
 
@@ -67,8 +71,8 @@ def run_cp(st, fast: bool, devices: int):
         # The same loop distributed: per-mode balanced stream partitions,
         # shard-local BlockPlans, one psum of factor rows per mode.
         t0 = time.time()
-        sh = cp_als(small, rank=8, iters=iters, method="pallas_sharded",
-                    devices=devices, verbose=True)
+        sh = decompose(small, 8, format="cp", iters=iters,
+                       method="pallas_sharded", devices=devices, verbose=True)
         print(f"CP-ALS (sharded x{devices}) fit={sh.fit_history[-1]:.4f} in "
               f"{time.time()-t0:.1f}s (single-device fit "
               f"{state.fit_history[-1]:.4f} — must match)")
@@ -77,14 +81,15 @@ def run_cp(st, fast: bool, devices: int):
     # The same workspace drives higher-order tensors (Table 2 has 3–5 modes)
     if not fast:
         st4 = frostt_like("4d_small")
-        s4 = cp_als(st4, rank=8, iters=2, method="pallas")
+        s4 = decompose(st4, 8, format="cp", iters=2)
         print(f"4-mode CP-ALS fit={s4.fit_history[-1]:.4f} (N-mode kernel)")
 
 
 def run_tucker(st, fast: bool, devices: int):
+    from repro.api import decompose
     from repro.core.coo import frostt_like
     from repro.core.pms import search
-    from repro.tucker import make_planned_tucker, tucker_hooi
+    from repro.tucker import make_planned_tucker
 
     core_ranks = (8, 8, 8)
     # PMS scored for the TTM-chain kernel: the core-tensor tile (Kronecker
@@ -101,15 +106,15 @@ def run_tucker(st, fast: bool, devices: int):
 
     iters = 2 if fast else 5
     t0 = time.time()
-    state = tucker_hooi(small, ranks_small, iters=iters, method="pallas",
-                        planned=planned, verbose=True)
+    state = decompose(small, ranks_small, format="tucker", iters=iters,
+                      planned=planned, verbose=True)
     print(f"Tucker HOOI fit={state.fit_history[-1]:.4f} core={state.core.shape} "
           f"in {time.time()-t0:.1f}s (PlannedTucker, interpret mode)")
 
     if devices > 1:
         t0 = time.time()
-        sh = tucker_hooi(small, ranks_small, iters=iters,
-                         method="pallas_sharded", devices=devices, verbose=True)
+        sh = decompose(small, ranks_small, format="tucker", iters=iters,
+                       method="pallas_sharded", devices=devices, verbose=True)
         print(f"Tucker HOOI (sharded x{devices}) fit={sh.fit_history[-1]:.4f} in "
               f"{time.time()-t0:.1f}s (single-device fit "
               f"{state.fit_history[-1]:.4f} — must match)")
@@ -117,8 +122,50 @@ def run_tucker(st, fast: bool, devices: int):
 
     if not fast:
         st4 = frostt_like("4d_small")
-        s4 = tucker_hooi(st4, (3, 3, 3, 3), iters=2, method="pallas")
+        s4 = decompose(st4, (3, 3, 3, 3), format="tucker", iters=2)
         print(f"4-mode Tucker fit={s4.fit_history[-1]:.4f} (N-mode TTMc kernel)")
+
+
+def run_tt(st, fast: bool, devices: int):
+    from repro.api import decompose
+    from repro.core.coo import frostt_like
+    from repro.core.pms import search
+    from repro.tt import make_planned_tt
+
+    tt_ranks = (8, 8)
+    # PMS scored for the TT-core kernel: the two-interface scratch and the
+    # rank_padded(rl*rr) lane widths change the VMEM fit and the roofline.
+    _print_pms(search(st, 0, 16, kernel="tt", core_ranks=tt_ranks, top_k=3))
+
+    # TT-ALS entirely on the planned TT-core kernel — the SAME BlockPlan
+    # layouts MTTKRP/TTMc use, built once per mode and amortized over all
+    # iterations.
+    small = frostt_like("tiny")
+    ranks_small = (4, 4)
+    planned = make_planned_tt(small, ranks_small, interpret=True)
+    print(f"planned workspace: {small.nmodes} mode plans, "
+          f"{planned.plan_bytes()/2**20:.2f} MiB of remapped copies on HBM")
+
+    iters = 2 if fast else 5
+    t0 = time.time()
+    state = decompose(small, ranks_small, format="tt", iters=iters,
+                      planned=planned, verbose=True)
+    print(f"TT-ALS fit={state.fit_history[-1]:.4f} tt_ranks={state.tt_ranks} "
+          f"in {time.time()-t0:.1f}s (PlannedTT, interpret mode)")
+
+    if devices > 1:
+        t0 = time.time()
+        sh = decompose(small, ranks_small, format="tt", iters=iters,
+                       method="pallas_sharded", devices=devices, verbose=True)
+        print(f"TT-ALS (sharded x{devices}) fit={sh.fit_history[-1]:.4f} in "
+              f"{time.time()-t0:.1f}s (single-device fit "
+              f"{state.fit_history[-1]:.4f} — must match)")
+        assert abs(sh.fit_history[-1] - state.fit_history[-1]) < 1e-4
+
+    if not fast:
+        st4 = frostt_like("4d_small")
+        s4 = decompose(st4, (3, 3, 3), format="tt", iters=2)
+        print(f"4-mode TT-ALS fit={s4.fit_history[-1]:.4f} (N-mode TT kernel)")
 
 
 def main(fast: bool = False, algo: str = "cp", devices: int = 1):
@@ -140,14 +187,16 @@ def main(fast: bool = False, algo: str = "cp", devices: int = 1):
         run_cp(st, fast, devices)
     elif algo == "tucker":
         run_tucker(st, fast, devices)
+    elif algo == "tt":
+        run_tt(st, fast, devices)
     else:
-        raise ValueError(f"unknown algo {algo!r}: expected 'cp' or 'tucker'")
+        raise ValueError(f"unknown algo {algo!r}: expected 'cp', 'tucker' or 'tt'")
 
 
 if __name__ == "__main__":
     ap = argparse.ArgumentParser()
     ap.add_argument("--fast", action="store_true", help="CI smoke subset")
-    ap.add_argument("--algo", choices=("cp", "tucker"), default="cp",
+    ap.add_argument("--algo", choices=("cp", "tucker", "tt"), default="cp",
                     help="decomposition to run on the planned kernels")
     ap.add_argument("--devices", type=int, default=1,
                     help="run the sharded planned path over N devices "

@@ -1,0 +1,128 @@
+"""Unified tensor-network decomposition facade.
+
+One entry point for all three formats on the programmable-memory-controller
+substrate:
+
+    from repro.api import decompose
+
+    cp  = decompose(st, rank=8)                          # CP-ALS
+    tk  = decompose(st, rank=(4, 4, 4), format="tucker") # Tucker HOOI
+    tt  = decompose(st, rank=(4, 3), format="tt")        # TT-ALS
+
+Every format runs the same stack underneath: the Tensor Remapper builds one
+BlockPlan per output mode, a `PlannedWorkspace` (kernels/workspace.py) keeps
+lane-padded factors device-resident and drives the fully-jitted sweep with
+host-side tol early-exit, and the format supplies only its sweep body
+(MTTKRP + normal solve for CP, TTMc + Gram eigh for Tucker, TT-core +
+kron(P, Q) solve for TT).  `method="pallas_sharded"` routes through the
+distributed planned path (repro.dist.planned) for any format; `planned=`
+accepts the format's prebuilt workspace for plan reuse across calls.
+
+This module deliberately holds no algorithm logic — it normalizes the rank
+argument per format and dispatches to `cp_als` / `tucker_hooi` / `tt_als`,
+whose keyword surfaces are already aligned."""
+from __future__ import annotations
+
+from typing import Sequence
+
+from .core.coo import SparseTensor
+
+__all__ = ["decompose"]
+
+_FORMATS = ("cp", "tucker", "tt")
+
+
+def _normalized_rank(format: str, rank, nmodes: int):
+    """Per-format rank normalization: CP takes a single int; Tucker an
+    N-tuple (an int broadcasts to every mode); TT the N-1 interior bond
+    ranks (an int broadcasts to every bond).  Detailed range validation
+    stays with each format's driver."""
+    if format == "cp":
+        if not isinstance(rank, int):
+            raise ValueError(
+                f"format='cp' takes a single integer rank, got {rank!r}"
+            )
+        return rank
+    if format == "tucker":
+        if isinstance(rank, int):
+            return (rank,) * nmodes
+        return tuple(int(r) for r in rank)
+    if isinstance(rank, int):
+        return (rank,) * (nmodes - 1)
+    return tuple(int(r) for r in rank)
+
+
+def decompose(
+    st: SparseTensor,
+    rank: int | Sequence[int],
+    *,
+    format: str = "cp",
+    method: str = "pallas",
+    iters: int = 10,
+    seed: int = 0,
+    tol: float | None = None,
+    planned=None,
+    interpret: bool = True,
+    auto_tune: bool = False,
+    cfg=None,
+    jit_sweep: bool = True,
+    devices: int | None = None,
+    dist=None,
+    verbose: bool = False,
+    **format_kwargs,
+):
+    """Decompose a sparse tensor on the programmable memory controller.
+
+    Args:
+      st: host-side COO tensor (>= 3 modes).
+      rank: CP rank (int), Tucker core ranks (N-tuple; int broadcasts), or
+        TT interior bond ranks (N-1 tuple; int broadcasts) — selected by
+        `format`.
+      format: 'cp' (CP-ALS), 'tucker' (HOOI) or 'tt' (TT-ALS).
+      method: 'pallas' — the planned memory-controller kernel (one remapped,
+        device-resident BlockPlan per output mode, built once and reused
+        every iteration); 'pallas_sharded' — the distributed planned path
+        (one jitted shard_map sweep per iteration, a single psum per mode);
+        'reference' — the format's pure-jnp oracle (Tucker/TT; for CP the
+        eager compute-pattern methods 'approach1'/'approach2' play that
+        role).
+      iters / seed / tol / verbose: iteration count, init seed, host-side
+        relative-fit early-exit, per-iteration fit printing.
+      planned: a prebuilt format workspace (`PlannedCPALS`, `PlannedTucker`,
+        `PlannedTT`, or their Sharded* variants) to reuse plans across
+        calls; type-checked against `format`/`method`.
+      interpret / auto_tune / cfg: pallas-path knobs — interpret-mode Pallas
+        (CPU containers), per-mode PMS tuning, explicit controller config.
+      jit_sweep: fully-jitted per-iteration sweep (the default); False keeps
+        each format's eager per-mode dispatch loop as the parity baseline.
+      devices / dist: 'pallas_sharded' placement.
+      **format_kwargs: forwarded to the format driver (e.g. TT's
+        `init='svd'|'random'|'auto'`, CP's `layout=` / `mttkrp_fn=`).
+
+    Returns:
+      The format's state object — `CPState(factors, lam, fit_history)`,
+      `TuckerState(factors, core, fit_history)` or
+      `TTState(cores, fit_history)`; all carry `fit_history`.
+    """
+    if format not in _FORMATS:
+        raise ValueError(
+            f"unknown format {format!r}: expected 'cp', 'tucker' or 'tt'"
+        )
+    r = _normalized_rank(format, rank, st.nmodes)
+    common = dict(
+        iters=iters, method=method, seed=seed, tol=tol, planned=planned,
+        interpret=interpret, auto_tune=auto_tune, cfg=cfg,
+        jit_sweep=jit_sweep, devices=devices, dist=dist, verbose=verbose,
+        **format_kwargs,
+    )
+    if format == "cp":
+        from .core.cp_als import cp_als
+
+        return cp_als(st, r, **common)
+    if format == "tucker":
+        from .tucker.hooi import tucker_hooi
+
+        return tucker_hooi(st, r, **common)
+    from .tt.als import tt_als
+
+    return tt_als(st, r, **common)

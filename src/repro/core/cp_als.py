@@ -25,6 +25,12 @@ import jax.numpy as jnp
 import numpy as np
 
 from .coo import SparseTensor, to_device, random_factors
+from .loop import (
+    check_planned_method,
+    check_workspace,
+    finish_iter,
+    require_sharded_sweep,
+)
 from .mttkrp import mttkrp, hadamard_rows
 from .remap import remap_stable
 
@@ -150,15 +156,6 @@ def _sweep_remap(factors, idx, val, norm_x_sq, *, shape, method, first):
     return tuple(factors), lam, idx, val, fit
 
 
-def _finish_iter(fits, fit, it, tol, verbose) -> bool:
-    """Host-side bookkeeping per iteration: record the fit scalar and decide
-    the tol early-exit (the only device->host sync in the jitted loops)."""
-    fits.append(float(fit))
-    if verbose:
-        print(f"[cp_als] iter {it:3d} fit={fits[-1]:.6f}")
-    return tol is not None and it > 0 and abs(fits[-1] - fits[-2]) < tol
-
-
 def cp_als(
     st: SparseTensor,
     rank: int,
@@ -220,24 +217,11 @@ def cp_als(
     norm_x_sq = jnp.asarray(float(np.sum(st.values.astype(np.float64) ** 2)), jnp.float32)
     fits: list[float] = []
 
-    if planned is not None and method not in ("pallas", "pallas_sharded"):
-        raise ValueError(
-            "a planned workspace was passed but method is not 'pallas' / "
-            "'pallas_sharded'; the workspace would be silently ignored"
-        )
-    if method != "pallas_sharded" and (devices is not None or dist is not None):
-        raise ValueError(
-            f"devices/dist apply only to method='pallas_sharded' (got "
-            f"method={method!r}); they would be silently ignored"
-        )
+    check_planned_method(method, planned, devices, dist)
     if method == "pallas_sharded":
         if mttkrp_fn is not None:
             raise ValueError("mttkrp_fn cannot override the sharded planned path")
-        if not jit_sweep:
-            raise ValueError(
-                "method='pallas_sharded' runs only as the jitted shard_map "
-                "sweep; use method='pallas' for the eager parity baseline"
-            )
+        require_sharded_sweep(jit_sweep)
         from ..kernels.ops import ShardedPlannedCPALS, make_sharded_planned_cp_als
 
         if planned is None:
@@ -245,30 +229,16 @@ def cp_als(
                 st, rank, dist=dist, devices=devices, cfg=cfg,
                 auto_tune=auto_tune, interpret=interpret,
             )
-        elif not isinstance(planned, ShardedPlannedCPALS):
-            raise ValueError(
-                f"method='pallas_sharded' needs a ShardedPlannedCPALS "
-                f"workspace, got {type(planned).__name__}"
+        else:
+            check_workspace(
+                planned, ShardedPlannedCPALS, method,
+                {"shape": st.shape, "rank": rank}, devices=devices,
             )
-        elif planned.shape != st.shape or planned.rank != rank:
-            raise ValueError(
-                f"ShardedPlannedCPALS workspace was built for "
-                f"shape={planned.shape} rank={planned.rank}, got "
-                f"shape={st.shape} rank={rank}"
-            )
-        elif devices is not None and planned.nshards != devices:
-            raise ValueError(
-                f"ShardedPlannedCPALS workspace spans {planned.nshards} "
-                f"shards but devices={devices} was requested"
-            )
-        facs_p = planned.pad_factors(factors)
-        for it in range(iters):
-            facs_p, lam, fit = planned.sweep(facs_p, norm_x_sq, first=(it == 0))
-            if _finish_iter(fits, fit, it, tol, verbose):
-                break
-        return CPState(
-            factors=planned.unpad_factors(facs_p), lam=lam, fit_history=fits
+        factors, lam, fits = planned.drive(
+            factors, (norm_x_sq,), iters=iters, tol=tol, verbose=verbose,
+            label="cp_als",
         )
+        return CPState(factors=factors, lam=lam, fit_history=fits)
     if method == "pallas" and mttkrp_fn is None:
         # Lazy import: kernels builds on core, not the other way around.
         from ..kernels.ops import PlannedCPALS, make_planned_cp_als
@@ -277,31 +247,19 @@ def cp_als(
             planned = make_planned_cp_als(
                 st, rank, cfg=cfg, auto_tune=auto_tune, interpret=interpret
             )
-        elif not isinstance(planned, PlannedCPALS):
-            raise ValueError(
-                f"method='pallas' needs a PlannedCPALS workspace, got "
-                f"{type(planned).__name__} (use method='pallas_sharded' for "
-                f"sharded workspaces)"
-            )
-        elif planned.shape != st.shape or planned.rank != rank:
-            raise ValueError(
-                f"PlannedCPALS workspace was built for shape={planned.shape} "
-                f"rank={planned.rank}, got shape={st.shape} rank={rank}"
+        else:
+            check_workspace(
+                planned, PlannedCPALS, method, {"shape": st.shape, "rank": rank}
             )
         if jit_sweep:
             # Fast path: factors padded once, updated in padded space by one
             # jitted sweep per iteration; sliced back only for the CPState.
             base_idx, base_val = jnp.asarray(st.indices), jnp.asarray(st.values)
-            facs_p = planned.pad_factors(factors)
-            for it in range(iters):
-                facs_p, lam, fit = planned.sweep(
-                    facs_p, base_idx, base_val, norm_x_sq, first=(it == 0)
-                )
-                if _finish_iter(fits, fit, it, tol, verbose):
-                    break
-            return CPState(
-                factors=planned.unpad_factors(facs_p), lam=lam, fit_history=fits
+            factors, lam, fits = planned.drive(
+                factors, (base_idx, base_val, norm_x_sq), iters=iters, tol=tol,
+                verbose=verbose, label="cp_als",
             )
+            return CPState(factors=factors, lam=lam, fit_history=fits)
         mttkrp_fn = planned.mttkrp_fn
         layout = "planned"
 
@@ -336,7 +294,7 @@ def cp_als(
                     factors_t, cur_idx, cur_val, norm_x_sq,
                     shape=st.shape, method=method, first=(it == 0),
                 )
-            if _finish_iter(fits, fit, it, tol, verbose):
+            if finish_iter(fits, fit, it, tol, verbose, "cp_als"):
                 break
         return CPState(factors=list(factors_t), lam=lam, fit_history=fits)
 
@@ -360,6 +318,6 @@ def cp_als(
             f = _solve(mt, g)
             f, lam = _normalize(f, it)
             factors[m] = f
-        if _finish_iter(fits, fit_value(idx, val, factors, lam, norm_x_sq), it, tol, verbose):
+        if finish_iter(fits, fit_value(idx, val, factors, lam, norm_x_sq), it, tol, verbose, "cp_als"):
             break
     return CPState(factors=factors, lam=lam, fit_history=fits)

@@ -1,0 +1,83 @@
+"""Shared host-side driver pieces for the decomposition loops.
+
+Every format driver (`cp_als`, `tucker_hooi`, `tt_als`) runs the same outer
+shape: validate the method/workspace arguments, pad the factors once, call one
+jitted sweep per iteration, read a single fit scalar back for the tol
+early-exit, and unpad at materialization.  The per-iteration bookkeeping and
+the argument contracts live here so the drivers stay format-specific only in
+their math — `repro.kernels.workspace.PlannedWorkspace.drive` is the matching
+device-side loop.
+
+This module is importable from `repro.core` (it must not import
+`repro.kernels`: kernels builds on core, not the other way around) — workspace
+classes are passed in as arguments where needed.
+"""
+from __future__ import annotations
+
+__all__ = [
+    "finish_iter",
+    "check_planned_method",
+    "require_sharded_sweep",
+    "check_workspace",
+]
+
+
+def finish_iter(fits, fit, it: int, tol, verbose: bool, label: str) -> bool:
+    """Host-side bookkeeping per iteration: record the fit scalar and decide
+    the tol early-exit (the only device->host sync in the jitted loops)."""
+    fits.append(float(fit))
+    if verbose:
+        print(f"[{label}] iter {it:3d} fit={fits[-1]:.6f}")
+    return tol is not None and it > 0 and abs(fits[-1] - fits[-2]) < tol
+
+
+def check_planned_method(method: str, planned, devices, dist) -> None:
+    """The argument contract every planned driver shares: a workspace only
+    makes sense for the pallas paths, and placement arguments only for the
+    sharded one — both would otherwise be silently ignored."""
+    if planned is not None and method not in ("pallas", "pallas_sharded"):
+        raise ValueError(
+            "a planned workspace was passed but method is not 'pallas' / "
+            "'pallas_sharded'; the workspace would be silently ignored"
+        )
+    if method != "pallas_sharded" and (devices is not None or dist is not None):
+        raise ValueError(
+            f"devices/dist apply only to method='pallas_sharded' (got "
+            f"method={method!r}); they would be silently ignored"
+        )
+
+
+def require_sharded_sweep(jit_sweep: bool) -> None:
+    if not jit_sweep:
+        raise ValueError(
+            "method='pallas_sharded' runs only as the jitted shard_map "
+            "sweep; use method='pallas' for the eager parity baseline"
+        )
+
+
+def check_workspace(planned, cls, method: str, attrs: dict, devices=None) -> None:
+    """Validate a caller-supplied workspace against the call: right class for
+    the method, built for the same tensor geometry/ranks, spanning the
+    requested device count.  `attrs` maps attribute name -> the value this
+    call requires (compared against the workspace's attribute)."""
+    if not isinstance(planned, cls):
+        extra = (
+            ""
+            if method == "pallas_sharded"
+            else " (use method='pallas_sharded' for sharded workspaces)"
+        )
+        raise ValueError(
+            f"method={method!r} needs a {cls.__name__} workspace, got "
+            f"{type(planned).__name__}{extra}"
+        )
+    if any(getattr(planned, k) != v for k, v in attrs.items()):
+        built = " ".join(f"{k}={getattr(planned, k)}" for k in attrs)
+        want = " ".join(f"{k}={v}" for k, v in attrs.items())
+        raise ValueError(
+            f"{cls.__name__} workspace was built for {built}, got {want}"
+        )
+    if devices is not None and getattr(planned, "nshards", devices) != devices:
+        raise ValueError(
+            f"{cls.__name__} workspace spans {planned.nshards} shards but "
+            f"devices={devices} was requested"
+        )

@@ -116,3 +116,42 @@ class MemoryControllerConfig:
             self.vmem_bytes_ttmc(out_cols_padded, in_rank_pads)
             <= spec.vmem_bytes * spec.vmem_usable_frac
         )
+
+    def vmem_bytes_tt(
+        self,
+        out_cols_padded: int,
+        in_rank_pads: tuple[int, ...],
+        iface_cols: int,
+    ) -> int:
+        """VMEM footprint of one TT-core kernel instance (per buffer set).
+
+        Same tile/stream structure as the TTMc model — the output accumulator
+        carries out_cols_padded = rank_padded(rl_m*rr_m) lanes and each
+        resident core-interface tile its own rank_padded(rl_k*rr_k) — plus
+        the two-interface scratch: the left and right chain vectors live at
+        (blk, iface_cols) where iface_cols bounds the widest left- and
+        right-chain intermediates.  The chains are recomputed per block in
+        registers/VMEM scratch, not double-buffered (they are not streamed
+        operands), so the scratch term sits outside the buffers multiplier."""
+        c, d, r = self.cache, self.dma, self.remapper
+        n_in = len(in_rank_pads)
+        tiles = (
+            c.tile_i * out_cols_padded
+            + sum(t * rp for t, rp in zip(c.input_tiles(n_in), in_rank_pads))
+            * c.resident_tiles
+        ) * r.value_bytes
+        stream = d.blk * (r.value_bytes + (n_in + 1) * r.index_bytes)
+        scratch = d.blk * iface_cols * r.value_bytes
+        return d.buffers * (tiles + stream) + scratch
+
+    def fits_tt(
+        self,
+        spec: TPUSpec,
+        out_cols_padded: int,
+        in_rank_pads: tuple[int, ...],
+        iface_cols: int,
+    ) -> bool:
+        return (
+            self.vmem_bytes_tt(out_cols_padded, in_rank_pads, iface_cols)
+            <= spec.vmem_bytes * spec.vmem_usable_frac
+        )

@@ -38,6 +38,8 @@ __all__ = [
     "predict_analytic",
     "predict_ttmc",
     "predict_ttmc_analytic",
+    "predict_tt",
+    "predict_tt_analytic",
     "predict_sharded",
     "search",
     "search_sharded",
@@ -274,6 +276,146 @@ def predict_ttmc_analytic(
     )
 
 
+def _tt_pairs(
+    core_ranks: Sequence[int], nmodes: int, mode: int
+) -> tuple[tuple[tuple[int, int], ...], tuple[int, int]]:
+    """Per-core (rl, rr) bond pairs from the N-1 interior TT ranks, split
+    into the input pairs (ascending in_modes order — the first `mode` of
+    them chain from the left) and the output mode's own pair."""
+    tr = tuple(int(r) for r in core_ranks)
+    bounds = (1,) + tr + (1,)
+    pairs = tuple((bounds[k], bounds[k + 1]) for k in range(nmodes))
+    in_pairs = tuple(p for m, p in enumerate(pairs) if m != mode)
+    return in_pairs, pairs[mode]
+
+
+def _tt_iface_cols(in_pairs: tuple[tuple[int, int], ...], n_left: int) -> int:
+    """Widest live columns of the two interface-chain scratch vectors: the
+    left chain's intermediates are (blk, rr_k) wide, the right chain's
+    (blk, rl_k); both start at width 1."""
+    left = max([1] + [p[1] for p in in_pairs[:n_left]])
+    right = max([1] + [p[0] for p in in_pairs[n_left:]])
+    return left + right
+
+
+def _tt_vmem(
+    cfg: MemoryControllerConfig,
+    in_pairs: tuple[tuple[int, int], ...],
+    out_pair: tuple[int, int],
+    n_left: int,
+) -> int:
+    return cfg.vmem_bytes_tt(
+        _rank_padded(out_pair[0] * out_pair[1]),
+        tuple(_rank_padded(a * b) for a, b in in_pairs),
+        _tt_iface_cols(in_pairs, n_left),
+    )
+
+
+def _tt_kernel_times(
+    cfg: MemoryControllerConfig,
+    in_pairs: tuple[tuple[int, int], ...],
+    out_pair: tuple[int, int],
+    n_left: int,
+    nblocks: int,
+    fills: dict[str, int],
+    spec: TPUSpec,
+    *,
+    tile_i: int | None = None,
+    in_tiles: tuple[int, ...] | None = None,
+    blk: int | None = None,
+) -> tuple[float, float, float, float]:
+    """Roofline terms for the TT-core kernel.  Same stream model as MTTKRP /
+    TTMc (the BlockPlan layout is shared); the factor term pays each core
+    interface's own lane padding rank_padded(rl_k*rr_k), the output term the
+    rank_padded(rl_m*rr_m) accumulator width, and compute replaces the
+    Kronecker-chain widening with the two interface chains (one (rl, rr)
+    matrix-vector product per input core) plus the final Kronecker of two."""
+    n_in = len(in_pairs)
+    out_cols = out_pair[0] * out_pair[1]
+    pp = _rank_padded(out_cols)
+    c, r = cfg.cache, cfg.remapper
+    tile_i = c.tile_i if tile_i is None else tile_i
+    in_tiles = c.input_tiles(n_in) if in_tiles is None else in_tiles
+    blk = cfg.dma.blk if blk is None else blk
+    stream_bytes = nblocks * blk * (r.value_bytes + (n_in + 1) * r.index_bytes)
+    factor_bytes = (
+        sum(
+            fills[chr(ord("B") + n)] * t * _rank_padded(a * b)
+            for n, (t, (a, b)) in enumerate(zip(in_tiles, in_pairs))
+        )
+        * r.value_bytes
+    )
+    out_bytes = fills["A"] * tile_i * pp * r.value_bytes
+    # Interface chains: folding core k into a chain vector is a (rl_k, rr_k)
+    # matrix-vector product (2*rl*rr flops per element); the Kronecker of
+    # the two finished interfaces plus the value scale adds 2*out_cols; the
+    # one-hot segment matmul then runs at the padded width.
+    chain = sum(2 * a * b for a, b in in_pairs) + 2 * out_cols
+    flops = nblocks * (2 * tile_i * blk * pp + blk * chain)
+    return (
+        stream_bytes / spec.hbm_bw,
+        factor_bytes / spec.hbm_bw,
+        out_bytes / spec.hbm_bw,
+        flops / spec.peak_flops_f32,
+    )
+
+
+def predict_tt(
+    plan: BlockPlan,
+    core_ranks: Sequence[int],
+    cfg: MemoryControllerConfig,
+    spec: TPUSpec = TPUSpec(),
+) -> PMSEstimate:
+    """Exact PMS terms for the TT-core kernel from a built memory layout
+    (measured fills/padding; the layout is the same one MTTKRP uses).
+    `core_ranks` are the N-1 INTERIOR TT bond ranks."""
+    nmodes = plan.n_in + 1
+    in_pairs, out_pair = _tt_pairs(core_ranks, nmodes, plan.mode)
+    n_left = plan.mode
+    fills = plan.tile_fills()
+    ts, tf, to, tc = _tt_kernel_times(
+        cfg, in_pairs, out_pair, n_left, plan.nblocks, fills, spec,
+        tile_i=plan.tile_i, in_tiles=plan.in_tiles, blk=plan.blk,
+    )
+    return PMSEstimate(
+        cfg=cfg,
+        t_stream=ts,
+        t_factor=tf,
+        t_out=to,
+        t_compute=tc,
+        vmem_bytes=_tt_vmem(cfg, in_pairs, out_pair, n_left),
+        nblocks=plan.nblocks,
+        padding_fraction=plan.padding_fraction(),
+    )
+
+
+def predict_tt_analytic(
+    hs: HypergraphStats,
+    mode: int,
+    core_ranks: Sequence[int],
+    cfg: MemoryControllerConfig,
+    spec: TPUSpec = TPUSpec(),
+) -> PMSEstimate:
+    """Analytic TT-core PMS: the shared occupancy model (`_analytic_layout`)
+    with TT roofline terms.  `core_ranks` are the N-1 interior TT ranks."""
+    in_pairs, out_pair = _tt_pairs(core_ranks, hs.nmodes, mode)
+    n_left = mode
+    nblocks, fills, padding = _analytic_layout(hs, mode, cfg)
+    ts, tf, to, tc = _tt_kernel_times(
+        cfg, in_pairs, out_pair, n_left, nblocks, fills, spec
+    )
+    return PMSEstimate(
+        cfg=cfg,
+        t_stream=ts,
+        t_factor=tf,
+        t_out=to,
+        t_compute=tc,
+        vmem_bytes=_tt_vmem(cfg, in_pairs, out_pair, n_left),
+        nblocks=nblocks,
+        padding_fraction=padding,
+    )
+
+
 def predict_analytic(
     hs: HypergraphStats,
     mode: int,
@@ -305,8 +447,10 @@ DEFAULT_BLK_CHOICES: tuple[int, ...] = (128, 256, 512, 1024)
 
 def _validate_kernel_args(kernel: str, core_ranks, nmodes: int) -> None:
     """Shared argument contract of every per-kernel PMS entry point."""
-    if kernel not in ("mttkrp", "ttmc"):
-        raise ValueError(f"unknown kernel {kernel!r}: expected 'mttkrp' or 'ttmc'")
+    if kernel not in ("mttkrp", "ttmc", "tt"):
+        raise ValueError(
+            f"unknown kernel {kernel!r}: expected 'mttkrp', 'ttmc' or 'tt'"
+        )
     if kernel == "ttmc":
         if core_ranks is None:
             raise ValueError("kernel='ttmc' requires core_ranks (the full N-tuple)")
@@ -316,6 +460,29 @@ def _validate_kernel_args(kernel: str, core_ranks, nmodes: int) -> None:
                 f"{nmodes}-mode tensor (pass the full N-tuple, not the "
                 f"N-1 input ranks)"
             )
+    if kernel == "tt":
+        if core_ranks is None:
+            raise ValueError(
+                "kernel='tt' requires core_ranks (the N-1 interior TT ranks)"
+            )
+        if len(core_ranks) != nmodes - 1:
+            raise ValueError(
+                f"core_ranks has {len(core_ranks)} entries for a "
+                f"{nmodes}-mode tensor (pass the N-1 interior TT ranks, "
+                f"not per-mode ranks)"
+            )
+
+
+def _search_kernel_ranks(kernel: str, core_ranks, nmodes: int, mode: int):
+    """The kernel-specific rank payload `_feasible_configs` consumes: TTMc's
+    input-rank tuple, TT's `(in_pairs, out_pair, n_left)` triple (n_left ==
+    mode: plan.in_modes is ascending), None for MTTKRP."""
+    if kernel == "ttmc":
+        return _ttmc_in_ranks(core_ranks, mode)
+    if kernel == "tt":
+        in_pairs, out_pair = _tt_pairs(core_ranks, nmodes, mode)
+        return (in_pairs, out_pair, mode)
+    return None
 
 
 def _feasible_configs(
@@ -325,11 +492,14 @@ def _feasible_configs(
     tile_choices: Sequence[int],
     blk_choices: Sequence[int],
     kernel: str,
-    in_ranks: tuple[int, ...] | None,
+    kernel_ranks,
 ):
     """The one enumeration of the controller design space, pruned by the
     per-kernel VMEM-fit constraint — `search` and `search_sharded` both
-    consume this, so they always explore the identical candidate grid."""
+    consume this, so they always explore the identical candidate grid.
+    `kernel_ranks` is the kernel-specific rank payload: the input-rank tuple
+    for 'ttmc', the `(in_pairs, out_pair, n_left)` triple for 'tt', unused
+    for 'mttkrp'."""
     for ti, tj, tk, blk in itertools.product(
         tile_choices, tile_choices, tile_choices, blk_choices
     ):
@@ -338,10 +508,19 @@ def _feasible_configs(
             dma=DMAEngineConfig(blk=blk),
         )
         if kernel == "ttmc":
+            in_ranks = kernel_ranks
             fits = cfg.fits_ttmc(
                 spec,
                 _rank_padded(math.prod(in_ranks)),
                 tuple(_rank_padded(r) for r in in_ranks),
+            )
+        elif kernel == "tt":
+            in_pairs, out_pair, n_left = kernel_ranks
+            fits = cfg.fits_tt(
+                spec,
+                _rank_padded(out_pair[0] * out_pair[1]),
+                tuple(_rank_padded(a * b) for a, b in in_pairs),
+                _tt_iface_cols(in_pairs, n_left),
             )
         else:
             fits = cfg.fits(spec, _rank_padded(rank), n_in=n_in)
@@ -366,11 +545,13 @@ def search(
     by the VMEM-fit constraint.  exact=True builds a BlockPlan per candidate
     (accurate, slower) — use for final configuration of a dataset domain.
 
-    kernel: 'mttkrp' (CP-ALS, scored at `rank`) or 'ttmc' (Tucker HOOI,
-    scored at `core_ranks` — the full N-tuple; `rank` is ignored).  The
-    search tunes the controller *per kernel*: TTMc's core-tensor output tile
-    and per-factor lane paddings change both the VMEM constraint and the
-    roofline, so the best configuration generally differs from MTTKRP's."""
+    kernel: 'mttkrp' (CP-ALS, scored at `rank`), 'ttmc' (Tucker HOOI,
+    scored at `core_ranks` — the full N-tuple; `rank` is ignored) or 'tt'
+    (TT-ALS, scored at `core_ranks` — the N-1 interior TT bond ranks).  The
+    search tunes the controller *per kernel*: TTMc's core-tensor output tile,
+    TT's two-interface scratch, and the per-factor lane paddings change both
+    the VMEM constraint and the roofline, so the best configuration generally
+    differs between kernels."""
     if isinstance(st_or_stats, SparseTensor):
         hs = hg_stats(st_or_stats)
         st = st_or_stats
@@ -379,11 +560,11 @@ def search(
         exact = False
     _validate_kernel_args(kernel, core_ranks, hs.nmodes)
     n_in = hs.nmodes - 1
-    in_ranks = _ttmc_in_ranks(core_ranks, mode) if kernel == "ttmc" else None
+    kernel_ranks = _search_kernel_ranks(kernel, core_ranks, hs.nmodes, mode)
 
     results: list[PMSEstimate] = []
     for cfg in _feasible_configs(
-        n_in, rank, spec, tile_choices, blk_choices, kernel, in_ranks
+        n_in, rank, spec, tile_choices, blk_choices, kernel, kernel_ranks
     ):
         if exact and st is not None:
             plan = plan_blocks(
@@ -392,10 +573,14 @@ def search(
             )
             if kernel == "ttmc":
                 results.append(predict_ttmc(plan, core_ranks, cfg, spec))
+            elif kernel == "tt":
+                results.append(predict_tt(plan, core_ranks, cfg, spec))
             else:
                 results.append(predict_from_plan(plan, rank, cfg, spec))
         elif kernel == "ttmc":
             results.append(predict_ttmc_analytic(hs, mode, core_ranks, cfg, spec))
+        elif kernel == "tt":
+            results.append(predict_tt_analytic(hs, mode, core_ranks, cfg, spec))
         else:
             results.append(predict_analytic(hs, mode, rank, cfg, spec))
     results.sort(key=lambda e: e.t_total)
@@ -458,12 +643,14 @@ def _empty_shard_estimate(
     rank: int,
     n_in: int,
     kernel: str,
-    in_ranks: tuple[int, ...] | None,
+    kernel_ranks,
 ) -> PMSEstimate:
     """Zero-cost estimate for a shard that owns no non-zeros (its kernel
     streams one all-padding block; negligible against any real shard)."""
     if kernel == "ttmc":
-        vmem = _ttmc_vmem(cfg, in_ranks)
+        vmem = _ttmc_vmem(cfg, kernel_ranks)
+    elif kernel == "tt":
+        vmem = _tt_vmem(cfg, *kernel_ranks)
     else:
         vmem = cfg.vmem_bytes(_rank_padded(rank), n_in=n_in)
     return PMSEstimate(
@@ -485,8 +672,8 @@ def _shard_estimate(
 ) -> PMSEstimate:
     n_in = shard.nmodes - 1
     if shard.nnz == 0:
-        in_ranks = _ttmc_in_ranks(core_ranks, mode) if kernel == "ttmc" else None
-        return _empty_shard_estimate(cfg, rank, n_in, kernel, in_ranks)
+        kernel_ranks = _search_kernel_ranks(kernel, core_ranks, shard.nmodes, mode)
+        return _empty_shard_estimate(cfg, rank, n_in, kernel, kernel_ranks)
     if exact:
         plan = plan_blocks(
             shard, mode, tile_i=cfg.cache.tile_i, blk=cfg.dma.blk,
@@ -494,10 +681,14 @@ def _shard_estimate(
         )
         if kernel == "ttmc":
             return predict_ttmc(plan, core_ranks, cfg, spec)
+        if kernel == "tt":
+            return predict_tt(plan, core_ranks, cfg, spec)
         return predict_from_plan(plan, rank, cfg, spec)
     hs = hs if hs is not None else hg_stats(shard)
     if kernel == "ttmc":
         return predict_ttmc_analytic(hs, mode, core_ranks, cfg, spec)
+    if kernel == "tt":
+        return predict_tt_analytic(hs, mode, core_ranks, cfg, spec)
     return predict_analytic(hs, mode, rank, cfg, spec)
 
 
@@ -554,11 +745,11 @@ def search_sharded(
     from ..dist.sharding import partition_stream
 
     n_in = st.nmodes - 1
-    in_ranks = _ttmc_in_ranks(core_ranks, mode) if kernel == "ttmc" else None
+    kernel_ranks = _search_kernel_ranks(kernel, core_ranks, st.nmodes, mode)
     parts: dict[int, tuple] = {}  # tile_i -> (partition, per-shard stats)
     results: list[ShardedPMSEstimate] = []
     for cfg in _feasible_configs(
-        n_in, rank, spec, tile_choices, blk_choices, kernel, in_ranks
+        n_in, rank, spec, tile_choices, blk_choices, kernel, kernel_ranks
     ):
         ti = cfg.cache.tile_i
         if ti not in parts:

@@ -20,10 +20,14 @@ run under shard_map with a single collective per mode.
 Entry points (all re-exported here; built in kernels/ops.py):
 
   * ``cp_als(st, rank, method="pallas_sharded", devices=D)`` /
-    ``tucker_hooi(st, core_ranks, method="pallas_sharded", devices=D)`` —
-    the full decomposition loops, fully-jitted sweep preserved;
-  * ``make_sharded_planned_cp_als`` / ``make_sharded_planned_tucker`` —
-    prebuilt workspaces for reuse across calls;
+    ``tucker_hooi(st, core_ranks, method="pallas_sharded", devices=D)`` /
+    ``tt_als(st, tt_ranks, method="pallas_sharded", devices=D)`` — the full
+    decomposition loops, fully-jitted sweep preserved — or uniformly through
+    the facade, ``decompose(st, format=..., method="pallas_sharded",
+    devices=D)`` (repro/api.py);
+  * ``make_sharded_planned_cp_als`` / ``make_sharded_planned_tucker`` /
+    ``make_sharded_planned_tt`` — prebuilt workspaces for reuse across
+    calls;
   * ``make_sharded_planned_mttkrp`` — one (tensor, mode) distributed kernel,
     also reachable through ``mttkrp_sharded(..., method="pallas")``;
   * ``shard_plan`` — the default 1-D mesh -> ShardingPlan;
@@ -41,9 +45,11 @@ import numpy as np
 from ..kernels.ops import (
     ShardedPlannedCPALS,
     ShardedPlannedMTTKRP,
+    ShardedPlannedTT,
     ShardedPlannedTucker,
     make_sharded_planned_cp_als,
     make_sharded_planned_mttkrp,
+    make_sharded_planned_tt,
     make_sharded_planned_tucker,
 )
 from .sharding import ShardingPlan, StreamPartition, partition_stream
@@ -56,9 +62,11 @@ __all__ = [
     "ShardedPlannedMTTKRP",
     "ShardedPlannedCPALS",
     "ShardedPlannedTucker",
+    "ShardedPlannedTT",
     "make_sharded_planned_mttkrp",
     "make_sharded_planned_cp_als",
     "make_sharded_planned_tucker",
+    "make_sharded_planned_tt",
 ]
 
 

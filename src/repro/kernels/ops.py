@@ -2,24 +2,31 @@
 dispatch between the Pallas kernels, their interpret-mode validation paths,
 and the pure-JAX references.
 
-Two kernel families share the BlockPlan substrate (the memory controller is
+Three kernel families share the BlockPlan substrate (the memory controller is
 *programmable*, not MTTKRP-specific):
   * MTTKRP  — `PlannedMTTKRP` / `mttkrp_auto` / `PlannedCPALS` (CP-ALS,
               paper Alg. 1 + Alg. 5);
   * TTMc    — `PlannedTTMC` / `tucker_auto` (sparse Tucker HOOI; see
               repro.tucker).  Same remapped layout, Kronecker-chain compute.
+  * TT-core — `PlannedTTCore` / `tt_auto` (tensor-train ALS; see repro.tt).
+              Same remapped layout, Kronecker-of-two-interfaces compute.
 
 `PlannedCPALS` is the workspace that makes the Pallas kernel the *production*
 decomposition path (paper Alg. 1 + Alg. 5): one PMS-tunable BlockPlan +
 device-resident layout per output mode, built once and cached across every
 ALS iteration (the paper's layout="copies" posture — per-mode remapped
 copies, a legitimate space/time trade on HBM).  `PlannedTucker`
-(repro.tucker.hooi) mirrors it for the HOOI loop.
+(repro.tucker.hooi) and `PlannedTT` (repro.tt.als) mirror it for the HOOI
+and TT-ALS loops.  Everything the workspaces share — padding, residency,
+plan-byte accounting, the lazily-built sweep, the drive loop — lives in
+`repro.kernels.workspace.PlannedWorkspace`; the classes here supply only
+their format's sweep body.
 
 The one-shot dispatchers share a keyed LRU plan cache.  The key leads with a
-kernel-kind discriminator ("mttkrp" / "ttmc"): two kernels sharing a tensor
-fingerprint + mode + rank must never silently reuse each other's plans (the
-layouts coincide today, but the cached objects carry kernel-specific state).
+kernel-kind discriminator ("mttkrp" / "ttmc" / "tt"): two kernels sharing a
+tensor fingerprint + mode + rank must never silently reuse each other's
+plans (the layouts coincide today, but the cached objects carry
+kernel-specific state).
 """
 from __future__ import annotations
 
@@ -41,8 +48,19 @@ from ..core.pms import search as pms_search
 from ..core.remap import BlockPlan, plan_blocks
 from ..core.mttkrp import mttkrp as mttkrp_jax
 from .mttkrp_pallas import mttkrp_pallas_call, pad_factor, rank_padded
-from .ref import ttmc_ref
+from .ref import ttcore_ref, ttmc_ref
+from .tt_pallas import tt_out_cols, tt_out_pair, ttcore_pallas_call
 from .ttm_pallas import kron_cols, ttmc_pallas_call
+from .workspace import (
+    PlannedWorkspace,
+    ShardedWorkspace,
+    _apply_row_mask,
+    _padded_rows_from,
+    _plan_device_arrays,
+    _visited_row_mask,
+    planned_layout_bytes,
+    sharded_layout_bytes,
+)
 
 __all__ = [
     "PlannedMTTKRP",
@@ -51,8 +69,11 @@ __all__ = [
     "make_planned_cp_als",
     "PlannedTTMC",
     "make_planned_ttmc",
+    "PlannedTTCore",
+    "make_planned_ttcore",
     "mttkrp_auto",
     "tucker_auto",
+    "tt_auto",
     "plan_cache_stats",
     "plan_cache_clear",
     "planned_padded_rows",
@@ -60,76 +81,12 @@ __all__ = [
     "ShardedPlannedMTTKRP",
     "ShardedPlannedCPALS",
     "ShardedPlannedTucker",
+    "ShardedPlannedTT",
     "make_sharded_planned_mttkrp",
     "make_sharded_planned_cp_als",
     "make_sharded_planned_tucker",
+    "make_sharded_planned_tt",
 ]
-
-
-def _apply_row_mask(out: jax.Array, mask: jax.Array) -> jax.Array:
-    """Zero the masked-out rows with `where`, NOT multiplication: unvisited
-    tiles hold NaN in interpret mode and 0 * NaN = NaN."""
-    return jnp.where(mask[:, None] > 0, out, 0.0)
-
-
-def _visited_row_mask(block_it: np.ndarray, tile_i: int, out_rows: int) -> np.ndarray:
-    """1.0 for every output row whose tile some block visits, else 0.0.
-
-    The Pallas kernels zero an output tile only on its *first visit*; a tile
-    no block targets keeps whatever the output buffer held (NaN in interpret
-    mode, undefined on hardware).  Such tiles exist whenever a tile_i range
-    of the output coordinate owns no non-zeros — their MTTKRP/TTMc rows are
-    mathematically zero, so every planned call multiplies by this mask."""
-    ntiles = out_rows // tile_i
-    tile_mask = np.zeros((ntiles,), np.float32)
-    tile_mask[np.unique(block_it)] = 1.0
-    return np.repeat(tile_mask, tile_i)
-
-
-def _plan_device_arrays(plan: BlockPlan) -> dict:
-    """Move a BlockPlan's layout to device in the shape the kernels consume:
-    (nblocks, blk) stream tiles + per-block tile-id streams + the
-    visited-row mask zeroing tiles the plan never touches."""
-    nb, blk = plan.nblocks, plan.blk
-    return dict(
-        block_it=jnp.asarray(plan.block_it),
-        block_in=tuple(jnp.asarray(t) for t in plan.block_in),
-        vals=jnp.asarray(plan.vals).reshape(nb, blk),
-        iloc=jnp.asarray(plan.iloc).reshape(nb, blk),
-        in_locs=tuple(jnp.asarray(l).reshape(nb, blk) for l in plan.in_locs),
-        row_mask=jnp.asarray(
-            _visited_row_mask(plan.block_it, plan.tile_i, plan.out_rows)
-        ),
-    )
-
-
-def planned_layout_bytes(ops: dict[int, "PlannedMTTKRP | PlannedTTMC"]) -> int:
-    """HBM held by a per-mode plan family's remapped layouts (the 'copies'
-    space/time trade, Sec. 3).  Element widths come from each mode's Remapper
-    configuration; identical for MTTKRP and TTMc — the layout is shared."""
-    total = 0
-    for op in ops.values():
-        p, r = op.plan, op.cfg.remapper
-        slots = p.vals.shape[0]
-        total += slots * (r.value_bytes + (1 + p.n_in) * r.index_bytes)
-        total += p.nblocks * (1 + p.n_in) * r.index_bytes
-    return total
-
-
-def _padded_rows_from(geoms: dict[int, Any], nmodes: int) -> tuple[int, ...]:
-    """Shared row-padding rule over any per-mode layout family exposing
-    BlockPlan geometry (`out_rows` / `in_modes` / `in_rows`): single-device
-    plans and sharded `_ShardStack`s use identical padding, so factors can
-    move between the two paths without re-padding."""
-    rows = []
-    for m in range(nmodes):
-        r = geoms[m].out_rows
-        for g in geoms.values():
-            for n, im in enumerate(g.in_modes):
-                if im == m:
-                    r = max(r, g.in_rows[n])
-        rows.append(r)
-    return tuple(rows)
 
 
 def planned_padded_rows(ops: dict[int, "PlannedMTTKRP | PlannedTTMC"], nmodes: int) -> tuple[int, ...]:
@@ -343,8 +300,157 @@ def make_planned_ttmc(
     return PlannedTTMC(plan=plan, in_ranks=in_ranks, interpret=interpret, cfg=cfg)
 
 
+def _tt_bond_pairs(tt_ranks: Sequence[int], nmodes: int) -> tuple[tuple[int, int], ...]:
+    """Per-core (rl_k, rr_k) bond pairs from the N-1 interior TT ranks
+    (boundary bonds are 1 by definition)."""
+    tt_ranks = tuple(int(r) for r in tt_ranks)
+    if len(tt_ranks) != nmodes - 1:
+        raise ValueError(
+            f"tt_ranks has {len(tt_ranks)} entries for a {nmodes}-mode "
+            f"tensor (pass the N-1 interior TT ranks)"
+        )
+    bounds = (1,) + tt_ranks + (1,)
+    return tuple((bounds[k], bounds[k + 1]) for k in range(nmodes))
+
+
 @dataclasses.dataclass
-class PlannedCPALS:
+class PlannedTTCore:
+    """A compiled memory-controller instance of the TT-core-update kernel for
+    one (tensor, output mode): the same device-resident BlockPlan layout as
+    MTTKRP/TTMc, driving the Kronecker-of-two-interfaces Pallas kernel
+    (repro.tt TT-ALS's per-mode contraction).  `in_rank_pairs` are the input
+    cores' (rl, rr) bond pairs in plan.in_modes order (ascending, so the
+    first `plan.mode` of them chain from the left); the output has
+    rl_m * rr_m true columns."""
+
+    plan: BlockPlan
+    in_rank_pairs: tuple[tuple[int, int], ...]
+    interpret: bool
+    cfg: MemoryControllerConfig = dataclasses.field(
+        default_factory=MemoryControllerConfig
+    )
+    _dev: dict = dataclasses.field(default_factory=dict)
+
+    def __post_init__(self):
+        self.in_rank_pairs = tuple(
+            (int(a), int(b)) for a, b in self.in_rank_pairs
+        )
+        self._dev = _plan_device_arrays(self.plan)
+
+    @property
+    def n_left(self) -> int:
+        """Inputs left of the output mode: plan.in_modes is ascending, so
+        exactly `plan.mode` of them precede it."""
+        return self.plan.mode
+
+    @property
+    def out_pair(self) -> tuple[int, int]:
+        return tt_out_pair(self.in_rank_pairs, self.n_left)
+
+    @property
+    def out_cols(self) -> int:
+        return tt_out_cols(self.in_rank_pairs, self.n_left)
+
+    def __call__(self, *in_mats: jax.Array) -> jax.Array:
+        """Core interface matrices W_k = transpose(G_k,(1,0,2)).reshape(I_k,
+        rl_k*rr_k) for the N-1 *input* modes (plan.in_modes order), true
+        shapes.  Returns (out_rows_unpadded, rl_m*rr_m)."""
+        p = self.plan
+        assert len(in_mats) == p.n_in
+        pads = tuple(
+            pad_factor(f, rows, rank_padded(a * b))
+            for f, rows, (a, b) in zip(in_mats, p.in_rows, self.in_rank_pairs)
+        )
+        out = self.call_padded(pads)
+        return out[: p.out_rows, : self.out_cols]
+
+    def call_padded(self, in_mats_pad: Sequence[jax.Array]) -> jax.Array:
+        """Run the kernel on already row/lane-padded interface matrices (the
+        PlannedTT sweep path).  Returns the padded (out_rows, Pp) tile with
+        unvisited output tiles zeroed."""
+        p = self.plan
+        out = ttcore_pallas_call(
+            self._dev["block_it"],
+            self._dev["block_in"],
+            self._dev["vals"],
+            self._dev["iloc"],
+            self._dev["in_locs"],
+            tuple(in_mats_pad),
+            tile_i=p.tile_i,
+            in_tiles=p.in_tiles,
+            in_rank_pairs=self.in_rank_pairs,
+            n_left=self.n_left,
+            blk=p.blk,
+            out_rows=p.out_rows,
+            interpret=self.interpret,
+        )
+        return _apply_row_mask(out, self._dev["row_mask"])
+
+    def output(self, mats: Sequence[jax.Array], true_rows: int) -> jax.Array:
+        return self(*(mats[m] for m in self.plan.in_modes))[:true_rows]
+
+
+def make_planned_ttcore(
+    st: SparseTensor,
+    mode: int,
+    tt_ranks: Sequence[int],
+    *,
+    cfg: MemoryControllerConfig | None = None,
+    auto_tune: bool = False,
+    spec: TPUSpec = TPUSpec(),
+    interpret: bool = True,
+) -> PlannedTTCore:
+    """Build the memory layout + TT-core kernel instance for one output mode.
+
+    Args:
+      st: host-side COO tensor (>= 3 modes).
+      mode: the output mode m — the kernel computes the TT-ALS right-hand
+        side B_m (nnz-restricted Kronecker of the left/right interface
+        chains).
+      tt_ranks: the N-1 INTERIOR TT bond ranks (boundary bonds are 1); the
+        instance's `in_rank_pairs` are the per-core (rl, rr) pairs in
+        plan.in_modes order.  Each interface matrix is lane-padded to its
+        own `rank_padded(rl_k*rr_k)`; the output carries rl_m*rr_m true
+        columns, lane-padded to `rank_padded(rl_m*rr_m)`.
+      cfg / auto_tune / spec: controller configuration, or let the PMS tune
+        it for the TT kernel specifically (two interface scratch chains
+        change the VMEM constraint and the roofline).
+      interpret: run the Pallas kernel in interpret mode.
+
+    Returns:
+      A `PlannedTTCore` holding the device-resident BlockPlan layout — the
+      SAME layout `make_planned_mttkrp` would build for this (tensor, mode,
+      cfg); only the kernel differs."""
+    pairs = _tt_bond_pairs(tt_ranks, st.nmodes)
+    if auto_tune:
+        best = pms_search(
+            st, mode, max(max(p) for p in pairs), spec=spec, top_k=1,
+            kernel="tt", core_ranks=tuple(int(r) for r in tt_ranks),
+        )
+        if not best:
+            raise ValueError(
+                f"PMS found no VMEM-feasible controller configuration for "
+                f"TT mode {mode} at TT ranks {tuple(tt_ranks)} (spec budget "
+                f"{spec.vmem_bytes * spec.vmem_usable_frac:.0f} bytes)"
+            )
+        cfg = best[0].cfg
+    cfg = cfg or MemoryControllerConfig()
+    n_in = st.nmodes - 1
+    plan = plan_blocks(
+        st,
+        mode,
+        tile_i=cfg.cache.tile_i,
+        blk=cfg.dma.blk,
+        in_tiles=cfg.cache.input_tiles(n_in),
+    )
+    in_rank_pairs = tuple(pairs[m] for m in plan.in_modes)
+    return PlannedTTCore(
+        plan=plan, in_rank_pairs=in_rank_pairs, interpret=interpret, cfg=cfg
+    )
+
+
+@dataclasses.dataclass
+class PlannedCPALS(PlannedWorkspace):
     """Per-mode plan cache driving the whole CP-ALS loop on the memory
     controller (paper Alg. 1 on the Alg. 5 layout).
 
@@ -356,43 +462,31 @@ class PlannedCPALS:
 
     The steady-state iteration is `sweep`: one jitted function running a full
     ALS iteration (every mode's MTTKRP -> gram -> solve -> normalize, plus the
-    on-device fit).  Factors stay rank-padded and device-resident across
-    iterations — `pad_factors` pads each mode once up front (to the maximum
-    row padding any plan needs, lanes to rank_padded) and the sweep updates
-    them in padded space; `unpad_factors` slices back to true shape only when
-    a `CPState` is materialized.
+    on-device fit).  Factor padding/residency and the host drive loop come
+    from `PlannedWorkspace` — this class supplies only the CP sweep body.
     """
 
     ops: dict[int, PlannedMTTKRP]
     shape: tuple[int, ...]
     rank: int
-    _sweep_fn: Callable | None = dataclasses.field(default=None, repr=False)
 
     @property
-    def nmodes(self) -> int:
-        return len(self.shape)
+    def lane_ranks(self) -> tuple[int, ...]:
+        return (self.rank,) * self.nmodes
 
     @property
     def rank_pad(self) -> int:
+        """CP's single lane padding (every mode shares rank R)."""
         return rank_padded(self.rank)
 
     def plan_for(self, mode: int) -> BlockPlan:
         return self.ops[mode].plan
 
-    @property
-    def padded_rows(self) -> tuple[int, ...]:
-        """Per-mode device-resident row padding (see `planned_padded_rows`)."""
-        return planned_padded_rows(self.ops, self.nmodes)
+    def _geoms(self) -> dict[int, BlockPlan]:
+        return {m: op.plan for m, op in self.ops.items()}
 
-    def pad_factors(self, factors: Sequence[jax.Array]) -> tuple[jax.Array, ...]:
-        """One pad per mode for the whole decomposition (not N x iters)."""
-        rp = self.rank_pad
-        return tuple(
-            pad_factor(f, rows, rp) for f, rows in zip(factors, self.padded_rows)
-        )
-
-    def unpad_factors(self, padded: Sequence[jax.Array]) -> list[jax.Array]:
-        return [f[:s, : self.rank] for f, s in zip(padded, self.shape)]
+    def _layout_bytes(self) -> int:
+        return planned_layout_bytes(self.ops)
 
     def _build_sweep(self) -> Callable:
         shape, rank, nmodes = self.shape, self.rank, self.nmodes
@@ -436,39 +530,24 @@ class PlannedCPALS:
         return jax.jit(sweep, static_argnames=("first",))
 
     def sweep(self, facs, idx, val, norm_x_sq, *, first: bool = False):
-        """One jitted ALS iteration in padded space.
+        """One jitted ALS iteration in padded space (the
+        `PlannedWorkspace.sweep` contract).
 
-        Args:
-          facs: the factor tuple in PADDED space — one (padded_rows[m],
-            rank_pad) array per mode, as produced by `pad_factors` or a
-            previous `sweep` call.  Invariant: padding rows and lanes are
-            exactly zero on entry and are kept exactly zero on exit, so
-            grams/fit computed in padded space match the true-shape
-            computation bit for bit.
-          idx, val: the raw COO stream (any order — only the fit's inner
-            product reads it; the per-mode remapped copies live inside the
-            plans).
-          norm_x_sq: ||X||_F^2 as a device scalar.
-          first: first-ALS-iteration normalization convention
-            (max(norm, 1)); static — one retrace when it flips to False.
+        Args: `facs` — the rank-padded factor tuple; `idx`, `val` — the raw
+        COO stream (any order — only the fit's inner product reads it; the
+        per-mode remapped copies live inside the plans); `norm_x_sq` —
+        ||X||_F^2 as a device scalar; `first` — first-ALS-iteration
+        normalization convention (max(norm, 1)); static — one retrace when
+        it flips to False.  Returns (new padded factors, lam, fit)."""
+        return super().sweep(facs, idx, val, norm_x_sq, first=first)
 
-        Returns:
-          (new padded factors, lam, fit) — all device-resident; only read
-          `fit` back per iteration (the tol early-exit).  Device-residency
-          contract: feeding the returned factors straight into the next
-          `sweep` call incurs zero host transfers and zero re-padding."""
-        if self._sweep_fn is None:
-            self._sweep_fn = self._build_sweep()
-        return self._sweep_fn(facs, idx, val, norm_x_sq, first=first)
+    def _sweep_call(self, facs, *args, it: int):
+        return self.sweep(facs, *args, first=(it == 0))
 
     def mttkrp_fn(self, indices, values, factors, mode, out_rows):
         """The `cp_als(mttkrp_fn=...)` seam: the stream args are ignored —
         each mode's remapped copy already lives on device in its plan."""
         return self.ops[mode].output(factors, out_rows)
-
-    def plan_bytes(self) -> int:
-        """HBM held by the per-mode layouts (the 'copies' trade, Sec. 3)."""
-        return planned_layout_bytes(self.ops)
 
 
 def make_planned_cp_als(
@@ -515,7 +594,7 @@ def make_planned_cp_als(
 
 _PLAN_CACHE: OrderedDict[tuple, "PlannedMTTKRP | PlannedTTMC"] = OrderedDict()
 _PLAN_CACHE_CAP = 32  # LRU bound: each entry pins a device-resident layout
-_PLAN_CACHE_KINDS = ("mttkrp", "ttmc")
+_PLAN_CACHE_KINDS = ("mttkrp", "ttmc", "tt")
 _PLAN_CACHE_STATS = {k: {"hits": 0, "misses": 0} for k in _PLAN_CACHE_KINDS}
 
 
@@ -524,9 +603,10 @@ def plan_cache_stats() -> dict:
 
     Returns:
       ``{"hits": int, "misses": int, "by_kind": {"mttkrp": {...},
-      "ttmc": {...}}}`` — totals at the top level plus per-kernel-kind
-      counters.  A hit means a dispatcher call skipped the whole
-      remap/layout build (bench_e2e reports first-vs-cached call times).
+      "ttmc": {...}, "tt": {...}}}`` — totals at the top level plus
+      per-kernel-kind counters.  A hit means a dispatcher call skipped the
+      whole remap/layout build (bench_e2e reports first-vs-cached call
+      times).
 
     Invariants: the kinds are tracked separately precisely because the
     cache key carries a kind discriminator — no cross-kind collisions by
@@ -669,6 +749,53 @@ def tucker_auto(
         raise ValueError(f"unknown method {method!r}: expected 'pallas' or 'reference'")
     return ttmc_ref(
         jnp.asarray(st.indices), jnp.asarray(st.values), factors, mode, st.shape[mode]
+    )
+
+
+def tt_auto(
+    st: SparseTensor,
+    cores: Sequence[jax.Array],
+    mode: int,
+    *,
+    method: str = "pallas",
+    interpret: bool = True,
+    cfg: MemoryControllerConfig | None = None,
+) -> jax.Array:
+    """One-shot sparse TT-core dispatcher (the tensor-train analogue of
+    `mttkrp_auto` / `tucker_auto`): the TT-ALS right-hand side B_mode from
+    the left/right interface chains of the other cores.
+
+    Args:
+      st: host-side COO tensor.
+      cores: ALL N TT cores, shapes (rl_k, I_k, rr_k) with boundary bonds 1;
+        the mode-th is not contracted (its bonds still set the output
+        width).  Bond ranks are read off the core shapes.
+      mode: output mode of the update.
+      method: 'pallas' — the planned memory-controller kernel, its BlockPlan
+        cached in the shared kind-keyed LRU (see
+        `plan_cache_stats()["by_kind"]["tt"]`); 'reference' — the pure-jnp
+        gather/chain/segment_sum oracle.
+      interpret / cfg: pallas-path knobs (both are part of the cache key).
+
+    Returns:
+      B_mode, shape (I_mode, rl_mode * rr_mode), float32, columns row-major
+      over (rl, rr).  Rank-padding invariant: the kernel pads each interface
+      matrix to `rank_padded(rl_k*rr_k)` lanes internally and slices the
+      true width back out — callers never see padded shapes."""
+    pairs = tuple((int(c.shape[0]), int(c.shape[2])) for c in cores)
+    if method == "pallas":
+        in_pairs = tuple(p for m, p in enumerate(pairs) if m != mode)
+        tt_ranks = tuple(pairs[k][1] for k in range(len(cores) - 1))
+        op = _planned_cached(
+            "tt", st, mode, in_pairs, cfg, interpret,
+            lambda: make_planned_ttcore(st, mode, tt_ranks, cfg=cfg, interpret=interpret),
+        )
+        mats = [jnp.transpose(c, (1, 0, 2)).reshape(c.shape[1], -1) for c in cores]
+        return op.output(mats, st.shape[mode])
+    if method != "reference":
+        raise ValueError(f"unknown method {method!r}: expected 'pallas' or 'reference'")
+    return ttcore_ref(
+        jnp.asarray(st.indices), jnp.asarray(st.values), cores, mode, st.shape[mode]
     )
 
 
@@ -940,20 +1067,32 @@ def _stack_ttmc_call(
     return _apply_row_mask(out, arrs["row_mask"][0])
 
 
-def sharded_layout_bytes(
-    stacks: dict[int, _ShardStack], cfgs: dict[int, MemoryControllerConfig]
-) -> int:
-    """HBM held by a per-mode shard-stack family, summed over every device
-    (the distributed 'copies' trade: N layouts per shard) — the sharded
-    analogue of `planned_layout_bytes`.  Counts the padded stack width, i.e.
-    what is actually resident."""
-    total = 0
-    for m, s in stacks.items():
-        r = cfgs[m].remapper
-        slots = s.nshards * s.nblocks * s.blk
-        total += slots * (r.value_bytes + (1 + s.n_in) * r.index_bytes)
-        total += s.nshards * s.nblocks * (1 + s.n_in) * r.index_bytes
-    return total
+def _stack_ttcore_call(
+    stack: _ShardStack,
+    arrs: dict,
+    in_mats,
+    in_rank_pairs: tuple[tuple[int, int], ...],
+    n_left: int,
+    interpret: bool,
+) -> jax.Array:
+    """One shard's TT-core kernel over its row of the stack (visited-row
+    masked — see `_stack_mttkrp_call`)."""
+    out = ttcore_pallas_call(
+        arrs["block_it"][0],
+        tuple(t[0] for t in arrs["block_in"]),
+        arrs["vals"][0],
+        arrs["iloc"][0],
+        tuple(l[0] for l in arrs["in_locs"]),
+        in_mats,
+        tile_i=stack.tile_i,
+        in_tiles=stack.in_tiles,
+        in_rank_pairs=in_rank_pairs,
+        n_left=n_left,
+        blk=stack.blk,
+        out_rows=stack.out_rows,
+        interpret=interpret,
+    )
+    return _apply_row_mask(out, arrs["row_mask"][0])
 
 
 def _tuned_cfg(
@@ -1090,7 +1229,7 @@ def make_sharded_planned_mttkrp(
 
 
 @dataclasses.dataclass
-class ShardedPlannedCPALS:
+class ShardedPlannedCPALS(ShardedWorkspace):
     """Distributed `PlannedCPALS`: the whole CP-ALS loop on shard-local
     memory-controller layouts.
 
@@ -1102,9 +1241,8 @@ class ShardedPlannedCPALS:
     factor rows (shards own disjoint tile ranges, so the sum merges rather
     than accumulates); gram/solve/normalize then run replicated.  The fit is
     computed from psum'd scalars — each shard contributes the inner product
-    over its own stream slice.  Factors follow the PlannedCPALS residency
-    contract: rank-padded and device-resident across iterations
-    (`pad_factors` once up front, `unpad_factors` at materialization)."""
+    over its own stream slice.  Padding/residency and the drive loop come
+    from `ShardedWorkspace` — this class supplies only the CP sweep body."""
 
     stacks: dict[int, _ShardStack]
     dist: Any  # ShardingPlan with mesh + data axes
@@ -1114,40 +1252,18 @@ class ShardedPlannedCPALS:
     cfgs: dict[int, MemoryControllerConfig]
     idx_sh: jax.Array  # (D, max shard nnz, N) fit stream, zero-padded
     val_sh: jax.Array  # (D, max shard nnz)
-    _sweep_fn: Callable | None = dataclasses.field(default=None, repr=False)
 
     @property
-    def nmodes(self) -> int:
-        return len(self.shape)
-
-    @property
-    def nshards(self) -> int:
-        return self.dist.dp_size()
+    def lane_ranks(self) -> tuple[int, ...]:
+        return (self.rank,) * self.nmodes
 
     @property
     def rank_pad(self) -> int:
+        """CP's single lane padding (every mode shares rank R)."""
         return rank_padded(self.rank)
 
-    @property
-    def padded_rows(self) -> tuple[int, ...]:
-        """Per-mode device-resident row padding (same rule as the
-        single-device workspace: `_padded_rows_from`)."""
-        return _padded_rows_from(self.stacks, self.nmodes)
-
-    def pad_factors(self, factors: Sequence[jax.Array]) -> tuple[jax.Array, ...]:
-        """One pad per mode for the whole decomposition (not N x iters)."""
-        rp = self.rank_pad
-        return tuple(
-            pad_factor(f, rows, rp) for f, rows in zip(factors, self.padded_rows)
-        )
-
-    def unpad_factors(self, padded: Sequence[jax.Array]) -> list[jax.Array]:
-        return [f[:s, : self.rank] for f, s in zip(padded, self.shape)]
-
-    def plan_bytes(self) -> int:
-        """HBM held by the shard-stacked layouts, summed over every device
-        (the distributed 'copies' trade: N layouts per shard)."""
-        return sharded_layout_bytes(self.stacks, self.cfgs)
+    def _stream_args(self) -> tuple:
+        return (self.idx_sh, self.val_sh)
 
     def _build_sweep(self) -> Callable:
         shape, rank, nmodes = self.shape, self.rank, self.nmodes
@@ -1211,10 +1327,10 @@ class ShardedPlannedCPALS:
         factors, lam, fit scalar on device) — the same contract as
         `PlannedCPALS.sweep` minus the stream arguments (each shard's slice
         already lives on its device)."""
-        if self._sweep_fn is None:
-            self._sweep_fn = self._build_sweep()
-        arrs = {m: self.stacks[m].tree() for m in range(self.nmodes)}
-        return self._sweep_fn(arrs, self.idx_sh, self.val_sh, facs, norm_x_sq, first=first)
+        return super().sweep(facs, norm_x_sq, first=first)
+
+    def _sweep_call(self, facs, *args, it: int):
+        return self.sweep(facs, *args, first=(it == 0))
 
 
 def make_sharded_planned_cp_als(
@@ -1261,7 +1377,7 @@ def make_sharded_planned_cp_als(
 
 
 @dataclasses.dataclass
-class ShardedPlannedTucker:
+class ShardedPlannedTucker(ShardedWorkspace):
     """Distributed `PlannedTucker`: the whole HOOI loop on shard-local
     memory-controller layouts — the TTM-chain mirror of
     `ShardedPlannedCPALS` (same partitions, same stacks, Kronecker-chain
@@ -1275,42 +1391,13 @@ class ShardedPlannedTucker:
     core_ranks: tuple[int, ...]
     interpret: bool
     cfgs: dict[int, MemoryControllerConfig]
-    _sweep_fn: Callable | None = dataclasses.field(default=None, repr=False)
 
     @property
-    def nmodes(self) -> int:
-        return len(self.shape)
-
-    @property
-    def nshards(self) -> int:
-        return self.dist.dp_size()
-
-    @property
-    def rank_pads(self) -> tuple[int, ...]:
-        """Per-mode lane padding: each factor carries its own R_m padding."""
-        return tuple(rank_padded(r) for r in self.core_ranks)
-
-    @property
-    def padded_rows(self) -> tuple[int, ...]:
-        return _padded_rows_from(self.stacks, self.nmodes)
+    def lane_ranks(self) -> tuple[int, ...]:
+        return self.core_ranks
 
     def in_ranks(self, mode: int) -> tuple[int, ...]:
         return tuple(self.core_ranks[im] for im in self.stacks[mode].in_modes)
-
-    def pad_factors(self, factors: Sequence[jax.Array]) -> tuple[jax.Array, ...]:
-        return tuple(
-            pad_factor(f, rows, rp)
-            for f, rows, rp in zip(factors, self.padded_rows, self.rank_pads)
-        )
-
-    def unpad_factors(self, padded: Sequence[jax.Array]) -> list[jax.Array]:
-        return [
-            f[:s, :r] for f, s, r in zip(padded, self.shape, self.core_ranks)
-        ]
-
-    def plan_bytes(self) -> int:
-        """HBM held by the shard-stacked layouts, summed over every device."""
-        return sharded_layout_bytes(self.stacks, self.cfgs)
 
     def _build_sweep(self) -> Callable:
         # Lazy: repro.tucker imports this module at load time.
@@ -1365,10 +1452,7 @@ class ShardedPlannedTucker:
         """One jitted distributed HOOI iteration in padded space.  Returns
         (new padded factors, core, fit scalar on device) — the
         `PlannedTucker.sweep` contract."""
-        if self._sweep_fn is None:
-            self._sweep_fn = self._build_sweep()
-        arrs = {m: self.stacks[m].tree() for m in range(self.nmodes)}
-        return self._sweep_fn(arrs, facs, norm_x_sq)
+        return super().sweep(facs, norm_x_sq)
 
 
 def make_sharded_planned_tucker(
@@ -1407,4 +1491,158 @@ def make_sharded_planned_tucker(
         core_ranks=cr,
         interpret=interpret,
         cfgs=cfgs,
+    )
+
+
+@dataclasses.dataclass
+class ShardedPlannedTT(ShardedWorkspace):
+    """Distributed `PlannedTT`: the whole TT-ALS loop on shard-local
+    memory-controller layouts — the TT-core mirror of `ShardedPlannedCPALS`
+    (same partitions, same stacks, Kronecker-of-two-interfaces kernel,
+    per-mode `rank_padded(rl_m*rr_m)` lane contracts).  Per mode, every
+    device runs the TT-core kernel on its local layout, ONE psum reassembles
+    the right-hand side B_m, and the normal-equations solve runs replicated;
+    the fit's per-nnz TT inner product is psum'd over each shard's stream
+    slice, like CP's."""
+
+    stacks: dict[int, _ShardStack]
+    dist: Any
+    shape: tuple[int, ...]
+    tt_ranks: tuple[int, ...]  # N-1 interior bond ranks
+    interpret: bool
+    cfgs: dict[int, MemoryControllerConfig]
+    idx_sh: jax.Array  # (D, max shard nnz, N) fit stream, zero-padded
+    val_sh: jax.Array  # (D, max shard nnz)
+
+    @property
+    def bond_pairs(self) -> tuple[tuple[int, int], ...]:
+        return _tt_bond_pairs(self.tt_ranks, self.nmodes)
+
+    @property
+    def lane_ranks(self) -> tuple[int, ...]:
+        return tuple(a * b for a, b in self.bond_pairs)
+
+    def in_rank_pairs(self, mode: int) -> tuple[tuple[int, int], ...]:
+        pairs = self.bond_pairs
+        return tuple(pairs[im] for im in self.stacks[mode].in_modes)
+
+    def _stream_args(self) -> tuple:
+        return (self.idx_sh, self.val_sh)
+
+    def _build_sweep(self) -> Callable:
+        # Lazy: repro.tt imports this module at load time.
+        from ..tt.als import _p_next, _q_suffix, _solve_core, matrix_to_core, tt_inner
+
+        shape, nmodes = self.shape, self.nmodes
+        pairs, lr = self.bond_pairs, self.lane_ranks
+        rps, prows = self.rank_pads, self.padded_rows
+        stacks, interpret = self.stacks, self.interpret
+        mesh, axes = self.dist.mesh, self.dist.data_axes()
+        in_pairs = {m: self.in_rank_pairs(m) for m in range(nmodes)}
+        arr_specs = {m: stacks[m].tree_specs(axes) for m in range(nmodes)}
+        fac_specs = tuple(P(None, None) for _ in range(nmodes))
+
+        def local_sweep(arrs, idx, val, facs, norm_x_sq):
+            facs = list(facs)
+            cores = [
+                matrix_to_core(facs[m][: shape[m], : lr[m]], *pairs[m])
+                for m in range(nmodes)
+            ]
+            # Right interfaces from the incoming cores (cores > m are
+            # untouched until the left-to-right sweep reaches them), the
+            # running left interface from each freshly solved core.
+            qs = _q_suffix(cores)
+            p = jnp.ones((1, 1), jnp.float32)
+            for m in range(nmodes):
+                s = stacks[m]
+                in_mats = tuple(
+                    facs[im][: s.in_rows[n]] for n, im in enumerate(s.in_modes)
+                )
+                out = _stack_ttcore_call(s, arrs[m], in_mats, in_pairs[m], m, interpret)
+                # The single collective per mode: partial right-hand-side
+                # rows from disjoint tile ranges -> the full B_m.
+                b = jax.lax.psum(out, axes)[: shape[m], : lr[m]]
+                w = _solve_core(jnp.kron(p, qs[m]), b)
+                cores[m] = matrix_to_core(w, *pairs[m])
+                facs[m] = (
+                    jnp.zeros((prows[m], rps[m]), w.dtype)
+                    .at[: shape[m], : lr[m]]
+                    .set(w)
+                )
+                p = _p_next(p, cores[m])
+            # Fit from psum'd scalars: each shard's slice of <X, TT>
+            # (padding entries carry value 0); ||TT||^2 is the completed
+            # left-interface chain, a replicated scalar.
+            inner = jax.lax.psum(tt_inner(idx[0], val[0], cores), axes)
+            resid_sq = jnp.maximum(norm_x_sq + p[0, 0] - 2.0 * inner, 0.0)
+            fit = 1.0 - jnp.sqrt(resid_sq) / jnp.sqrt(norm_x_sq)
+            return tuple(facs), fit
+
+        def sweep(arrs, idx_sh, val_sh, facs, norm_x_sq):
+            facs, fit = shard_map(
+                local_sweep,
+                mesh=mesh,
+                in_specs=(
+                    arr_specs,
+                    P(axes, None, None),
+                    P(axes, None),
+                    fac_specs,
+                    P(),
+                ),
+                out_specs=(fac_specs, P()),
+                check_rep=False,
+            )(arrs, idx_sh, val_sh, facs, norm_x_sq)
+            return facs, None, fit
+
+        return jax.jit(sweep)
+
+    def sweep(self, facs, norm_x_sq):
+        """One jitted distributed TT-ALS iteration in padded space.  Returns
+        (new padded interface matrices, None, fit scalar on device) — the
+        `PlannedTT.sweep` contract."""
+        return super().sweep(facs, norm_x_sq)
+
+
+def make_sharded_planned_tt(
+    st: SparseTensor,
+    tt_ranks: Sequence[int],
+    *,
+    dist=None,
+    devices: int | None = None,
+    cfg: MemoryControllerConfig | None = None,
+    auto_tune: bool = False,
+    spec: TPUSpec = TPUSpec(),
+    interpret: bool = True,
+) -> ShardedPlannedTT:
+    """Build the distributed TT-ALS workspace: one partition + shard-stacked
+    TT-core layout per output mode.  Mirrors `make_sharded_planned_cp_als`;
+    with auto_tune=True the sharded PMS scores the TT roofline per mode
+    (`search_sharded(kernel="tt", core_ranks=...)`)."""
+    from ..tt.als import _validated_tt_ranks
+
+    tr = _validated_tt_ranks(st, tt_ranks)
+    dist = _resolve_dist(dist, devices)
+    nshards = dist.dp_size()
+    stacks: dict[int, _ShardStack] = {}
+    cfgs: dict[int, MemoryControllerConfig] = {}
+    part0 = None
+    for m in range(st.nmodes):
+        mcfg = _tuned_cfg(
+            st, m, max(tr), nshards, cfg, auto_tune, spec,
+            kernel="tt", core_ranks=tr,
+        )
+        cfgs[m] = mcfg
+        part, stacks[m] = _sharded_mode_stack(st, m, mcfg, dist, "tt")
+        if m == 0:
+            part0 = part
+    idx_sh, val_sh = _stack_fit_stream(part0, st.shape, dist)
+    return ShardedPlannedTT(
+        stacks=stacks,
+        dist=dist,
+        shape=st.shape,
+        tt_ranks=tr,
+        interpret=interpret,
+        cfgs=cfgs,
+        idx_sh=idx_sh,
+        val_sh=val_sh,
     )

@@ -1,0 +1,260 @@
+"""The `PlannedWorkspace` protocol: one shared implementation of everything a
+planned decomposition workspace does that is NOT format-specific.
+
+The paper's thesis is that the memory controller is *programmable* — one
+remapped-COO data path serving many tensor kernels.  CP (MTTKRP), Tucker
+(TTMc) and tensor-train (TT core update) all drive the same per-output-mode
+BlockPlan layouts; what differs per format is only the per-mode contraction
+and the factor-update math.  This module owns the shared layer:
+
+  * rank padding + device-resident factor management (`pad_factors` /
+    `unpad_factors` / `padded_rows` / `rank_pads`), parameterized by the one
+    format-specific quantity — `lane_ranks`, each mode's true lane width
+    (CP: R for every mode; Tucker: R_m; TT: rl_m * rr_m);
+  * plan-per-mode amortization bookkeeping (`plan_bytes`, layout-byte
+    accounting for both the single-device and shard-stacked layouts);
+  * the lazily-compiled sweep cache (`sweep` builds `_build_sweep()` once);
+  * `drive` — the host loop shared by every jitted path: pad once, one sweep
+    per iteration, host-side tol early-exit, unpad at materialization;
+  * visited-row masking (`_apply_row_mask` / `_visited_row_mask`) and the
+    device-side plan arrays every kernel family consumes.
+
+Format classes (`PlannedCPALS`, `PlannedTucker`, `PlannedTT` and their
+sharded variants) subclass `PlannedWorkspace` / `ShardedWorkspace` and
+provide only `lane_ranks`, `_geoms()` and `_build_sweep()` — the
+format-specific sweep body IS the format.
+"""
+from __future__ import annotations
+
+from typing import Any, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..core.loop import finish_iter
+from ..core.remap import BlockPlan
+from .mttkrp_pallas import pad_factor, rank_padded
+
+__all__ = [
+    "PlannedWorkspace",
+    "ShardedWorkspace",
+    "planned_layout_bytes",
+    "sharded_layout_bytes",
+]
+
+
+def _apply_row_mask(out: jax.Array, mask: jax.Array) -> jax.Array:
+    """Zero the masked-out rows with `where`, NOT multiplication: unvisited
+    tiles hold NaN in interpret mode and 0 * NaN = NaN."""
+    return jnp.where(mask[:, None] > 0, out, 0.0)
+
+
+def _visited_row_mask(block_it: np.ndarray, tile_i: int, out_rows: int) -> np.ndarray:
+    """1.0 for every output row whose tile some block visits, else 0.0.
+
+    The Pallas kernels zero an output tile only on its *first visit*; a tile
+    no block targets keeps whatever the output buffer held (NaN in interpret
+    mode, undefined on hardware).  Such tiles exist whenever a tile_i range
+    of the output coordinate owns no non-zeros — their MTTKRP/TTMc/TT-core
+    rows are mathematically zero, so every planned call multiplies by this
+    mask."""
+    ntiles = out_rows // tile_i
+    tile_mask = np.zeros((ntiles,), np.float32)
+    tile_mask[np.unique(block_it)] = 1.0
+    return np.repeat(tile_mask, tile_i)
+
+
+def _plan_device_arrays(plan: BlockPlan) -> dict:
+    """Move a BlockPlan's layout to device in the shape the kernels consume:
+    (nblocks, blk) stream tiles + per-block tile-id streams + the
+    visited-row mask zeroing tiles the plan never touches."""
+    nb, blk = plan.nblocks, plan.blk
+    return dict(
+        block_it=jnp.asarray(plan.block_it),
+        block_in=tuple(jnp.asarray(t) for t in plan.block_in),
+        vals=jnp.asarray(plan.vals).reshape(nb, blk),
+        iloc=jnp.asarray(plan.iloc).reshape(nb, blk),
+        in_locs=tuple(jnp.asarray(l).reshape(nb, blk) for l in plan.in_locs),
+        row_mask=jnp.asarray(
+            _visited_row_mask(plan.block_it, plan.tile_i, plan.out_rows)
+        ),
+    )
+
+
+def planned_layout_bytes(ops: dict[int, Any]) -> int:
+    """HBM held by a per-mode plan family's remapped layouts (the 'copies'
+    space/time trade, Sec. 3).  Element widths come from each mode's Remapper
+    configuration; identical for every kernel family — the layout is shared."""
+    total = 0
+    for op in ops.values():
+        p, r = op.plan, op.cfg.remapper
+        slots = p.vals.shape[0]
+        total += slots * (r.value_bytes + (1 + p.n_in) * r.index_bytes)
+        total += p.nblocks * (1 + p.n_in) * r.index_bytes
+    return total
+
+
+def sharded_layout_bytes(stacks: dict[int, Any], cfgs: dict[int, Any]) -> int:
+    """HBM held by a per-mode shard-stack family, summed over every device
+    (the distributed 'copies' trade: N layouts per shard) — the sharded
+    analogue of `planned_layout_bytes`.  Counts the padded stack width, i.e.
+    what is actually resident."""
+    total = 0
+    for m, s in stacks.items():
+        r = cfgs[m].remapper
+        slots = s.nshards * s.nblocks * s.blk
+        total += slots * (r.value_bytes + (1 + s.n_in) * r.index_bytes)
+        total += s.nshards * s.nblocks * (1 + s.n_in) * r.index_bytes
+    return total
+
+
+def _padded_rows_from(geoms: dict[int, Any], nmodes: int) -> tuple[int, ...]:
+    """Shared row-padding rule over any per-mode layout family exposing
+    BlockPlan geometry (`out_rows` / `in_modes` / `in_rows`): single-device
+    plans and sharded `_ShardStack`s use identical padding, so factors can
+    move between the two paths without re-padding."""
+    rows = []
+    for m in range(nmodes):
+        r = geoms[m].out_rows
+        for g in geoms.values():
+            for n, im in enumerate(g.in_modes):
+                if im == m:
+                    r = max(r, g.in_rows[n])
+        rows.append(r)
+    return tuple(rows)
+
+
+class PlannedWorkspace:
+    """Base protocol of every planned decomposition workspace.
+
+    Subclass contract (the entire per-format surface):
+      * a `shape` attribute — the true tensor shape;
+      * `lane_ranks` — each mode's true lane width (the factor's column
+        count: CP R, Tucker R_m, TT rl_m*rr_m);
+      * `_geoms()` — the per-mode layout family (BlockPlans or _ShardStacks)
+        for the shared row-padding rule;
+      * `_layout_bytes()` — HBM held by the layouts;
+      * `_build_sweep()` — compile the format's jitted sweep; its result must
+        accept rank-padded factors first and return
+        (new padded factors, aux, fit).
+
+    The base provides the padded-space residency contract shared by every
+    format: `pad_factors` pads each mode ONCE for the whole decomposition (to
+    the maximum row padding any plan needs, lanes to `rank_padded`); sweeps
+    update factors in padded space, keeping padding rows/lanes exactly zero
+    so grams/fits in padded space match the true-shape computation bit for
+    bit; `unpad_factors` slices back only at materialization.
+    """
+
+    _sweep_fn = None  # instance attribute on first `sweep` call
+
+    @property
+    def nmodes(self) -> int:
+        return len(self.shape)
+
+    @property
+    def lane_ranks(self) -> tuple[int, ...]:
+        """Per-mode true lane width of each factor (format-specific)."""
+        raise NotImplementedError
+
+    @property
+    def rank_pads(self) -> tuple[int, ...]:
+        """Per-mode lane padding: each factor padded to its own width."""
+        return tuple(rank_padded(r) for r in self.lane_ranks)
+
+    @property
+    def padded_rows(self) -> tuple[int, ...]:
+        """Per-mode device-resident row padding (see `_padded_rows_from`)."""
+        return _padded_rows_from(self._geoms(), self.nmodes)
+
+    def _geoms(self) -> dict[int, Any]:
+        raise NotImplementedError
+
+    def _layout_bytes(self) -> int:
+        raise NotImplementedError
+
+    def _build_sweep(self):
+        raise NotImplementedError
+
+    def pad_factors(self, factors: Sequence[jax.Array]) -> tuple[jax.Array, ...]:
+        """One pad per mode for the whole decomposition (not N x iters)."""
+        return tuple(
+            pad_factor(f, rows, rp)
+            for f, rows, rp in zip(factors, self.padded_rows, self.rank_pads)
+        )
+
+    def unpad_factors(self, padded: Sequence[jax.Array]) -> list[jax.Array]:
+        return [
+            f[:s, :r] for f, s, r in zip(padded, self.shape, self.lane_ranks)
+        ]
+
+    def plan_bytes(self) -> int:
+        """HBM held by the per-mode layouts (the 'copies' trade, Sec. 3)."""
+        return self._layout_bytes()
+
+    def sweep(self, facs, *args, **kwargs):
+        """One jitted iteration in padded space.
+
+        `facs` is the factor tuple in PADDED space — one (padded_rows[m],
+        rank_pads[m]) array per mode, as produced by `pad_factors` or a
+        previous `sweep` call.  Invariant: padding rows and lanes are exactly
+        zero on entry and are kept exactly zero on exit.  Returns (new padded
+        factors, aux, fit), all device-resident — feeding the returned
+        factors straight into the next call incurs zero host transfers and
+        zero re-padding.  The compiled sweep is built lazily on first use and
+        cached for the workspace's lifetime."""
+        if self._sweep_fn is None:
+            self._sweep_fn = self._build_sweep()
+        return self._sweep_fn(facs, *args, **kwargs)
+
+    def _sweep_call(self, facs, *args, it: int):
+        """`drive`'s per-iteration hook; formats whose sweep takes the
+        iteration count (CP's `first` retrace) override this."""
+        return self.sweep(facs, *args)
+
+    def drive(self, factors, args=(), *, iters: int, tol=None,
+              verbose: bool = False, label: str = "decompose"):
+        """The shared host loop of every jitted planned path: pad once, one
+        compiled sweep per iteration, host-side tol early-exit on the fit
+        scalar (the only device->host sync), unpad at materialization.
+        Returns (true-shape factors, aux from the last sweep, fit history)."""
+        fits: list[float] = []
+        facs = self.pad_factors(factors)
+        aux = None
+        for it in range(iters):
+            facs, aux, fit = self._sweep_call(facs, *args, it=it)
+            if finish_iter(fits, fit, it, tol, verbose, label):
+                break
+        return self.unpad_factors(facs), aux, fits
+
+
+class ShardedWorkspace(PlannedWorkspace):
+    """Base of the distributed workspaces (repro.dist.planned): the same
+    protocol over per-mode `_ShardStack`s — shard d of mode m's stack holds
+    the remapped, device-resident layout of shard d's slice of the stream —
+    with the sweep running as one jitted shard_map.  Subclasses additionally
+    carry `stacks` / `dist` / `cfgs`; `_stream_args()` supplies the
+    shard-stacked fit stream for formats whose fit walks the non-zeros."""
+
+    @property
+    def nshards(self) -> int:
+        return self.dist.dp_size()
+
+    def _geoms(self) -> dict[int, Any]:
+        return self.stacks
+
+    def _layout_bytes(self) -> int:
+        return sharded_layout_bytes(self.stacks, self.cfgs)
+
+    def _stream_args(self) -> tuple:
+        return ()
+
+    def sweep(self, facs, *args, **kwargs):
+        """One jitted distributed iteration in padded space — the
+        `PlannedWorkspace.sweep` contract minus any stream arguments (each
+        shard's slice already lives on its device)."""
+        if self._sweep_fn is None:
+            self._sweep_fn = self._build_sweep()
+        arrs = {m: self.stacks[m].tree() for m in range(self.nmodes)}
+        return self._sweep_fn(arrs, *self._stream_args(), facs, *args, **kwargs)

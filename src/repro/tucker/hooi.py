@@ -43,15 +43,16 @@ import jax.numpy as jnp
 import numpy as np
 
 from ..core.coo import SparseTensor
-from ..core.memctrl import MemoryControllerConfig, TPUSpec
-from ..kernels.mttkrp_pallas import pad_factor, rank_padded
-from ..kernels.ops import (
-    PlannedTTMC,
-    make_planned_ttmc,
-    planned_layout_bytes,
-    planned_padded_rows,
+from ..core.loop import (
+    check_planned_method,
+    check_workspace,
+    finish_iter,
+    require_sharded_sweep,
 )
+from ..core.memctrl import MemoryControllerConfig, TPUSpec
+from ..kernels.ops import PlannedTTMC, make_planned_ttmc, planned_layout_bytes
 from ..kernels.ref import ttmc_ref
+from ..kernels.workspace import PlannedWorkspace
 
 __all__ = [
     "TuckerState",
@@ -160,17 +161,8 @@ def _sweep_reference(factors, idx, val, norm_x_sq, *, shape, core_ranks):
     return tuple(factors), core, core_fit_value(core, norm_x_sq)
 
 
-def _finish_iter(fits, fit, it, tol, verbose) -> bool:
-    """Host-side bookkeeping per iteration: record the fit scalar and decide
-    the tol early-exit (the only device->host sync in the jitted loops)."""
-    fits.append(float(fit))
-    if verbose:
-        print(f"[tucker_hooi] iter {it:3d} fit={fits[-1]:.6f}")
-    return tol is not None and it > 0 and abs(fits[-1] - fits[-2]) < tol
-
-
 @dataclasses.dataclass
-class PlannedTucker:
+class PlannedTucker(PlannedWorkspace):
     """Per-mode plan cache driving the whole HOOI loop on the memory
     controller — the Tucker mirror of `PlannedCPALS`.
 
@@ -178,48 +170,26 @@ class PlannedTucker:
     device-resident copy of the non-zero stream — constructed once and reused
     for every HOOI iteration.  The steady-state iteration is `sweep`: one
     jitted function running a full HOOI iteration (every mode's TTMc -> Gram
-    eigh -> factor update, plus the core fold and fit).  Factors stay
-    rank-padded (each mode to its own rank_padded(R_m)) and device-resident
-    across iterations; `pad_factors` / `unpad_factors` bracket the loop.
+    eigh -> factor update, plus the core fold and fit).  Padding/residency
+    (each mode to its own rank_padded(R_m)) and the host drive loop come
+    from `PlannedWorkspace` — this class supplies only the HOOI sweep body.
     """
 
     ops: dict[int, PlannedTTMC]
     shape: tuple[int, ...]
     core_ranks: tuple[int, ...]
-    _sweep_fn: Callable | None = dataclasses.field(default=None, repr=False)
 
     @property
-    def nmodes(self) -> int:
-        return len(self.shape)
-
-    @property
-    def rank_pads(self) -> tuple[int, ...]:
-        """Per-mode lane padding: each factor carries its own R_m padding
-        (unlike CP's shared rank)."""
-        return tuple(rank_padded(r) for r in self.core_ranks)
+    def lane_ranks(self) -> tuple[int, ...]:
+        return self.core_ranks
 
     def plan_for(self, mode: int):
         return self.ops[mode].plan
 
-    @property
-    def padded_rows(self) -> tuple[int, ...]:
-        """Per-mode device-resident row padding (see `planned_padded_rows`)."""
-        return planned_padded_rows(self.ops, self.nmodes)
+    def _geoms(self) -> dict:
+        return {m: op.plan for m, op in self.ops.items()}
 
-    def pad_factors(self, factors: Sequence[jax.Array]) -> tuple[jax.Array, ...]:
-        """One pad per mode for the whole decomposition (not N x iters)."""
-        return tuple(
-            pad_factor(f, rows, rp)
-            for f, rows, rp in zip(factors, self.padded_rows, self.rank_pads)
-        )
-
-    def unpad_factors(self, padded: Sequence[jax.Array]) -> list[jax.Array]:
-        return [
-            f[:s, :r] for f, s, r in zip(padded, self.shape, self.core_ranks)
-        ]
-
-    def plan_bytes(self) -> int:
-        """HBM held by the per-mode layouts (the 'copies' trade, Sec. 3)."""
+    def _layout_bytes(self) -> int:
         return planned_layout_bytes(self.ops)
 
     def _build_sweep(self) -> Callable:
@@ -256,9 +226,7 @@ class PlannedTucker:
     def sweep(self, facs, norm_x_sq):
         """One jitted HOOI iteration in padded space.  Returns
         (new padded factors, core, fit scalar on device)."""
-        if self._sweep_fn is None:
-            self._sweep_fn = self._build_sweep()
-        return self._sweep_fn(facs, norm_x_sq)
+        return super().sweep(facs, norm_x_sq)
 
 
 def make_planned_tucker(
@@ -330,22 +298,9 @@ def tucker_hooi(
     norm_x_sq = jnp.asarray(float(np.sum(st.values.astype(np.float64) ** 2)), jnp.float32)
     fits: list[float] = []
 
-    if planned is not None and method not in ("pallas", "pallas_sharded"):
-        raise ValueError(
-            "a planned workspace was passed but method is not 'pallas' / "
-            "'pallas_sharded'; the workspace would be silently ignored"
-        )
-    if method != "pallas_sharded" and (devices is not None or dist is not None):
-        raise ValueError(
-            f"devices/dist apply only to method='pallas_sharded' (got "
-            f"method={method!r}); they would be silently ignored"
-        )
+    check_planned_method(method, planned, devices, dist)
     if method == "pallas_sharded":
-        if not jit_sweep:
-            raise ValueError(
-                "method='pallas_sharded' runs only as the jitted shard_map "
-                "sweep; use method='pallas' for the eager parity baseline"
-            )
+        require_sharded_sweep(jit_sweep)
         from ..kernels.ops import ShardedPlannedTucker, make_sharded_planned_tucker
 
         if planned is None:
@@ -353,60 +308,34 @@ def tucker_hooi(
                 st, cr, dist=dist, devices=devices, cfg=cfg,
                 auto_tune=auto_tune, interpret=interpret,
             )
-        elif not isinstance(planned, ShardedPlannedTucker):
-            raise ValueError(
-                f"method='pallas_sharded' needs a ShardedPlannedTucker "
-                f"workspace, got {type(planned).__name__}"
+        else:
+            check_workspace(
+                planned, ShardedPlannedTucker, method,
+                {"shape": st.shape, "core_ranks": cr}, devices=devices,
             )
-        elif planned.shape != st.shape or planned.core_ranks != cr:
-            raise ValueError(
-                f"ShardedPlannedTucker workspace was built for "
-                f"shape={planned.shape} core_ranks={planned.core_ranks}, got "
-                f"shape={st.shape} core_ranks={cr}"
-            )
-        elif devices is not None and planned.nshards != devices:
-            raise ValueError(
-                f"ShardedPlannedTucker workspace spans {planned.nshards} "
-                f"shards but devices={devices} was requested"
-            )
-        facs_p = planned.pad_factors(factors)
-        core = None
-        for it in range(iters):
-            facs_p, core, fit = planned.sweep(facs_p, norm_x_sq)
-            if _finish_iter(fits, fit, it, tol, verbose):
-                break
-        return TuckerState(
-            factors=planned.unpad_factors(facs_p), core=core, fit_history=fits
+        factors, core, fits = planned.drive(
+            factors, (norm_x_sq,), iters=iters, tol=tol, verbose=verbose,
+            label="tucker_hooi",
         )
+        return TuckerState(factors=factors, core=core, fit_history=fits)
     if method == "pallas":
         if planned is None:
             planned = make_planned_tucker(
                 st, cr, cfg=cfg, auto_tune=auto_tune, interpret=interpret
             )
-        elif not isinstance(planned, PlannedTucker):
-            raise ValueError(
-                f"method='pallas' needs a PlannedTucker workspace, got "
-                f"{type(planned).__name__} (use method='pallas_sharded' for "
-                f"sharded workspaces)"
-            )
-        elif planned.shape != st.shape or planned.core_ranks != cr:
-            raise ValueError(
-                f"PlannedTucker workspace was built for shape={planned.shape} "
-                f"core_ranks={planned.core_ranks}, got shape={st.shape} "
-                f"core_ranks={cr}"
+        else:
+            check_workspace(
+                planned, PlannedTucker, method,
+                {"shape": st.shape, "core_ranks": cr},
             )
         if jit_sweep:
             # Fast path: factors padded once, updated in padded space by one
             # jitted sweep per iteration; sliced back only for the state.
-            facs_p = planned.pad_factors(factors)
-            core = None
-            for it in range(iters):
-                facs_p, core, fit = planned.sweep(facs_p, norm_x_sq)
-                if _finish_iter(fits, fit, it, tol, verbose):
-                    break
-            return TuckerState(
-                factors=planned.unpad_factors(facs_p), core=core, fit_history=fits
+            factors, core, fits = planned.drive(
+                factors, (norm_x_sq,), iters=iters, tol=tol, verbose=verbose,
+                label="tucker_hooi",
             )
+            return TuckerState(factors=factors, core=core, fit_history=fits)
     elif method != "reference":
         raise ValueError(f"unknown method {method!r}: expected 'pallas' or 'reference'")
 
@@ -423,7 +352,7 @@ def tucker_hooi(
             factors_t, core, fit = _sweep_reference(
                 factors_t, idx, val, norm_x_sq, shape=st.shape, core_ranks=cr
             )
-            if _finish_iter(fits, fit, it, tol, verbose):
+            if finish_iter(fits, fit, it, tol, verbose, "tucker_hooi"):
                 break
         return TuckerState(factors=list(factors_t), core=core, fit_history=fits)
 
@@ -439,6 +368,6 @@ def tucker_hooi(
             factors[m] = _factor_from_unfolding(y, cr[m])
         last = nmodes - 1
         core = _core_from_unfolding(y, factors[last], last, cr)
-        if _finish_iter(fits, core_fit_value(core, norm_x_sq), it, tol, verbose):
+        if finish_iter(fits, core_fit_value(core, norm_x_sq), it, tol, verbose, "tucker_hooi"):
             break
     return TuckerState(factors=factors, core=core, fit_history=fits)

@@ -130,17 +130,19 @@ def test_jitted_sweep_matches_eager_pure_jax(layout):
 
 def test_planned_cp_als_pads_once_per_mode(monkeypatch):
     """Regression (fast-path contract): a full cp_als(method='pallas') run
-    pads each factor exactly once — in PlannedCPALS.pad_factors — instead of
-    N x iters eager pad_factor calls; iterations update factors in padded
-    space."""
+    pads each factor exactly once — in the shared PlannedWorkspace.pad_factors
+    (kernels/workspace.py) — instead of N x iters eager pad_factor calls;
+    iterations update factors in padded space."""
+    import repro.kernels.workspace as workspace_mod
+
     calls = []
-    orig = ops_mod.pad_factor
+    orig = workspace_mod.pad_factor
 
     def counting(*a, **k):
         calls.append(a)
         return orig(*a, **k)
 
-    monkeypatch.setattr(ops_mod, "pad_factor", counting)
+    monkeypatch.setattr(workspace_mod, "pad_factor", counting)
     st_t = frostt_like("tiny")
     cp_als(st_t, rank=4, iters=3, method="pallas", seed=0)
     assert len(calls) == st_t.nmodes

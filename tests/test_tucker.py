@@ -279,6 +279,7 @@ def test_plan_cache_no_cross_kind_collisions(tiny_tensor):
         "by_kind": {
             "mttkrp": {"hits": 0, "misses": 1},
             "ttmc": {"hits": 0, "misses": 1},
+            "tt": {"hits": 0, "misses": 0},
         },
     }
     # and each kind still hits itself afterwards
@@ -287,6 +288,40 @@ def test_plan_cache_no_cross_kind_collisions(tiny_tensor):
     s = plan_cache_stats()
     assert s["by_kind"]["mttkrp"]["hits"] == 1
     assert s["by_kind"]["ttmc"]["hits"] == 1
+    plan_cache_clear()
+
+
+def test_plan_cache_tt_kind_isolated(tiny_tensor):
+    """Regression: a 'tt' plan for the same (tensor, mode) never collides
+    with the 'mttkrp' or 'ttmc' entries, and vice versa — the TT kernel
+    instance carries interface-pair state the other kernels must never
+    see."""
+    from repro.tt import init_tt_cores, tt_auto
+
+    plan_cache_clear()
+    rank = 4
+    facs = random_factors(jax.random.PRNGKey(1), tiny_tensor.shape, rank)
+    cores = init_tt_cores(jax.random.PRNGKey(2), tiny_tensor.shape, (4, 4))
+    mttkrp_auto(tiny_tensor, facs, 0, method="pallas")
+    tucker_auto(tiny_tensor, facs, 0, method="pallas")
+    tt_auto(tiny_tensor, cores, 0, method="pallas")
+    s = plan_cache_stats()
+    # three kinds, three misses: nobody served anybody else's plan
+    assert s == {
+        "hits": 0,
+        "misses": 3,
+        "by_kind": {
+            "mttkrp": {"hits": 0, "misses": 1},
+            "ttmc": {"hits": 0, "misses": 1},
+            "tt": {"hits": 0, "misses": 1},
+        },
+    }
+    # tt hits itself afterwards, without disturbing the other kinds
+    tt_auto(tiny_tensor, cores, 0, method="pallas")
+    s = plan_cache_stats()
+    assert s["by_kind"]["tt"] == {"hits": 1, "misses": 1}
+    assert s["by_kind"]["mttkrp"] == {"hits": 0, "misses": 1}
+    assert s["by_kind"]["ttmc"] == {"hits": 0, "misses": 1}
     plan_cache_clear()
 
 
