@@ -26,6 +26,12 @@ Sections
                  TT-ALS sweep (every mode's TT-core kernel -> kron(P,Q)
                  normal solve -> core update + fit), and the tt_auto side
                  of the kind-keyed plan cache.
+  guard_overhead the resilience guards (repro.resilience) on the drive
+                 loop: per-iteration wall-clock with guards off vs
+                 GuardConfig(check_factors_every=1) — the fit-based
+                 divergence tracker rides the existing host sync for free,
+                 so the delta is one stacked isfinite reduction + sync per
+                 iteration.  Acceptance: < 5% on als_iter_pallas.
   sharded_*      the distributed planned path (repro.dist.planned) on a
                  forced multi-device CPU host platform: workspace build
                  (per-mode partitions + shard-local layouts), one jitted
@@ -161,6 +167,39 @@ def bench_als_iter(presets, results, rank: int, reps: int):
             t = (time.perf_counter() - t0) / reps
             results.append(result_record(f"als_iter_{method}", preset, "iter_s", t, "s"))
             print(f"  {preset:10s} {method:17s} iter={t:8.3f}s")
+
+
+def bench_guard_overhead(results, preset: str, rank: int, iters: int):
+    """Numerical guards on the steady-state drive loop (same sweep the
+    als_iter_pallas section times, driven through `PlannedWorkspace.drive`):
+    guards off vs the heaviest cadence (check_factors_every=1)."""
+    print("== guard overhead (drive loop, guards off vs check_factors_every=1)")
+    from repro.core.loop import GuardConfig
+
+    st = frostt_like(preset)
+    f0 = random_factors(jax.random.PRNGKey(0), st.shape, rank)
+    idx, val = jnp.asarray(st.indices), jnp.asarray(st.values)
+    nxs = _norm_x_sq(st)
+    ws = ops.make_planned_cp_als(st, rank, interpret=True)
+    gc = GuardConfig(policy="raise", check_factors_every=1)
+    ws.drive(f0, (idx, val, nxs), iters=2)  # compile first + steady sweeps
+    ws.drive(f0, (idx, val, nxs), iters=2, guards=gc)  # + the finite check
+    t_off = min(
+        _timed(lambda: ws.drive(f0, (idx, val, nxs), iters=iters))
+        for _ in range(2)
+    ) / iters
+    t_on = min(
+        _timed(lambda: ws.drive(f0, (idx, val, nxs), iters=iters, guards=gc))
+        for _ in range(2)
+    ) / iters
+    frac = (t_on - t_off) / t_off
+    results += [
+        result_record("guard_overhead", preset, "iter_off_s", t_off, "s"),
+        result_record("guard_overhead", preset, "iter_on_s", t_on, "s"),
+        result_record("guard_overhead", preset, "overhead_frac", frac, "ratio"),
+    ]
+    print(f"  {preset:10s} off={t_off:.3f}s on={t_on:.3f}s "
+          f"overhead={frac:+.1%}")
 
 
 def bench_plan_cache(results, preset: str, rank: int):
@@ -367,6 +406,8 @@ def main(fast: bool = False, out: str | None = None) -> dict:
     bench_plan_build(plan_presets, results, reps=max(2, reps))
     bench_als_iter(als_presets, results, rank=rank, reps=reps)
     bench_plan_cache(results, preset="tiny", rank=rank)
+    bench_guard_overhead(results, preset="small", rank=rank,
+                         iters=3 if fast else 6)
     bench_tucker(results, tucker_presets, core_rank=4, reps=reps)
     bench_tt(results, tucker_presets, bond_rank=4, reps=reps)
     bench_sharded(results, sharded_presets, rank=rank, devices=2, reps=reps)

@@ -52,6 +52,69 @@ def _normalized_rank(format: str, rank, nmodes: int):
     return tuple(int(r) for r in rank)
 
 
+def _lane_ranks(format: str, r, nmodes: int) -> tuple[int, ...]:
+    """Per-mode factor lane widths (the `PlannedWorkspace.lane_ranks` rule)
+    without building a workspace — sizes the reference rung of the admission
+    ladder."""
+    if format == "cp":
+        return (r,) * nmodes
+    if format == "tucker":
+        return tuple(r)
+    bounds = (1,) + tuple(r) + (1,)
+    return tuple(bounds[m] * bounds[m + 1] for m in range(nmodes))
+
+
+def _admitted(st, r, *, format, method, planned, hbm_budget, interpret,
+              auto_tune, cfg, verbose):
+    """`hbm_budget=` handling: admit a prebuilt workspace as-is, or run the
+    graceful-degradation ladder (`repro.resilience.plan_with_budget`) over
+    freshly built workspaces — stepping down the DMA block size, then the
+    reference path, then `AdmissionError`.  Returns the (possibly built)
+    workspace and the (possibly degraded) method."""
+    from .resilience import admit, plan_with_budget, reference_footprint_bytes
+
+    reference_method = "approach1" if format == "cp" else "reference"
+    if method not in ("pallas", reference_method, "approach2"):
+        raise ValueError(
+            f"hbm_budget applies to method='pallas' and the reference "
+            f"methods, got method={method!r}"
+        )
+    ref_bytes = reference_footprint_bytes(st, _lane_ranks(format, r, st.nmodes))
+    if method != "pallas":
+        if ref_bytes > hbm_budget:
+            from .resilience import AdmissionError
+
+            raise AdmissionError(hbm_budget, [], ref_bytes)
+        return planned, method
+    if planned is not None:
+        admit(planned, hbm_budget)
+        return planned, method
+    if auto_tune:
+        raise ValueError(
+            "hbm_budget's degradation ladder steps the controller config "
+            "explicitly; it is incompatible with auto_tune=True"
+        )
+    if format == "cp":
+        from .kernels.ops import make_planned_cp_als as build_ws
+    elif format == "tucker":
+        from .tucker.hooi import make_planned_tucker as build_ws
+    else:
+        from .tt.als import make_planned_tt as build_ws
+    ws, decision = plan_with_budget(
+        lambda c: build_ws(st, r, cfg=c, interpret=interpret),
+        hbm_budget, cfg=cfg, reference_bytes=ref_bytes,
+    )
+    if verbose:
+        rungs = ", ".join(
+            f"blk={a['blk']}:{a['total_bytes']:,}B" for a in decision["ladder"]
+        )
+        print(f"[admission] {decision['admitted']} admitted under "
+              f"{hbm_budget:,}B (ladder: {rungs or 'none'})")
+    if ws is None:
+        return None, reference_method
+    return ws, method
+
+
 def decompose(
     st: SparseTensor,
     rank: int | Sequence[int],
@@ -69,6 +132,10 @@ def decompose(
     devices: int | None = None,
     dist=None,
     verbose: bool = False,
+    guards=None,
+    hbm_budget: int | None = None,
+    checkpoint_every: int | None = None,
+    checkpoint_path=None,
     **format_kwargs,
 ):
     """Decompose a sparse tensor on the programmable memory controller.
@@ -96,6 +163,20 @@ def decompose(
       jit_sweep: fully-jitted per-iteration sweep (the default); False keeps
         each format's eager per-mode dispatch loop as the parity baseline.
       devices / dist: 'pallas_sharded' placement.
+      guards: a `repro.resilience.GuardConfig` — numerical guards in the
+        planned drive loop (non-finite fit, sustained fit regression,
+        factor finiteness on cadence) with raise/restart/fallback recovery.
+      hbm_budget: admission control (method='pallas' and the reference
+        methods): the workspace's resident footprint (`plan_bytes()` +
+        padded factors + the PMS VMEM model) must fit this many bytes.
+        Over budget, the degradation ladder halves the DMA block size down
+        to a floor, then drops to the reference path, and only then raises
+        `repro.resilience.AdmissionError`.  Incompatible with a prebuilt
+        `planned=` (which is admitted as-is, no ladder) and with
+        auto_tune=True.
+      checkpoint_every / checkpoint_path: persist padded factors + fit
+        history every k iterations via `train.checkpoint`; a populated
+        checkpoint directory resumes the sweep bit-for-bit.
       **format_kwargs: forwarded to the format driver (e.g. TT's
         `init='svd'|'random'|'auto'`, CP's `layout=` / `mttkrp_fn=`).
 
@@ -109,10 +190,18 @@ def decompose(
             f"unknown format {format!r}: expected 'cp', 'tucker' or 'tt'"
         )
     r = _normalized_rank(format, rank, st.nmodes)
+    if hbm_budget is not None:
+        planned, method = _admitted(
+            st, r, format=format, method=method, planned=planned,
+            hbm_budget=hbm_budget, interpret=interpret, auto_tune=auto_tune,
+            cfg=cfg, verbose=verbose,
+        )
     common = dict(
         iters=iters, method=method, seed=seed, tol=tol, planned=planned,
         interpret=interpret, auto_tune=auto_tune, cfg=cfg,
         jit_sweep=jit_sweep, devices=devices, dist=dist, verbose=verbose,
+        guards=guards, checkpoint_every=checkpoint_every,
+        checkpoint_path=checkpoint_path,
         **format_kwargs,
     )
     if format == "cp":

@@ -26,6 +26,7 @@ import numpy as np
 
 from .coo import SparseTensor, to_device, random_factors
 from .loop import (
+    check_drive_extras,
     check_planned_method,
     check_workspace,
     finish_iter,
@@ -174,6 +175,9 @@ def cp_als(
     devices: int | None = None,
     dist=None,
     verbose: bool = False,
+    guards=None,
+    checkpoint_every: int | None = None,
+    checkpoint_path=None,
 ) -> CPState:
     """Run CP-ALS.
 
@@ -207,6 +211,11 @@ def cp_als(
                is sweep-only and rejects jit_sweep=False).
     devices / dist: 'pallas_sharded' placement — a device count for the
                default 1-D `shard` mesh, or an explicit ShardingPlan.
+    guards / checkpoint_every / checkpoint_path: the resilience surface of
+               the planned drive loop (repro.resilience): a `GuardConfig`
+               for divergence detection + raise/restart/fallback recovery,
+               and periodic checkpointing with automatic resume.  Planned
+               jitted paths only.
     """
     if layout not in ("remap", "copies"):
         raise ValueError(f"unknown layout {layout!r}: expected 'remap' or 'copies'")
@@ -218,6 +227,10 @@ def cp_als(
     fits: list[float] = []
 
     check_planned_method(method, planned, devices, dist)
+    # mttkrp_fn forces the eager loop, which never reaches drive's
+    # guard/checkpoint surface — fold it into the jit_sweep condition.
+    check_drive_extras(method, jit_sweep and mttkrp_fn is None, guards,
+                       checkpoint_every, checkpoint_path)
     if method == "pallas_sharded":
         if mttkrp_fn is not None:
             raise ValueError("mttkrp_fn cannot override the sharded planned path")
@@ -236,7 +249,8 @@ def cp_als(
             )
         factors, lam, fits = planned.drive(
             factors, (norm_x_sq,), iters=iters, tol=tol, verbose=verbose,
-            label="cp_als",
+            label="cp_als", guards=guards,
+            checkpoint_every=checkpoint_every, checkpoint_path=checkpoint_path,
         )
         return CPState(factors=factors, lam=lam, fit_history=fits)
     if method == "pallas" and mttkrp_fn is None:
@@ -257,7 +271,9 @@ def cp_als(
             base_idx, base_val = jnp.asarray(st.indices), jnp.asarray(st.values)
             factors, lam, fits = planned.drive(
                 factors, (base_idx, base_val, norm_x_sq), iters=iters, tol=tol,
-                verbose=verbose, label="cp_als",
+                verbose=verbose, label="cp_als", guards=guards,
+                checkpoint_every=checkpoint_every,
+                checkpoint_path=checkpoint_path,
             )
             return CPState(factors=factors, lam=lam, fit_history=fits)
         mttkrp_fn = planned.mttkrp_fn

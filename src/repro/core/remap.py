@@ -25,6 +25,7 @@ from __future__ import annotations
 
 import dataclasses
 import math
+import os
 from functools import partial
 
 import jax
@@ -235,6 +236,102 @@ class BlockPlan:
         return True
 
 
+class PlanValidationError(ValueError):
+    """A BlockPlan violates its layout contract (see `validate_plan`)."""
+
+
+def plans_validated() -> bool:
+    """True when `REPRO_VALIDATE_PLANS` requests integrity validation of
+    every plan at build time and on plan-cache hits.  Read per call, so tests
+    (and tenants) can flip it without re-importing."""
+    return os.environ.get("REPRO_VALIDATE_PLANS", "").strip().lower() in (
+        "1", "true", "yes", "on",
+    )
+
+
+def validate_plan(plan: BlockPlan) -> BlockPlan:
+    """Assert every BlockPlan invariant of the layout contract; raise
+    `PlanValidationError` naming the first violation.  Opt-in on the hot
+    paths via `REPRO_VALIDATE_PLANS=1` (`plans_validated`); always available
+    directly for debugging a suspect layout.  Returns the plan for chaining.
+
+    Invariants checked:
+      * stream arrays span exactly `nblocks * blk` slots, one tile-id stream
+        and one local-index vector per input mode;
+      * padded row counts are tile-aligned and cover the true rows;
+      * values are finite; at most `nnz` slots are non-zero (padding slots
+        carry value 0) and the stream has room for all `nnz` non-zeros;
+      * local indices lie inside their tile (`0 <= iloc < tile_i`,
+        `0 <= in_locs[n] < in_tiles[n]`);
+      * block tile ids are in range for the padded row counts;
+      * Approach-1 contiguity: each output tile's blocks are contiguous
+        (`a_tile_single_flush`).
+    """
+
+    def fail(msg: str):
+        raise PlanValidationError(
+            f"BlockPlan(mode={plan.mode}, nnz={plan.nnz}): {msg}"
+        )
+
+    n_in = plan.n_in
+    if not (len(plan.in_locs) == len(plan.block_in) == len(plan.in_tiles)
+            == len(plan.in_rows) == n_in):
+        fail("inconsistent input-mode arity across "
+             "in_locs/block_in/in_tiles/in_rows/in_modes")
+    if plan.mode in plan.in_modes or len(set(plan.in_modes)) != n_in:
+        fail(f"in_modes {plan.in_modes} must be distinct and exclude the "
+             f"output mode {plan.mode}")
+    if plan.blk < 1:
+        fail(f"blk={plan.blk} must be >= 1")
+    total = plan.nblocks * plan.blk
+    for name, arr in (("vals", plan.vals), ("iloc", plan.iloc),
+                      *((f"in_locs[{n}]", plan.in_locs[n]) for n in range(n_in))):
+        if arr.shape != (total,):
+            fail(f"{name} has shape {arr.shape}, expected ({total},) "
+                 f"= nblocks*blk")
+    for n in range(n_in):
+        if plan.block_in[n].shape != (plan.nblocks,):
+            fail(f"block_in[{n}] has shape {plan.block_in[n].shape}, "
+                 f"expected ({plan.nblocks},)")
+    if plan.out_rows % plan.tile_i != 0:
+        fail(f"out_rows={plan.out_rows} not a multiple of tile_i={plan.tile_i}")
+    for n in range(n_in):
+        if plan.in_rows[n] % plan.in_tiles[n] != 0:
+            fail(f"in_rows[{n}]={plan.in_rows[n]} not a multiple of "
+                 f"in_tiles[{n}]={plan.in_tiles[n]}")
+    if not np.all(np.isfinite(plan.vals)):
+        fail("non-finite values in the remapped stream")
+    if total < plan.nnz:
+        fail(f"stream holds {total} slots but the plan claims nnz={plan.nnz}")
+    nz = int(np.count_nonzero(plan.vals))
+    if nz > plan.nnz:
+        fail(f"{nz} non-zero slots exceed nnz={plan.nnz} — padding slots "
+             f"must be zero-valued")
+    if plan.iloc.size and (plan.iloc.min() < 0 or plan.iloc.max() >= plan.tile_i):
+        fail(f"iloc out of tile bounds [0, {plan.tile_i}): "
+             f"range [{plan.iloc.min()}, {plan.iloc.max()}]")
+    for n in range(n_in):
+        loc = plan.in_locs[n]
+        if loc.size and (loc.min() < 0 or loc.max() >= plan.in_tiles[n]):
+            fail(f"in_locs[{n}] out of tile bounds [0, {plan.in_tiles[n]}): "
+                 f"range [{loc.min()}, {loc.max()}]")
+    ntiles = plan.out_rows // plan.tile_i
+    if plan.block_it.size and (plan.block_it.min() < 0
+                               or plan.block_it.max() >= ntiles):
+        fail(f"block_it out of range [0, {ntiles}): "
+             f"range [{plan.block_it.min()}, {plan.block_it.max()}]")
+    for n in range(n_in):
+        nt = plan.in_rows[n] // plan.in_tiles[n]
+        bt = plan.block_in[n]
+        if bt.size and (bt.min() < 0 or bt.max() >= nt):
+            fail(f"block_in[{n}] out of range [0, {nt}): "
+                 f"range [{bt.min()}, {bt.max()}]")
+    if not plan.a_tile_single_flush():
+        fail("Approach-1 contiguity violated: an output tile's blocks are "
+             "not contiguous")
+    return plan
+
+
 def _ceil_to(x: int, m: int) -> int:
     return ((x + m - 1) // m) * m
 
@@ -364,7 +461,7 @@ def _assemble_plan(
     block_it: np.ndarray,
     block_in: list[np.ndarray],
 ) -> BlockPlan:
-    return BlockPlan(
+    plan = BlockPlan(
         vals=vals,
         iloc=iloc,
         in_locs=tuple(in_locs),
@@ -381,6 +478,11 @@ def _assemble_plan(
         in_modes=g.in_modes,
         nnz=st.nnz,
     )
+    # Opt-in build-time integrity gate (REPRO_VALIDATE_PLANS=1): both the
+    # vectorized and the reference builder funnel through this assembly tail.
+    if plans_validated():
+        validate_plan(plan)
+    return plan
 
 
 def plan_blocks(

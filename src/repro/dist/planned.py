@@ -36,12 +36,23 @@ Entry points (all re-exported here; built in kernels/ops.py):
 CPU containers: force a multi-device host platform with
 ``XLA_FLAGS=--xla_force_host_platform_device_count=N`` *before* importing
 jax (``examples/quickstart.py --devices N`` does this for you).
+
+Resilience (docs/robustness.md): the sharded sweep runs through the same
+`drive` loop as the single-device path, so ``guards=GuardConfig(...)`` and
+``checkpoint_every=/checkpoint_path=`` work unchanged — with one policy
+caveat: the "fallback" policy has no reference degradation target for a
+sharded workspace (there is no single-device reference sweep over shard
+stacks), so it escalates to `DecompositionDiverged`; use "raise" or
+"restart".  A silently dead shard (its remapped values zeroed, its device
+contributing nothing to the psum) is exactly the fit-regression signature
+the guards detect — see `repro.testing.faults.deaden_shard`.
 """
 from __future__ import annotations
 
 import jax
 import numpy as np
 
+from ..core.loop import DecompositionDiverged, GuardConfig
 from ..kernels.ops import (
     ShardedPlannedCPALS,
     ShardedPlannedMTTKRP,
@@ -67,6 +78,8 @@ __all__ = [
     "make_sharded_planned_cp_als",
     "make_sharded_planned_tucker",
     "make_sharded_planned_tt",
+    "GuardConfig",
+    "DecompositionDiverged",
 ]
 
 

@@ -32,6 +32,7 @@ from __future__ import annotations
 
 import dataclasses
 import functools
+import os
 from collections import OrderedDict
 from typing import Any, Callable, Sequence
 
@@ -45,7 +46,7 @@ from ..core.coo import SparseTensor
 from ..core.cp_als import _update_mode, fit_value, inner_with_model, model_norm_sq
 from ..core.memctrl import MemoryControllerConfig, TPUSpec
 from ..core.pms import search as pms_search
-from ..core.remap import BlockPlan, plan_blocks
+from ..core.remap import BlockPlan, plan_blocks, plans_validated, validate_plan
 from ..core.mttkrp import mttkrp as mttkrp_jax
 from .mttkrp_pallas import mttkrp_pallas_call, pad_factor, rank_padded
 from .ref import ttcore_ref, ttmc_ref
@@ -549,6 +550,40 @@ class PlannedCPALS(PlannedWorkspace):
         each mode's remapped copy already lives on device in its plan."""
         return self.ops[mode].output(factors, out_rows)
 
+    def vmem_model_bytes(self) -> int:
+        rp = self.rank_pad
+        return max(
+            op.cfg.vmem_bytes(rp, n_in=op.plan.n_in) for op in self.ops.values()
+        )
+
+    def _build_fallback_sweep(self) -> Callable:
+        """Reference degradation target of the "fallback" guard policy: the
+        same ALS iteration as `_build_sweep` with the per-mode Pallas calls
+        replaced by the pure-JAX Approach-1 MTTKRP on the raw stream (drive's
+        args already carry it for the fit).  Operates on the SAME padded
+        factors, so the switch reuses the last good iterate unchanged."""
+        shape, rank, nmodes = self.shape, self.rank, self.nmodes
+        rp, prows = self.rank_pad, self.padded_rows
+
+        def sweep(facs, idx, val, norm_x_sq, first):
+            facs = list(facs)
+            lam = None
+            for m in range(nmodes):
+                true = [f[:s, :rank] for f, s in zip(facs, shape)]
+                mt = mttkrp_jax(
+                    idx, val, true, m, shape[m],
+                    method="approach1", sorted_by_mode=False,
+                )
+                true, lam = _update_mode(mt, true, m, first)
+                f = true[m]
+                facs[m] = jnp.zeros((prows[m], rp), f.dtype).at[: shape[m], :rank].set(f)
+            true = [f[:s, :rank] for f, s in zip(facs, shape)]
+            fit = fit_value(idx, val, true, lam, norm_x_sq)
+            return tuple(facs), lam, fit
+
+        jitted = jax.jit(sweep, static_argnames=("first",))
+        return lambda facs, *args, it: jitted(facs, *args, first=(it == 0))
+
 
 def make_planned_cp_als(
     st: SparseTensor,
@@ -593,20 +628,50 @@ def make_planned_cp_als(
 # ---------------------------------------------------------------------------
 
 _PLAN_CACHE: OrderedDict[tuple, "PlannedMTTKRP | PlannedTTMC"] = OrderedDict()
-_PLAN_CACHE_CAP = 32  # LRU bound: each entry pins a device-resident layout
+# LRU bound: each entry pins a device-resident layout, so an unbounded cache
+# lets a tenant churning tensor fingerprints grow resident HBM without limit.
+# Env-overridable at import (REPRO_PLAN_CACHE_MAX) and at runtime
+# (plan_cache_config).
+_PLAN_CACHE_CAP = max(1, int(os.environ.get("REPRO_PLAN_CACHE_MAX", "32")))
 _PLAN_CACHE_KINDS = ("mttkrp", "ttmc", "tt")
 _PLAN_CACHE_STATS = {k: {"hits": 0, "misses": 0} for k in _PLAN_CACHE_KINDS}
+_PLAN_CACHE_EVICTIONS = {"count": 0}
+
+
+def plan_cache_config(maxsize: int | None = None) -> int:
+    """Get (and optionally set) the plan cache's LRU bound.
+
+    With `maxsize=None` returns the current bound.  With an integer, sets the
+    bound (>= 1), immediately evicting least-recently-used entries down to it
+    (counted in `plan_cache_stats()["evictions"]`), and returns the new
+    bound.  The initial bound comes from `REPRO_PLAN_CACHE_MAX` (default
+    32)."""
+    global _PLAN_CACHE_CAP
+    if maxsize is not None:
+        if maxsize < 1:
+            raise ValueError(f"plan cache maxsize must be >= 1, got {maxsize}")
+        _PLAN_CACHE_CAP = int(maxsize)
+        _evict_to_cap()
+    return _PLAN_CACHE_CAP
+
+
+def _evict_to_cap() -> None:
+    while len(_PLAN_CACHE) > _PLAN_CACHE_CAP:
+        _PLAN_CACHE.popitem(last=False)
+        _PLAN_CACHE_EVICTIONS["count"] += 1
 
 
 def plan_cache_stats() -> dict:
-    """Hit/miss counters of the shared plan cache.
+    """Hit/miss/eviction counters of the shared plan cache.
 
     Returns:
-      ``{"hits": int, "misses": int, "by_kind": {"mttkrp": {...},
-      "ttmc": {...}, "tt": {...}}}`` — totals at the top level plus
-      per-kernel-kind counters.  A hit means a dispatcher call skipped the
-      whole remap/layout build (bench_e2e reports first-vs-cached call
-      times).
+      ``{"hits": int, "misses": int, "evictions": int, "size": int,
+      "maxsize": int, "by_kind": {"mttkrp": {...}, "ttmc": {...},
+      "tt": {...}}}`` — totals at the top level plus per-kernel-kind
+      hit/miss counters.  A hit means a dispatcher call skipped the whole
+      remap/layout build (bench_e2e reports first-vs-cached call times); an
+      eviction means the LRU bound (`plan_cache_config`) dropped a resident
+      layout.
 
     Invariants: the kinds are tracked separately precisely because the
     cache key carries a kind discriminator — no cross-kind collisions by
@@ -617,6 +682,9 @@ def plan_cache_stats() -> dict:
     return {
         "hits": sum(v["hits"] for v in by_kind.values()),
         "misses": sum(v["misses"] for v in by_kind.values()),
+        "evictions": _PLAN_CACHE_EVICTIONS["count"],
+        "size": len(_PLAN_CACHE),
+        "maxsize": _PLAN_CACHE_CAP,
         "by_kind": by_kind,
     }
 
@@ -626,6 +694,7 @@ def plan_cache_clear() -> None:
     for v in _PLAN_CACHE_STATS.values():
         v["hits"] = 0
         v["misses"] = 0
+    _PLAN_CACHE_EVICTIONS["count"] = 0
 
 
 def _planned_cached(
@@ -665,12 +734,17 @@ def _planned_cached(
     if op is not None:
         stats["hits"] += 1
         _PLAN_CACHE.move_to_end(key)
+        if plans_validated():
+            # REPRO_VALIDATE_PLANS: re-validate cached layouts on every hit —
+            # a corrupted resident plan must not outlive detection just
+            # because it skipped the build path.  Shard entries cache raw
+            # BlockPlans; kind entries cache kernel ops carrying `.plan`.
+            validate_plan(op if isinstance(op, BlockPlan) else op.plan)
         return op
     stats["misses"] += 1
     op = build()
     _PLAN_CACHE[key] = op
-    while len(_PLAN_CACHE) > _PLAN_CACHE_CAP:
-        _PLAN_CACHE.popitem(last=False)
+    _evict_to_cap()
     return op
 
 

@@ -32,7 +32,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from ..core.loop import finish_iter
+from ..core.loop import DecompositionDiverged, GuardState, finish_iter
 from ..core.remap import BlockPlan
 from .mttkrp_pallas import pad_factor, rank_padded
 
@@ -41,7 +41,58 @@ __all__ = [
     "ShardedWorkspace",
     "planned_layout_bytes",
     "sharded_layout_bytes",
+    "plan_stream",
 ]
+
+
+def plan_stream(plan: BlockPlan) -> tuple[np.ndarray, np.ndarray]:
+    """Reconstruct a COO stream equivalent to a plan's remapped layout, for
+    reference-sweep fallbacks whose drivers never kept the raw stream (Tucker's
+    sweep takes no stream arguments).  Padding slots carry value 0.0 and
+    in-bounds local coordinates, so they contribute nothing to any
+    scatter/inner-product the reference kernels run."""
+    blk = plan.blk
+    cols: dict[int, np.ndarray] = {
+        plan.mode: (
+            np.repeat(plan.block_it.astype(np.int64), blk) * plan.tile_i
+            + plan.iloc.astype(np.int64)
+        )
+    }
+    for n, im in enumerate(plan.in_modes):
+        cols[im] = (
+            np.repeat(plan.block_in[n].astype(np.int64), blk) * plan.in_tiles[n]
+            + plan.in_locs[n].astype(np.int64)
+        )
+    nmodes = 1 + plan.n_in
+    idx = np.stack([cols[m] for m in range(nmodes)], axis=1).astype(np.int32)
+    return idx, np.asarray(plan.vals)
+
+
+@jax.jit
+def _finite_flag(facs):
+    return jnp.stack([jnp.isfinite(f).all() for f in facs]).all()
+
+
+def _factors_finite(facs) -> bool:
+    """One host sync for the whole factor tuple (guards' cadence check).
+    The reduction is jitted: eager per-factor dispatch costs more than the
+    check itself on the drive loop's hot path."""
+    return bool(_finite_flag(tuple(facs)))
+
+
+def _jitter_factors(factors, attempt: int):
+    """Deterministic restart re-init: the original factors plus a small
+    relative jitter (1e-4 of each factor's scale), keyed by the attempt
+    number.  Staying near the original init keeps the restarted trajectory's
+    final fit within the clean run's convergence basin — a fresh random seed
+    would land on a different seed-dependent fit entirely."""
+    key = jax.random.PRNGKey(0x5EED + attempt)
+    out = []
+    for i, f in enumerate(factors):
+        k = jax.random.fold_in(key, i)
+        scale = 1e-4 * (jnp.std(f) + 1e-12)
+        out.append(f + scale * jax.random.normal(k, f.shape, f.dtype))
+    return out
 
 
 def _apply_row_mask(out: jax.Array, mask: jax.Array) -> jax.Array:
@@ -148,6 +199,7 @@ class PlannedWorkspace:
     """
 
     _sweep_fn = None  # instance attribute on first `sweep` call
+    _fallback_fn = None  # instance attribute on first fallback degradation
 
     @property
     def nmodes(self) -> int:
@@ -213,19 +265,161 @@ class PlannedWorkspace:
         iteration count (CP's `first` retrace) override this."""
         return self.sweep(facs, *args)
 
+    def _build_fallback_sweep(self):
+        """Compile the format's REFERENCE sweep as a drive-compatible callable
+        `(facs, *args, it=...) -> (facs, aux, fit)` operating on the same
+        padded factors — the graceful-degradation target of the "fallback"
+        guard policy (pallas -> reference mid-run without re-padding).  Return
+        None if the workspace has no reference path (sharded workspaces)."""
+        return None
+
+    def _fallback_sweep(self):
+        if self._fallback_fn is None:
+            self._fallback_fn = self._build_fallback_sweep()
+        return self._fallback_fn
+
+    def vmem_model_bytes(self) -> int:
+        """Peak VMEM working set the PMS model predicts for this workspace's
+        kernel family — part of the admission total (`repro.resilience.admit`).
+        Format classes supply the per-kind formula; the base contributes 0."""
+        return 0
+
     def drive(self, factors, args=(), *, iters: int, tol=None,
-              verbose: bool = False, label: str = "decompose"):
+              verbose: bool = False, label: str = "decompose",
+              guards=None, reinit=None,
+              checkpoint_every: int | None = None, checkpoint_path=None):
         """The shared host loop of every jitted planned path: pad once, one
         compiled sweep per iteration, host-side tol early-exit on the fit
         scalar (the only device->host sync), unpad at materialization.
-        Returns (true-shape factors, aux from the last sweep, fit history)."""
+        Returns (true-shape factors, aux from the last sweep, fit history).
+
+        Resilience surface (repro.resilience):
+          * guards — a `GuardConfig`; each iteration's fit scalar feeds the
+            divergence tracker for free, plus an optional factor-finiteness
+            check every `check_factors_every` iterations.  On detection the
+            policy either raises `DecompositionDiverged`, restarts from
+            jittered re-init (`reinit(attempt)` if given, else the original
+            factors + deterministic 1e-4 jitter; at most `max_restarts`
+            times), or degrades to the format's reference sweep reusing the
+            last good padded factors.
+          * checkpoint_every/checkpoint_path — persist (padded factors, fit
+            history) every k iterations via `train.checkpoint`; when the
+            directory already holds a checkpoint, `drive` resumes from it
+            bit-for-bit instead of starting over.
+        """
+        gs = GuardState(guards) if guards is not None else None
         fits: list[float] = []
         facs = self.pad_factors(factors)
         aux = None
-        for it in range(iters):
-            facs, aux, fit = self._sweep_call(facs, *args, it=it)
-            if finish_iter(fits, fit, it, tol, verbose, label):
+        sweep_call = self._sweep_call
+        fb_active = False
+
+        ckpt = None
+        start = 0
+        if checkpoint_path is not None:
+            from ..train.checkpoint import CheckpointManager
+
+            if checkpoint_every is None:
+                checkpoint_every = 1
+            elif checkpoint_every < 1:
+                raise ValueError("checkpoint_every must be >= 1")
+            ckpt = CheckpointManager(checkpoint_path, keep=2)
+            step = ckpt.latest_step()
+            if step is not None:
+                step, tree = ckpt.restore(step)
+                saved = tuple(tree["facs"])
+                want = tuple(f.shape for f in facs)
+                got = tuple(tuple(f.shape) for f in saved)
+                # Padded shapes alone cannot distinguish ranks below the
+                # lane width (both pad to the same lanes), so the true
+                # lane_ranks ride along in the checkpoint.
+                saved_lr = tuple(int(r) for r in np.asarray(
+                    tree.get("lane_ranks", self.lane_ranks)).ravel())
+                if got != want or saved_lr != tuple(self.lane_ranks):
+                    raise ValueError(
+                        f"checkpoint at {checkpoint_path!r} holds padded "
+                        f"factors of shapes {got} (lane ranks {saved_lr}) "
+                        f"but this workspace pads to {want} (lane ranks "
+                        f"{tuple(self.lane_ranks)}); it was written by a "
+                        f"different tensor/rank/workspace"
+                    )
+                facs = tuple(jnp.asarray(f) for f in saved)
+                fits = [float(f) for f in np.asarray(tree["fits"]).ravel()]
+                start = int(step) + 1
+                if verbose:
+                    print(f"[{label}] resumed from checkpoint step {step} "
+                          f"({len(fits)} fits recorded)")
+        elif checkpoint_every is not None:
+            raise ValueError("checkpoint_every requires checkpoint_path")
+
+        it = start
+        prev_facs = None  # one-step history: the fallback rebase target
+        while it < iters:
+            new_facs, aux, fit = sweep_call(facs, *args, it=it)
+            fit = float(fit)
+            reason = None
+            if gs is not None:
+                reason = gs.observe_fit(fit)
+                if (reason is None and gs.cfg.check_factors_every > 0
+                        and (it + 1) % gs.cfg.check_factors_every == 0
+                        and not _factors_finite(new_facs)):
+                    reason = "non-finite factor entries"
+            if reason is not None:
+                policy = gs.cfg.policy
+                if policy == "restart" and gs.restarts < gs.cfg.max_restarts:
+                    gs.restarts += 1
+                    if verbose:
+                        print(f"[{label}] iter {it:3d} {reason}; restart "
+                              f"{gs.restarts}/{gs.cfg.max_restarts} with "
+                              f"jittered re-init")
+                    base = (reinit(gs.restarts) if reinit is not None
+                            else _jitter_factors(factors, gs.restarts))
+                    facs = self.pad_factors(base)
+                    fits = []
+                    gs.reset()
+                    it = 0
+                    continue
+                if policy == "fallback" and not fb_active:
+                    fb = self._fallback_sweep()
+                    if fb is not None:
+                        fb_active = True
+                        sweep_call = fb
+                        gs.reset()
+                        # The current iterate may itself be corrupted (its
+                        # fit looked fine when it was accepted, e.g. a factor
+                        # poisoned after the fit was computed): rebase onto
+                        # the previous accepted iterate and redo the tainted
+                        # iteration in place, so the run loses no sweeps.
+                        if not _factors_finite(facs) and prev_facs is not None:
+                            facs = prev_facs
+                            if fits:
+                                fits.pop()
+                            it -= 1
+                        if verbose:
+                            print(f"[{label}] iter {it:3d} {reason}; "
+                                  f"degrading to the reference sweep on the "
+                                  f"last good factors")
+                        continue  # retry this iteration on the good iterate
+                    reason += " (no reference fallback sweep for this workspace)"
+                elif policy == "fallback":
+                    reason += " (already running the reference fallback)"
+                elif policy == "restart":
+                    reason += (f" (restart budget of {gs.cfg.max_restarts} "
+                               f"exhausted)")
+                raise DecompositionDiverged(label, it, reason, fits + [fit])
+            prev_facs, facs = facs, new_facs
+            stop = finish_iter(fits, fit, it, tol, verbose, label)
+            if ckpt is not None and (
+                stop or it + 1 == iters or (it + 1) % checkpoint_every == 0
+            ):
+                ckpt.save(
+                    it, {"facs": tuple(facs),
+                         "fits": np.asarray(fits, np.float64),
+                         "lane_ranks": np.asarray(self.lane_ranks, np.int64)}
+                )
+            if stop:
                 break
+            it += 1
         return self.unpad_factors(facs), aux, fits
 
 

@@ -1,0 +1,178 @@
+"""repro.resilience — the failure story of the planned decomposition engine.
+
+The ROADMAP's decomposition-as-a-service frontier admits (tensor, algo, rank)
+jobs against an HBM budget; this module collects everything that keeps such an
+engine available when a job misbehaves:
+
+  * **Numerical guards** (`GuardConfig`, policies "raise" / "restart" /
+    "fallback") consumed by `PlannedWorkspace.drive`: non-finite fit detection
+    is free (the fit scalar is already the one device->host sync per
+    iteration), sustained fit regression fires after `divergence_patience`
+    iterations, and factor finiteness is checked on an opt-in cadence.  On
+    detection the drive loop raises a diagnostic `DecompositionDiverged`,
+    restarts from jittered re-init (bounded by `max_restarts`), or degrades
+    the Pallas sweep to the format's reference sweep mid-run, reusing the
+    same padded factors.
+  * **Plan integrity validation** (`validate_plan` / `PlanValidationError`,
+    from `core.remap`): every BlockPlan invariant, opt-in on the hot paths
+    via `REPRO_VALIDATE_PLANS=1` — at build time and on plan-cache hits.
+  * **HBM admission control** (`admission_bytes` / `admit` /
+    `plan_with_budget` / `AdmissionError`): a workspace's resident footprint
+    is `plan_bytes()` (the per-mode remapped copies — the paper's Sec. 3
+    space/time trade) + the padded device-resident factors + the PMS VMEM
+    working set.  `plan_with_budget` is the graceful-degradation ladder
+    behind `decompose(..., hbm_budget=...)`: halve the DMA block size (less
+    group padding -> smaller layouts) down to a floor, then drop to the
+    reference path, and only then raise `AdmissionError`.
+  * **Checkpoint/resume** rides on `drive(checkpoint_every=, checkpoint_path=)`
+    (see `kernels.workspace`), persisting padded factors + fit history via
+    `train.checkpoint.CheckpointManager`.
+
+The fault-injection harness proving each guard fires lives in
+`repro.testing.faults`.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+from .core.loop import (  # noqa: F401  (re-exports: the guard surface)
+    DecompositionDiverged,
+    GuardConfig,
+    GuardState,
+)
+from .core.memctrl import MemoryControllerConfig
+from .core.remap import (  # noqa: F401  (re-exports: the validation surface)
+    PlanValidationError,
+    plans_validated,
+    validate_plan,
+)
+
+__all__ = [
+    "GuardConfig",
+    "GuardState",
+    "DecompositionDiverged",
+    "PlanValidationError",
+    "validate_plan",
+    "plans_validated",
+    "AdmissionError",
+    "admission_bytes",
+    "admit",
+    "reference_footprint_bytes",
+    "plan_with_budget",
+]
+
+#: The admission ladder never shrinks the DMA block size below this: Pallas
+#: blocks narrower than one VPU sublane group stop resembling the modeled
+#: hardware (and the group-padding savings have flattened out long before).
+FLOOR_BLK = 8
+
+
+class AdmissionError(RuntimeError):
+    """No rung of the degradation ladder fits the HBM budget — not even the
+    reference path's raw stream + true factors.  Carries the ladder of
+    attempted configurations for the tenant's error report."""
+
+    def __init__(self, budget_bytes: int, ladder: list[dict],
+                 reference_bytes: int):
+        self.budget_bytes = budget_bytes
+        self.ladder = list(ladder)
+        self.reference_bytes = reference_bytes
+        tried = ", ".join(
+            f"blk={a['blk']}: {a['total_bytes']:,}B" for a in ladder
+        ) or "none"
+        super().__init__(
+            f"no configuration fits hbm_budget={budget_bytes:,}B — planned "
+            f"rungs tried [{tried}]; reference path needs "
+            f"{reference_bytes:,}B"
+        )
+
+
+def admission_bytes(ws: Any) -> dict:
+    """Resident-footprint report of a planned workspace: the remapped layouts
+    (`plan_bytes()`), the padded device-resident factors, and the PMS VMEM
+    working-set model for the workspace's kernel family."""
+    plan = int(ws.plan_bytes())
+    fac = int(sum(
+        rows * rp * 4 for rows, rp in zip(ws.padded_rows, ws.rank_pads)
+    ))
+    vmem = int(ws.vmem_model_bytes())
+    return {
+        "plan_bytes": plan,
+        "factor_bytes": fac,
+        "vmem_bytes": vmem,
+        "total_bytes": plan + fac + vmem,
+    }
+
+
+def admit(ws: Any, budget_bytes: int) -> dict:
+    """Admission check for a single workspace: return the
+    `admission_bytes` report when it fits `budget_bytes`, raise
+    `AdmissionError` otherwise.  Use `plan_with_budget` when a rebuild at a
+    smaller configuration is an option."""
+    report = admission_bytes(ws)
+    if report["total_bytes"] > budget_bytes:
+        raise AdmissionError(
+            budget_bytes,
+            [{"blk": None, **report}],
+            report["total_bytes"],
+        )
+    return report
+
+
+def reference_footprint_bytes(st: Any, lane_ranks) -> int:
+    """HBM the reference (non-planned) path holds resident: the raw COO
+    stream (one int32 coordinate per mode + one f32 value per non-zero) plus
+    the true-shape f32 factors — the ladder's final rung."""
+    stream = st.nnz * (st.nmodes + 1) * 4
+    facs = sum(s * int(r) * 4 for s, r in zip(st.shape, lane_ranks))
+    return int(stream + facs)
+
+
+def plan_with_budget(
+    build: Callable[[MemoryControllerConfig], Any],
+    budget_bytes: int,
+    *,
+    cfg: MemoryControllerConfig | None = None,
+    floor_blk: int = FLOOR_BLK,
+    reference_bytes: int = 0,
+) -> tuple[Any, dict]:
+    """The graceful-degradation ladder of `decompose(..., hbm_budget=...)`.
+
+    Calls `build(cfg)` to construct a planned workspace and checks its
+    `admission_bytes` total against the budget; while over budget, halves
+    `cfg.dma.blk` (smaller blocks -> less per-group padding -> smaller
+    remapped layouts) down to `floor_blk` and rebuilds.  When no planned
+    rung fits, degrades to the reference path if `reference_bytes` fits,
+    else raises `AdmissionError`.
+
+    Returns `(workspace, decision)`: `workspace` is None when the caller
+    should take the reference path; `decision` records the admitted rung and
+    the full ladder of attempts.
+    """
+    cfg = cfg if cfg is not None else MemoryControllerConfig()
+    attempts: list[dict] = []
+    while True:
+        ws = build(cfg)
+        report = admission_bytes(ws)
+        attempts.append({"blk": cfg.dma.blk, **report})
+        if report["total_bytes"] <= budget_bytes:
+            return ws, {
+                "admitted": "pallas",
+                "blk": cfg.dma.blk,
+                "report": report,
+                "ladder": attempts,
+            }
+        if cfg.dma.blk // 2 >= floor_blk:
+            cfg = dataclasses.replace(
+                cfg, dma=dataclasses.replace(cfg.dma, blk=cfg.dma.blk // 2)
+            )
+            continue
+        break
+    if reference_bytes <= budget_bytes:
+        return None, {
+            "admitted": "reference",
+            "report": {"total_bytes": int(reference_bytes)},
+            "ladder": attempts,
+        }
+    raise AdmissionError(budget_bytes, attempts, int(reference_bytes))

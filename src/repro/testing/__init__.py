@@ -1,0 +1,6 @@
+"""Test-support utilities shipped with the package (not test-only code in
+`tests/`): the fault-injection harness `repro.testing.faults` proves every
+guard of the resilience layer fires and every policy recovers."""
+from . import faults  # noqa: F401
+
+__all__ = ["faults"]

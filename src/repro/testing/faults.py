@@ -1,0 +1,135 @@
+"""Fault-injection harness for the resilience layer (repro.resilience).
+
+Each injector plants exactly one of the failure modes the guards exist to
+catch, so the tests can assert detection AND recovery:
+
+  * `inject_nan_factor`   — a factor goes non-finite after iteration k
+                            (caught by the fit guard next iteration, or by
+                            the factor-cadence check);
+  * `corrupt_plan`        — a BlockPlan with an out-of-tile-bounds local
+                            index (caught by `validate_plan`);
+  * `shrunk_budget`       — an HBM budget just below a workspace's footprint
+                            (forces the admission ladder to step down);
+  * `deaden_shard`        — one shard's remapped values zero out mid-run in
+                            the sharded sweep (caught by the fit-regression
+                            guard: the model silently loses that shard's
+                            contribution);
+  * `kill_at`             — hard process death before iteration k (the
+                            checkpoint/resume story, run under a subprocess).
+
+The iteration-indexed injectors are ONE-SHOT: they fire once and disarm.
+That is load-bearing for the recovery tests — a restart replays iterations
+from 0, and a fault that re-fired every attempt would exhaust any
+`max_restarts` budget.
+
+All of them wrap `ws._sweep_call` as an instance attribute, which the drive
+loop binds at entry; the "fallback" policy rebinds to the reference sweep
+and thereby sheds the wrapper — exactly the semantics a mid-run hardware
+degradation would have.
+"""
+from __future__ import annotations
+
+import dataclasses
+import os
+from typing import Any
+
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = [
+    "inject_nan_factor",
+    "corrupt_plan",
+    "shrunk_budget",
+    "deaden_shard",
+    "kill_at",
+]
+
+
+def inject_nan_factor(ws: Any, *, at_iter: int, mode: int | None = None) -> Any:
+    """Arm `ws` so the sweep of iteration `at_iter` returns factors with
+    `facs[mode]` poisoned to NaN — the canonical numerical blow-up.  The fit
+    of iteration `at_iter` itself stays finite (the poison lands after the
+    sweep), so detection happens on the NEXT iteration's fit (free guard) or
+    on the factor-cadence check of iteration `at_iter`.  One-shot.
+
+    `mode` defaults to the LAST mode: ALS-style loops update mode 0 first
+    *from the other factors*, so a poisoned mode-0 factor would simply be
+    solved away before anything reads it; poison in any later mode flows
+    into the mode-0 update and cascades through the whole sweep."""
+    tgt = (len(ws.shape) - 1) if mode is None else mode
+    inner = ws._sweep_call
+    state = {"fired": False}
+
+    def wrapped(facs, *args, it: int):
+        facs, aux, fit = inner(facs, *args, it=it)
+        if it == at_iter and not state["fired"]:
+            state["fired"] = True
+            facs = list(facs)
+            facs[tgt] = facs[tgt] * jnp.nan
+            facs = tuple(facs)
+        return facs, aux, fit
+
+    ws._sweep_call = wrapped
+    return ws
+
+
+def corrupt_plan(plan: Any) -> Any:
+    """A copy of `plan` whose first local output index is out of tile bounds
+    (`iloc[0] == tile_i`) — the corruption `validate_plan` must catch.  The
+    original plan is untouched."""
+    iloc = np.array(plan.iloc, copy=True)
+    if iloc.size == 0:
+        raise ValueError("cannot corrupt an empty plan")
+    iloc[0] = plan.tile_i  # one past the last valid in-tile row
+    return dataclasses.replace(plan, iloc=iloc)
+
+
+def shrunk_budget(ws: Any, fraction: float = 0.5) -> int:
+    """An HBM budget strictly below `ws`'s resident footprint (`fraction` of
+    it, at least one byte short) — guarantees the admission check rejects
+    the workspace as built."""
+    from ..resilience import admission_bytes
+
+    total = admission_bytes(ws)["total_bytes"]
+    return min(int(total * fraction), total - 1)
+
+
+def deaden_shard(ws: Any, *, shard: int, at_iter: int) -> Any:
+    """Arm a SHARDED workspace so shard `shard`'s remapped values zero out
+    after iteration `at_iter` — a silently dead device: every later sweep
+    loses that shard's contribution to the psum'd factor rows while the fit
+    is still measured against the full tensor, so the fit degrades and the
+    regression guard fires.  One-shot (the stacks stay dead afterwards —
+    restarting cannot resurrect a dead shard, so pair this with
+    policy='raise')."""
+    if not hasattr(ws, "stacks"):
+        raise ValueError("deaden_shard needs a ShardedWorkspace (no .stacks)")
+    inner = ws._sweep_call
+    state = {"fired": False}
+
+    def wrapped(facs, *args, it: int):
+        out = inner(facs, *args, it=it)
+        if it == at_iter and not state["fired"]:
+            state["fired"] = True
+            for stack in ws.stacks.values():
+                stack.vals = stack.vals.at[shard].set(0.0)
+        return out
+
+    ws._sweep_call = wrapped
+    return ws
+
+
+def kill_at(ws: Any, *, at_iter: int, exit_code: int = 17) -> Any:
+    """Arm `ws` so the process dies hard (os._exit — no atexit, no cleanup)
+    BEFORE the sweep of iteration `at_iter` runs: checkpoints written through
+    iteration `at_iter - 1` survive, nothing later exists.  For subprocess
+    checkpoint/resume tests only."""
+    inner = ws._sweep_call
+
+    def wrapped(facs, *args, it: int):
+        if it == at_iter:
+            os._exit(exit_code)
+        return inner(facs, *args, it=it)
+
+    ws._sweep_call = wrapped
+    return ws

@@ -56,6 +56,7 @@ import numpy as np
 
 from ..core.coo import SparseTensor
 from ..core.loop import (
+    check_drive_extras,
     check_planned_method,
     check_workspace,
     finish_iter,
@@ -381,6 +382,55 @@ class PlannedTT(PlannedWorkspace):
         Returns (new padded matrices, None, fit scalar on device)."""
         return super().sweep(facs, idx, val, norm_x_sq)
 
+    def vmem_model_bytes(self) -> int:
+        from ..core.pms import _tt_iface_cols
+        from ..kernels.mttkrp_pallas import rank_padded
+
+        return max(
+            op.cfg.vmem_bytes_tt(
+                rank_padded(op.out_pair[0] * op.out_pair[1]),
+                tuple(rank_padded(a * b) for a, b in op.in_rank_pairs),
+                _tt_iface_cols(op.in_rank_pairs, op.n_left),
+            )
+            for op in self.ops.values()
+        )
+
+    def _build_fallback_sweep(self) -> Callable:
+        """Reference degradation target of the "fallback" guard policy: the
+        same left-to-right sweep as `_build_sweep` with the per-mode Pallas
+        TT-core kernels replaced by the pure-jnp `ttcore_ref` oracle on the
+        raw stream (drive's args already carry it for the fit).  Operates on
+        the SAME padded interface matrices."""
+        shape, nmodes = self.shape, self.nmodes
+        pairs, lr = self.bond_pairs, self.lane_ranks
+        rps, prows = self.rank_pads, self.padded_rows
+
+        def sweep(facs, idx, val, norm_x_sq):
+            facs = list(facs)
+            cores = [
+                matrix_to_core(facs[m][: shape[m], : lr[m]], *pairs[m])
+                for m in range(nmodes)
+            ]
+            qs = _q_suffix(cores)
+            p = jnp.ones((1, 1), jnp.float32)
+            for m in range(nmodes):
+                b = ttcore_ref(idx, val, cores, m, shape[m])
+                w = _solve_core(jnp.kron(p, qs[m]), b)
+                cores[m] = matrix_to_core(w, *pairs[m])
+                facs[m] = (
+                    jnp.zeros((prows[m], rps[m]), w.dtype)
+                    .at[: shape[m], : lr[m]]
+                    .set(w)
+                )
+                p = _p_next(p, cores[m])
+            inner = tt_inner(idx, val, cores)
+            resid_sq = jnp.maximum(norm_x_sq + p[0, 0] - 2.0 * inner, 0.0)
+            fit = 1.0 - jnp.sqrt(resid_sq) / jnp.sqrt(norm_x_sq)
+            return tuple(facs), None, fit
+
+        jitted = jax.jit(sweep)
+        return lambda facs, *args, it: jitted(facs, *args)
+
 
 def make_planned_tt(
     st: SparseTensor,
@@ -425,6 +475,9 @@ def tt_als(
     devices: int | None = None,
     dist=None,
     verbose: bool = False,
+    guards=None,
+    checkpoint_every: int | None = None,
+    checkpoint_path=None,
 ) -> TTState:
     """Run sparse tensor-train ALS.
 
@@ -450,6 +503,9 @@ def tt_als(
             ('pallas_sharded' is sweep-only and rejects jit_sweep=False).
     devices / dist: 'pallas_sharded' placement — a device count for the
             default 1-D `shard` mesh, or an explicit ShardingPlan.
+    guards / checkpoint_every / checkpoint_path: the resilience surface of
+            the planned drive loop (repro.resilience).  Planned jitted
+            paths only.
     """
     tr = _validated_tt_ranks(st, tt_ranks)
     nmodes = st.nmodes
@@ -468,6 +524,8 @@ def tt_als(
     fits: list[float] = []
 
     check_planned_method(method, planned, devices, dist)
+    check_drive_extras(method, jit_sweep, guards, checkpoint_every,
+                       checkpoint_path)
     if method == "pallas_sharded":
         require_sharded_sweep(jit_sweep)
         from ..kernels.ops import ShardedPlannedTT, make_sharded_planned_tt
@@ -485,7 +543,8 @@ def tt_als(
         mats = [core_to_matrix(c) for c in cores]
         mats, _, fits = planned.drive(
             mats, (norm_x_sq,), iters=iters, tol=tol, verbose=verbose,
-            label="tt_als",
+            label="tt_als", guards=guards,
+            checkpoint_every=checkpoint_every, checkpoint_path=checkpoint_path,
         )
         return TTState(
             cores=[matrix_to_core(w, *pairs[m]) for m, w in enumerate(mats)],
@@ -508,7 +567,9 @@ def tt_als(
             mats = [core_to_matrix(c) for c in cores]
             mats, _, fits = planned.drive(
                 mats, (idx, val, norm_x_sq), iters=iters, tol=tol,
-                verbose=verbose, label="tt_als",
+                verbose=verbose, label="tt_als", guards=guards,
+                checkpoint_every=checkpoint_every,
+                checkpoint_path=checkpoint_path,
             )
             return TTState(
                 cores=[matrix_to_core(w, *pairs[m]) for m, w in enumerate(mats)],

@@ -44,6 +44,7 @@ import numpy as np
 
 from ..core.coo import SparseTensor
 from ..core.loop import (
+    check_drive_extras,
     check_planned_method,
     check_workspace,
     finish_iter,
@@ -51,8 +52,9 @@ from ..core.loop import (
 )
 from ..core.memctrl import MemoryControllerConfig, TPUSpec
 from ..kernels.ops import PlannedTTMC, make_planned_ttmc, planned_layout_bytes
+from ..kernels.mttkrp_pallas import rank_padded
 from ..kernels.ref import ttmc_ref
-from ..kernels.workspace import PlannedWorkspace
+from ..kernels.workspace import PlannedWorkspace, plan_stream
 
 __all__ = [
     "TuckerState",
@@ -228,6 +230,46 @@ class PlannedTucker(PlannedWorkspace):
         (new padded factors, core, fit scalar on device)."""
         return super().sweep(facs, norm_x_sq)
 
+    def vmem_model_bytes(self) -> int:
+        return max(
+            op.cfg.vmem_bytes_ttmc(
+                rank_padded(math.prod(op.in_ranks)),
+                tuple(rank_padded(r) for r in op.in_ranks),
+            )
+            for op in self.ops.values()
+        )
+
+    def _build_fallback_sweep(self) -> Callable:
+        """Reference degradation target of the "fallback" guard policy: the
+        jitted `_sweep_reference` body on the SAME padded factors.  The HOOI
+        sweep takes no stream arguments (the remapped copies live in the
+        plans), so the COO stream is reconstructed from a host-side plan —
+        padding slots carry value 0 and contribute nothing."""
+        idx, val = plan_stream(self.ops[0].plan)
+        idx, val = jnp.asarray(idx), jnp.asarray(val)
+        shape, core_ranks, nmodes = self.shape, self.core_ranks, self.nmodes
+        rps, prows = self.rank_pads, self.padded_rows
+
+        def sweep(facs, norm_x_sq):
+            facs = list(facs)
+            y = None
+            for m in range(nmodes):
+                true = [f[:s, :r] for f, s, r in zip(facs, shape, core_ranks)]
+                y = ttmc_ref(idx, val, true, m, shape[m])
+                u = _factor_from_unfolding(y, core_ranks[m])
+                facs[m] = (
+                    jnp.zeros((prows[m], rps[m]), u.dtype)
+                    .at[: shape[m], : core_ranks[m]]
+                    .set(u)
+                )
+            last = nmodes - 1
+            u_last = facs[last][: shape[last], : core_ranks[last]]
+            core = _core_from_unfolding(y, u_last, last, core_ranks)
+            return tuple(facs), core, core_fit_value(core, norm_x_sq)
+
+        jitted = jax.jit(sweep)
+        return lambda facs, *args, it: jitted(facs, *args)
+
 
 def make_planned_tucker(
     st: SparseTensor,
@@ -269,6 +311,9 @@ def tucker_hooi(
     devices: int | None = None,
     dist=None,
     verbose: bool = False,
+    guards=None,
+    checkpoint_every: int | None = None,
+    checkpoint_path=None,
 ) -> TuckerState:
     """Run sparse Tucker HOOI.
 
@@ -290,6 +335,9 @@ def tucker_hooi(
             ('pallas_sharded' is sweep-only and rejects jit_sweep=False).
     devices / dist: 'pallas_sharded' placement — a device count for the
             default 1-D `shard` mesh, or an explicit ShardingPlan.
+    guards / checkpoint_every / checkpoint_path: the resilience surface of
+            the planned drive loop (repro.resilience).  Planned jitted
+            paths only.
     """
     cr = _validated_core_ranks(st, core_ranks)
     nmodes = st.nmodes
@@ -299,6 +347,8 @@ def tucker_hooi(
     fits: list[float] = []
 
     check_planned_method(method, planned, devices, dist)
+    check_drive_extras(method, jit_sweep, guards, checkpoint_every,
+                       checkpoint_path)
     if method == "pallas_sharded":
         require_sharded_sweep(jit_sweep)
         from ..kernels.ops import ShardedPlannedTucker, make_sharded_planned_tucker
@@ -315,7 +365,8 @@ def tucker_hooi(
             )
         factors, core, fits = planned.drive(
             factors, (norm_x_sq,), iters=iters, tol=tol, verbose=verbose,
-            label="tucker_hooi",
+            label="tucker_hooi", guards=guards,
+            checkpoint_every=checkpoint_every, checkpoint_path=checkpoint_path,
         )
         return TuckerState(factors=factors, core=core, fit_history=fits)
     if method == "pallas":
@@ -333,7 +384,9 @@ def tucker_hooi(
             # jitted sweep per iteration; sliced back only for the state.
             factors, core, fits = planned.drive(
                 factors, (norm_x_sq,), iters=iters, tol=tol, verbose=verbose,
-                label="tucker_hooi",
+                label="tucker_hooi", guards=guards,
+                checkpoint_every=checkpoint_every,
+                checkpoint_path=checkpoint_path,
             )
             return TuckerState(factors=factors, core=core, fit_history=fits)
     elif method != "reference":

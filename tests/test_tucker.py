@@ -276,6 +276,9 @@ def test_plan_cache_no_cross_kind_collisions(tiny_tensor):
     assert s == {
         "hits": 0,
         "misses": 2,
+        "evictions": 0,
+        "size": 2,
+        "maxsize": s["maxsize"],  # env-configurable (REPRO_PLAN_CACHE_MAX)
         "by_kind": {
             "mttkrp": {"hits": 0, "misses": 1},
             "ttmc": {"hits": 0, "misses": 1},
@@ -310,6 +313,9 @@ def test_plan_cache_tt_kind_isolated(tiny_tensor):
     assert s == {
         "hits": 0,
         "misses": 3,
+        "evictions": 0,
+        "size": 3,
+        "maxsize": s["maxsize"],  # env-configurable (REPRO_PLAN_CACHE_MAX)
         "by_kind": {
             "mttkrp": {"hits": 0, "misses": 1},
             "ttmc": {"hits": 0, "misses": 1},
