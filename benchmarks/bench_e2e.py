@@ -38,6 +38,18 @@ Sections
                  shard_map ALS sweep, and the partition balance.  Runs in a
                  subprocess because XLA_FLAGS=--xla_force_host_platform_
                  device_count must be set before jax initializes.
+  pms_accuracy_* predicted-vs-achieved PMS accounting (repro.obs.calibrate):
+                 each format's exact per-plan roofline prediction
+                 (`pms_estimates` summed over modes) joined against the
+                 measured steady-state sweep, reported as predicted_s /
+                 measured_s / achieved_pct per (format, preset).  On CPU
+                 interpret-mode Pallas achieved_pct is far below 100 (the
+                 model describes TPU hardware); its trajectory across PRs is
+                 the regression signal.  The medium preset pins a
+                 big-input-tile config (PMS_MEDIUM_CFG) — the default
+                 256-cube tiles put ~470k grid steps per sweep through the
+                 interpreter, which is hours, while 4096-row input tiles
+                 collapse that to a few thousand blocks.
 
   PYTHONPATH=src python benchmarks/bench_e2e.py [--fast] [--out PATH]
 
@@ -64,11 +76,20 @@ import numpy as np
 from repro.bench import result_record, write_report
 from repro.core.coo import frostt_like, random_factors
 from repro.core.cp_als import _sweep_streams
+from repro.core.memctrl import CacheEngineConfig, MemoryControllerConfig
 from repro.core.remap import plan_blocks, plan_blocks_reference
 from repro.kernels import ops
 
 ROOT = Path(__file__).resolve().parent.parent
 BASELINE_PATH = ROOT / "BENCH_kernel.json"
+
+# The medium-preset calibration config: interpret-mode wall clock tracks the
+# grid-step count, and medium at the default 256-cube tiles is ~470k steps
+# per sweep (hours on the CPU interpreter).  4096-row input tiles keep the
+# same stream and collapse the block count to a few thousand.
+PMS_MEDIUM_CFG = MemoryControllerConfig(
+    cache=CacheEngineConfig(tile_i=256, tile_j=4096, tile_k=4096)
+)
 
 
 def _resolve_out(out: str | None, fast: bool) -> Path:
@@ -358,6 +379,82 @@ print("RESULT " + json.dumps({{
 """
 
 
+def _steady_sweep_s(step, reps: int) -> float:
+    """Steady-state seconds per sweep: two throwaway calls (compile + warm),
+    then the mean of `reps` timed calls."""
+    jax.block_until_ready(step())
+    jax.block_until_ready(step())
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        fit = step()
+    jax.block_until_ready(fit)
+    return (time.perf_counter() - t0) / reps
+
+
+def bench_pms_accuracy(results, presets, rank: int, core_rank: int,
+                       bond_rank: int, reps: int):
+    """Predicted-vs-achieved PMS accounting (repro.obs.calibrate): every
+    format's exact per-plan prediction joined against its measured
+    steady-state sweep on the same built workspace."""
+    print("== pms accuracy: exact roofline prediction vs measured sweep")
+    from repro.obs.calibrate import accuracy_records, calibration_row
+    from repro.tt import core_to_matrix, init_tt_cores, make_planned_tt
+    from repro.tucker import init_tucker_factors, make_planned_tucker
+
+    key = jax.random.PRNGKey(0)
+    rows = []
+    for preset in presets:
+        st = frostt_like(preset)
+        nxs = _norm_x_sq(st)
+        idx, val = jnp.asarray(st.indices), jnp.asarray(st.values)
+        cfg = PMS_MEDIUM_CFG if preset == "medium" else None
+        local_reps = 1 if preset == "medium" else reps
+
+        ws = ops.make_planned_cp_als(st, rank, cfg=cfg, interpret=True)
+        state = {"f": ws.pad_factors(random_factors(key, st.shape, rank))}
+
+        def step_cp():
+            state["f"], _, fit = ws.sweep(state["f"], idx, val, nxs, first=False)
+            return fit
+
+        rows.append(calibration_row(
+            ws, _steady_sweep_s(step_cp, local_reps),
+            format="cp", preset=preset,
+        ))
+
+        ranks = (core_rank,) * st.nmodes
+        ws = make_planned_tucker(st, ranks, cfg=cfg, interpret=True)
+        state = {"f": ws.pad_factors(init_tucker_factors(key, st.shape, ranks))}
+
+        def step_tk():
+            state["f"], _, fit = ws.sweep(state["f"], nxs)
+            return fit
+
+        rows.append(calibration_row(
+            ws, _steady_sweep_s(step_tk, local_reps),
+            format="tucker", preset=preset,
+        ))
+
+        tt_ranks = (bond_rank,) * (st.nmodes - 1)
+        ws = make_planned_tt(st, tt_ranks, cfg=cfg, interpret=True)
+        cores = init_tt_cores(key, st.shape, tt_ranks)
+        state = {"f": ws.pad_factors([core_to_matrix(c) for c in cores])}
+
+        def step_tt():
+            state["f"], _, fit = ws.sweep(state["f"], idx, val, nxs)
+            return fit
+
+        rows.append(calibration_row(
+            ws, _steady_sweep_s(step_tt, local_reps),
+            format="tt", preset=preset,
+        ))
+
+    results += accuracy_records(rows)
+    for r in rows:
+        print(f"  {r.preset:10s} {r.format:7s} predicted={r.predicted_s:.3e}s "
+              f"measured={r.measured_s:8.3f}s achieved={r.achieved_pct:.4f}%")
+
+
 def bench_sharded(results, presets, rank: int, devices: int, reps: int):
     """Distributed planned CP-ALS on a forced multi-device host platform:
     subprocess-spawned (the device count locks at first jax init), reporting
@@ -410,6 +507,9 @@ def main(fast: bool = False, out: str | None = None) -> dict:
                          iters=3 if fast else 6)
     bench_tucker(results, tucker_presets, core_rank=4, reps=reps)
     bench_tt(results, tucker_presets, bond_rank=4, reps=reps)
+    pms_presets = ("tiny",) if fast else ("small", "medium")
+    bench_pms_accuracy(results, pms_presets, rank=rank, core_rank=4,
+                       bond_rank=4, reps=reps)
     bench_sharded(results, sharded_presets, rank=rank, devices=2, reps=reps)
 
     report = write_report(path, results)

@@ -24,6 +24,12 @@ runs from this one entry point, through the unified `decompose()` facade
 
   PYTHONPATH=src python examples/quickstart.py [--algo {cp,tucker,tt}]
                                                [--fast] [--devices N]
+                                               [--trace PATH]
+
+  --trace PATH exports an observability trace of the headline decompose()
+  call as JSONL (repro.obs; summarize with scripts/trace_report.py, convert
+  with --chrome for chrome://tracing).  REPRO_TRACE=1 (or =PATH) instead
+  enables process-global tracing for everything this script runs.
 """
 import argparse
 import os
@@ -37,7 +43,7 @@ def _print_pms(best):
               f"-> t={e.t_total*1e6:.1f}us [{e.bottleneck}-bound] vmem={e.vmem_bytes/2**20:.0f}MiB")
 
 
-def run_cp(st, fast: bool, devices: int):
+def run_cp(st, fast: bool, devices: int, trace=None):
     from repro.api import decompose
     from repro.core.coo import frostt_like
     from repro.core.hypergraph import approach1_traffic, approach2_traffic, remap_overhead
@@ -63,7 +69,8 @@ def run_cp(st, fast: bool, devices: int):
 
     iters = 2 if fast else 5
     t0 = time.time()
-    state = decompose(small, 8, format="cp", iters=iters, planned=planned, verbose=True)
+    state = decompose(small, 8, format="cp", iters=iters, planned=planned,
+                      verbose=True, trace=trace)
     print(f"CP-ALS fit={state.fit_history[-1]:.4f} in {time.time()-t0:.1f}s "
           f"(PlannedCPALS, interpret mode)")
 
@@ -85,7 +92,7 @@ def run_cp(st, fast: bool, devices: int):
         print(f"4-mode CP-ALS fit={s4.fit_history[-1]:.4f} (N-mode kernel)")
 
 
-def run_tucker(st, fast: bool, devices: int):
+def run_tucker(st, fast: bool, devices: int, trace=None):
     from repro.api import decompose
     from repro.core.coo import frostt_like
     from repro.core.pms import search
@@ -107,7 +114,7 @@ def run_tucker(st, fast: bool, devices: int):
     iters = 2 if fast else 5
     t0 = time.time()
     state = decompose(small, ranks_small, format="tucker", iters=iters,
-                      planned=planned, verbose=True)
+                      planned=planned, verbose=True, trace=trace)
     print(f"Tucker HOOI fit={state.fit_history[-1]:.4f} core={state.core.shape} "
           f"in {time.time()-t0:.1f}s (PlannedTucker, interpret mode)")
 
@@ -126,7 +133,7 @@ def run_tucker(st, fast: bool, devices: int):
         print(f"4-mode Tucker fit={s4.fit_history[-1]:.4f} (N-mode TTMc kernel)")
 
 
-def run_tt(st, fast: bool, devices: int):
+def run_tt(st, fast: bool, devices: int, trace=None):
     from repro.api import decompose
     from repro.core.coo import frostt_like
     from repro.core.pms import search
@@ -149,7 +156,7 @@ def run_tt(st, fast: bool, devices: int):
     iters = 2 if fast else 5
     t0 = time.time()
     state = decompose(small, ranks_small, format="tt", iters=iters,
-                      planned=planned, verbose=True)
+                      planned=planned, verbose=True, trace=trace)
     print(f"TT-ALS fit={state.fit_history[-1]:.4f} tt_ranks={state.tt_ranks} "
           f"in {time.time()-t0:.1f}s (PlannedTT, interpret mode)")
 
@@ -168,7 +175,8 @@ def run_tt(st, fast: bool, devices: int):
         print(f"4-mode TT-ALS fit={s4.fit_history[-1]:.4f} (N-mode TT kernel)")
 
 
-def main(fast: bool = False, algo: str = "cp", devices: int = 1):
+def main(fast: bool = False, algo: str = "cp", devices: int = 1,
+         trace: str | None = None):
     import jax
 
     from repro.core.coo import frostt_like
@@ -184,11 +192,13 @@ def main(fast: bool = False, algo: str = "cp", devices: int = 1):
     print(f"tensor: shape={st.shape} nnz={st.nnz:,} density={st.density:.2e} "
           f"algo={algo} devices={devices}")
     if algo == "cp":
-        run_cp(st, fast, devices)
+        run_cp(st, fast, devices, trace)
     elif algo == "tucker":
-        run_tucker(st, fast, devices)
+        run_tucker(st, fast, devices, trace)
     elif algo == "tt":
-        run_tt(st, fast, devices)
+        run_tt(st, fast, devices, trace)
+    if trace:
+        print(f"trace -> {trace} (summarize: python scripts/trace_report.py {trace})")
     else:
         raise ValueError(f"unknown algo {algo!r}: expected 'cp', 'tucker' or 'tt'")
 
@@ -201,6 +211,9 @@ if __name__ == "__main__":
     ap.add_argument("--devices", type=int, default=1,
                     help="run the sharded planned path over N devices "
                          "(forces an N-device CPU host platform if needed)")
+    ap.add_argument("--trace", default=None, metavar="PATH",
+                    help="export the headline decompose() call's obs trace "
+                         "as JSONL to PATH (see scripts/trace_report.py)")
     a = ap.parse_args()
     if a.devices > 1:
         # Must precede the first jax import: the host device count locks at
@@ -222,4 +235,4 @@ if __name__ == "__main__":
                 f"xla_force_host_platform_device_count or raise it to "
                 f">= {a.devices}"
             )
-    main(fast=a.fast, algo=a.algo, devices=a.devices)
+    main(fast=a.fast, algo=a.algo, devices=a.devices, trace=a.trace)

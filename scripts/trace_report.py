@@ -1,0 +1,121 @@
+"""Trace-report CLI: summarize a repro.obs trace JSONL on the terminal.
+
+  PYTHONPATH=src python scripts/trace_report.py TRACE.jsonl [options]
+
+Default output is a per-span-name summary table (count, total/mean/max
+duration) plus the instant-event counts — the sixty-second answer to "where
+did this decompose() spend its time".  Options:
+
+  --pms           achieved-vs-predicted table from the trace's "sweep" spans
+                  (repro.obs.calibrate.join_trace; spans carry `predicted_s`
+                  when the workspace has a PMS hook)
+  --chrome PATH   convert the JSONL to Chrome trace-event JSON (open in
+                  chrome://tracing or https://ui.perfetto.dev)
+  --by-mode       break span rows out by their `mode` arg (plan_build /
+                  plan_cache_build spans carry one)
+
+The loader validates every line (repro.obs.trace.load_jsonl); a malformed
+file exits non-zero, so CI can gate on "the emitted trace parses".
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from collections import defaultdict
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parent.parent / "src"))
+
+from repro.obs.calibrate import format_table, join_trace  # noqa: E402
+from repro.obs.trace import load_jsonl  # noqa: E402
+
+
+def _span_key(rec: dict, by_mode: bool) -> str:
+    name = rec["name"]
+    if by_mode and "mode" in rec.get("args", {}):
+        return f"{name}[mode={rec['args']['mode']}]"
+    return name
+
+
+def summarize(records: list[dict], by_mode: bool = False) -> str:
+    spans: dict[str, list[float]] = defaultdict(list)
+    events: dict[str, int] = defaultdict(int)
+    for r in records:
+        if r.get("ph") == "X":
+            spans[_span_key(r, by_mode)].append(float(r.get("dur", 0.0)))
+        elif r.get("ph") == "i":
+            events[r["name"]] += 1
+    lines = []
+    if spans:
+        header = (f"{'span':<28} {'count':>6} {'total_s':>10} "
+                  f"{'mean_s':>10} {'max_s':>10}")
+        lines += [header, "-" * len(header)]
+        for name, durs in sorted(
+            spans.items(), key=lambda kv: -sum(kv[1])
+        ):
+            tot = sum(durs) / 1e6
+            lines.append(
+                f"{name:<28} {len(durs):>6d} {tot:>10.4f} "
+                f"{tot / len(durs):>10.4f} {max(durs) / 1e6:>10.4f}"
+            )
+    if events:
+        lines.append("")
+        header = f"{'event':<28} {'count':>6}"
+        lines += [header, "-" * len(header)]
+        for name, n in sorted(events.items(), key=lambda kv: -kv[1]):
+            lines.append(f"{name:<28} {n:>6d}")
+    return "\n".join(lines) if lines else "(empty trace)"
+
+
+def to_chrome(records: list[dict], path: str | Path) -> None:
+    """Chrome trace-event JSON: the JSONL records already use the trace-event
+    field names (ph/name/ts/dur/pid/tid/args), so conversion is wrapping them
+    in the envelope (and dropping the JSONL-only id/parent link fields)."""
+    events = []
+    for r in records:
+        ev = {k: v for k, v in r.items() if k not in ("id", "parent")}
+        events.append(ev)
+    with open(path, "w") as f:
+        json.dump({"traceEvents": events, "displayTimeUnit": "ms"}, f)
+        f.write("\n")
+
+
+def main(argv: list[str] | None = None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("trace", help="trace JSONL (REPRO_TRACE=path / "
+                                  "decompose(trace=path) output)")
+    ap.add_argument("--pms", action="store_true",
+                    help="achieved-vs-predicted PMS table from sweep spans")
+    ap.add_argument("--chrome", metavar="PATH", default=None,
+                    help="write Chrome trace-event JSON to PATH")
+    ap.add_argument("--by-mode", action="store_true",
+                    help="break spans out by their `mode` arg")
+    a = ap.parse_args(argv)
+
+    try:
+        records = load_jsonl(a.trace)
+    except (OSError, ValueError) as e:
+        print(f"trace_report: invalid trace {a.trace}: {e}", file=sys.stderr)
+        return 1
+    if not records:
+        print(f"trace_report: {a.trace} holds no records", file=sys.stderr)
+        return 1
+
+    print(f"# {a.trace}: {len(records)} records")
+    print(summarize(records, by_mode=a.by_mode))
+    if a.pms:
+        rows = join_trace(records)
+        print()
+        if rows:
+            print(format_table(rows))
+        else:
+            print("(no sweep spans to join)")
+    if a.chrome:
+        to_chrome(records, a.chrome)
+        print(f"\nchrome trace -> {a.chrome}")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

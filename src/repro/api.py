@@ -26,6 +26,7 @@ from __future__ import annotations
 from typing import Sequence
 
 from .core.coo import SparseTensor
+from .obs import trace as _trace
 
 __all__ = ["decompose"]
 
@@ -136,6 +137,7 @@ def decompose(
     hbm_budget: int | None = None,
     checkpoint_every: int | None = None,
     checkpoint_path=None,
+    trace=None,
     **format_kwargs,
 ):
     """Decompose a sparse tensor on the programmable memory controller.
@@ -177,6 +179,12 @@ def decompose(
       checkpoint_every / checkpoint_path: persist padded factors + fit
         history every k iterations via `train.checkpoint`; a populated
         checkpoint directory resumes the sweep bit-for-bit.
+      trace: observability tracing for this call (docs/observability.md):
+        True collects spans into a fresh in-memory `repro.obs.Tracer`; a
+        path collects AND exports them as JSONL on exit; an existing
+        `Tracer` appends to it; None/False leaves the process-global state
+        alone (so `REPRO_TRACE=1` still applies).  Restores the previous
+        tracer when the call returns.
       **format_kwargs: forwarded to the format driver (e.g. TT's
         `init='svd'|'random'|'auto'`, CP's `layout=` / `mttkrp_fn=`).
 
@@ -190,28 +198,32 @@ def decompose(
             f"unknown format {format!r}: expected 'cp', 'tucker' or 'tt'"
         )
     r = _normalized_rank(format, rank, st.nmodes)
-    if hbm_budget is not None:
-        planned, method = _admitted(
-            st, r, format=format, method=method, planned=planned,
-            hbm_budget=hbm_budget, interpret=interpret, auto_tune=auto_tune,
-            cfg=cfg, verbose=verbose,
+    with _trace.tracing(trace), _trace.span(
+        "decompose", format=format, method=method,
+        shape=list(st.shape), nnz=st.nnz, iters=iters,
+    ):
+        if hbm_budget is not None:
+            planned, method = _admitted(
+                st, r, format=format, method=method, planned=planned,
+                hbm_budget=hbm_budget, interpret=interpret,
+                auto_tune=auto_tune, cfg=cfg, verbose=verbose,
+            )
+        common = dict(
+            iters=iters, method=method, seed=seed, tol=tol, planned=planned,
+            interpret=interpret, auto_tune=auto_tune, cfg=cfg,
+            jit_sweep=jit_sweep, devices=devices, dist=dist, verbose=verbose,
+            guards=guards, checkpoint_every=checkpoint_every,
+            checkpoint_path=checkpoint_path,
+            **format_kwargs,
         )
-    common = dict(
-        iters=iters, method=method, seed=seed, tol=tol, planned=planned,
-        interpret=interpret, auto_tune=auto_tune, cfg=cfg,
-        jit_sweep=jit_sweep, devices=devices, dist=dist, verbose=verbose,
-        guards=guards, checkpoint_every=checkpoint_every,
-        checkpoint_path=checkpoint_path,
-        **format_kwargs,
-    )
-    if format == "cp":
-        from .core.cp_als import cp_als
+        if format == "cp":
+            from .core.cp_als import cp_als
 
-        return cp_als(st, r, **common)
-    if format == "tucker":
-        from .tucker.hooi import tucker_hooi
+            return cp_als(st, r, **common)
+        if format == "tucker":
+            from .tucker.hooi import tucker_hooi
 
-        return tucker_hooi(st, r, **common)
-    from .tt.als import tt_als
+            return tucker_hooi(st, r, **common)
+        from .tt.als import tt_als
 
-    return tt_als(st, r, **common)
+        return tt_als(st, r, **common)

@@ -106,11 +106,34 @@ def validate_report(obj: Any) -> None:
         _validate_result(rec, where=f"results[{i}]")
 
 
-def validate_file(path: str | Path) -> dict:
-    """Load + validate a trajectory file; returns the parsed report."""
+def validate_file(path: str | Path, *, expect_commit: str | None = None) -> dict:
+    """Load + validate a trajectory file; returns the parsed report.
+
+    `expect_commit` additionally pins the report's `commit` field: pass a
+    full sha, or the sentinel "HEAD" to resolve the current checkout's HEAD
+    (the CI freshness check — a regenerated trajectory file whose commit
+    does not match the commit that produced it is a stale artifact, and
+    comparing its numbers against HEAD's code is meaningless)."""
+    path = Path(path)
     with open(path) as f:
         obj = json.load(f)
     validate_report(obj)
+    if expect_commit is not None:
+        if expect_commit == "HEAD":
+            want = git_commit(path.resolve().parent)
+            if want == "unknown":
+                raise ValueError(
+                    f"{path}: expect_commit='HEAD' but no git commit could "
+                    f"be resolved next to the file"
+                )
+        else:
+            want = expect_commit
+        if obj["commit"] != want:
+            raise ValueError(
+                f"{path}: stale trajectory file — report commit "
+                f"{obj['commit'][:12]} != expected {want[:12]}; regenerate "
+                f"with benchmarks/bench_e2e.py at the current checkout"
+            )
     n = len(obj["results"])
     print(f"[bench] {path}: schema OK ({n} results, commit {obj['commit'][:12]})")
     return obj

@@ -23,6 +23,9 @@ import dataclasses
 import math
 import warnings
 
+from ..obs import metrics as _metrics
+from ..obs import trace as _trace
+
 __all__ = [
     "finish_iter",
     "check_planned_method",
@@ -140,11 +143,16 @@ def finish_iter(fits, fit, it: int, tol, verbose: bool, label: str) -> bool:
 
     A non-finite fit terminates the loop immediately (returns True) and is
     surfaced as a RuntimeWarning even with guards off — it used to fail the
-    tol comparison silently and burn every remaining iteration."""
+    tol comparison silently and burn every remaining iteration.  The same
+    incident is recorded as a structured obs event + counter
+    (`resilience.nonfinite_fit`), so resilience actions are countable
+    across a run, not just printed."""
     fits.append(float(fit))
     if verbose:
         print(f"[{label}] iter {it:3d} fit={fits[-1]:.6f}")
     if not math.isfinite(fits[-1]):
+        _metrics.counter("resilience.nonfinite_fit", label=label).inc()
+        _trace.event("nonfinite_fit", label=label, it=it, fit=repr(fits[-1]))
         warnings.warn(
             f"[{label}] non-finite fit ({fits[-1]}) at iteration {it}; "
             f"stopping early — pass guards=GuardConfig(...) for "

@@ -26,12 +26,15 @@ from __future__ import annotations
 import dataclasses
 import math
 import os
+import time
 from functools import partial
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from ..obs import metrics as _metrics
+from ..obs import trace as _trace
 from .coo import SparseTensor
 
 __all__ = [
@@ -485,6 +488,24 @@ def _assemble_plan(
     return plan
 
 
+def _record_plan_metrics(plan: BlockPlan, dt: float, builder: str) -> None:
+    """Layout statistics every build records (docs/observability.md): build
+    wall time, padding/occupancy of the padded stream, block count, and the
+    blocks-per-output-tile imbalance (max over occupied tiles / mean — the
+    skew the Cache Engine's A-tile residency sees)."""
+    pad = plan.padding_fraction()
+    _metrics.histogram("plan.build_seconds", builder=builder).observe(dt)
+    _metrics.histogram("plan.padding_fraction").observe(pad)
+    _metrics.histogram("plan.occupancy").observe(1.0 - pad)
+    _metrics.histogram("plan.nblocks").observe(plan.nblocks)
+    if plan.block_it.size:
+        per_tile = np.bincount(plan.block_it)
+        per_tile = per_tile[per_tile > 0]
+        _metrics.histogram("plan.tile_block_imbalance").observe(
+            float(per_tile.max() / per_tile.mean())
+        )
+
+
 def plan_blocks(
     st: SparseTensor,
     mode: int,
@@ -511,41 +532,46 @@ def plan_blocks(
     kept for parity testing; the vectorized path is what makes layout
     generation cheap enough to amortize (paper Sec. 3.1 treats layout-build
     cost as a first-class quantity)."""
-    g = _grouped_stream(st, mode, tile_i, tile_j, tile_k, blk, in_tiles)
-    n_in = len(g.in_modes)
-    total = g.total
-    nnz = g.i.size
-    order = g.order
+    t0 = time.perf_counter()
+    with _trace.span("plan_build", mode=mode, builder="vectorized",
+                     nnz=st.nnz, blk=blk):
+        g = _grouped_stream(st, mode, tile_i, tile_j, tile_k, blk, in_tiles)
+        n_in = len(g.in_modes)
+        total = g.total
+        nnz = g.i.size
+        order = g.order
 
-    # Destination of each sorted non-zero: its group's padded base offset plus
-    # its rank within the group.
-    dst_off = np.concatenate([[0], np.cumsum(g.padded_sizes)[:-1]])
-    # per-element group id via boundary flags (O(nnz), no repeat allocation)
-    flags = np.zeros((nnz,), np.int64)
-    flags[g.boundaries[1:]] = 1
-    gid = np.cumsum(flags)
-    dest = dst_off[gid] + (np.arange(nnz, dtype=np.int64) - g.boundaries[gid])
+        # Destination of each sorted non-zero: its group's padded base offset
+        # plus its rank within the group.
+        dst_off = np.concatenate([[0], np.cumsum(g.padded_sizes)[:-1]])
+        # per-element group id via boundary flags (O(nnz), no repeat allocation)
+        flags = np.zeros((nnz,), np.int64)
+        flags[g.boundaries[1:]] = 1
+        gid = np.cumsum(flags)
+        dest = dst_off[gid] + (np.arange(nnz, dtype=np.int64) - g.boundaries[gid])
 
-    vals = np.zeros((total,), np.float32)
-    iloc = np.zeros((total,), np.int32)
-    in_locs = [np.zeros((total,), np.int32) for _ in range(n_in)]
-    vals[dest] = g.v[order]
-    iloc[dest] = (g.i - g.it * tile_i).astype(np.int32)[order]
-    for n in range(n_in):
-        in_locs[n][dest] = (g.ins[n] - g.in_ts[n] * g.in_tiles[n]).astype(np.int32)[order]
+        vals = np.zeros((total,), np.float32)
+        iloc = np.zeros((total,), np.int32)
+        in_locs = [np.zeros((total,), np.int32) for _ in range(n_in)]
+        vals[dest] = g.v[order]
+        iloc[dest] = (g.i - g.it * tile_i).astype(np.int32)[order]
+        for n in range(n_in):
+            in_locs[n][dest] = (g.ins[n] - g.in_ts[n] * g.in_tiles[n]).astype(np.int32)[order]
 
-    # Per-block tile-id metadata: each group contributes padded_size/blk
-    # identical blocks; `leaders` are the original positions of each group's
-    # first sorted element.
-    nb_per_group = g.padded_sizes // blk
-    leaders = order[g.boundaries]
-    block_it = np.repeat(g.it[leaders], nb_per_group).astype(np.int32)
-    block_in = [
-        np.repeat(t[leaders], nb_per_group).astype(np.int32) for t in g.in_ts
-    ]
-    return _assemble_plan(
-        st, mode, g, tile_i, blk, vals, iloc, in_locs, block_it, block_in
-    )
+        # Per-block tile-id metadata: each group contributes padded_size/blk
+        # identical blocks; `leaders` are the original positions of each
+        # group's first sorted element.
+        nb_per_group = g.padded_sizes // blk
+        leaders = order[g.boundaries]
+        block_it = np.repeat(g.it[leaders], nb_per_group).astype(np.int32)
+        block_in = [
+            np.repeat(t[leaders], nb_per_group).astype(np.int32) for t in g.in_ts
+        ]
+        plan = _assemble_plan(
+            st, mode, g, tile_i, blk, vals, iloc, in_locs, block_it, block_in
+        )
+    _record_plan_metrics(plan, time.perf_counter() - t0, "vectorized")
+    return plan
 
 
 def plan_blocks_reference(
@@ -562,42 +588,47 @@ def plan_blocks_reference(
     interpreter-loop implementation, kept as the executable specification
     `plan_blocks` must match bit-for-bit (see the hypothesis parity property
     in tests/test_remap.py)."""
-    g = _grouped_stream(st, mode, tile_i, tile_j, tile_k, blk, in_tiles)
-    n_in = len(g.in_modes)
-    total = g.total
-    nblocks = total // blk
+    t0 = time.perf_counter()
+    with _trace.span("plan_build", mode=mode, builder="reference",
+                     nnz=st.nnz, blk=blk):
+        g = _grouped_stream(st, mode, tile_i, tile_j, tile_k, blk, in_tiles)
+        n_in = len(g.in_modes)
+        total = g.total
+        nblocks = total // blk
 
-    # The loop walks the stream in sorted order: materialize sorted copies.
-    order = g.order
-    i, v, it = g.i[order], g.v[order], g.it[order]
-    ins = [c[order] for c in g.ins]
-    in_ts = [t[order] for t in g.in_ts]
+        # The loop walks the stream in sorted order: materialize sorted copies.
+        order = g.order
+        i, v, it = g.i[order], g.v[order], g.it[order]
+        ins = [c[order] for c in g.ins]
+        in_ts = [t[order] for t in g.in_ts]
 
-    vals = np.zeros((total,), np.float32)
-    iloc = np.zeros((total,), np.int32)
-    in_locs = [np.zeros((total,), np.int32) for _ in range(n_in)]
-    block_it = np.empty((nblocks,), np.int32)
-    block_in = [np.empty((nblocks,), np.int32) for _ in range(n_in)]
+        vals = np.zeros((total,), np.float32)
+        iloc = np.zeros((total,), np.int32)
+        in_locs = [np.zeros((total,), np.int32) for _ in range(n_in)]
+        block_it = np.empty((nblocks,), np.int32)
+        block_in = [np.empty((nblocks,), np.int32) for _ in range(n_in)]
 
-    src = 0
-    dst = 0
-    b = 0
-    for gsize, psize in zip(g.group_sizes, g.padded_sizes):
-        s, e = src, src + gsize
-        vals[dst : dst + gsize] = v[s:e]
-        iloc[dst : dst + gsize] = (i[s:e] - it[s] * tile_i).astype(np.int32)
-        for n in range(n_in):
-            in_locs[n][dst : dst + gsize] = (
-                ins[n][s:e] - in_ts[n][s] * g.in_tiles[n]
-            ).astype(np.int32)
-        nb = psize // blk
-        block_it[b : b + nb] = it[s]
-        for n in range(n_in):
-            block_in[n][b : b + nb] = in_ts[n][s]
-        src = e
-        dst += psize
-        b += nb
+        src = 0
+        dst = 0
+        b = 0
+        for gsize, psize in zip(g.group_sizes, g.padded_sizes):
+            s, e = src, src + gsize
+            vals[dst : dst + gsize] = v[s:e]
+            iloc[dst : dst + gsize] = (i[s:e] - it[s] * tile_i).astype(np.int32)
+            for n in range(n_in):
+                in_locs[n][dst : dst + gsize] = (
+                    ins[n][s:e] - in_ts[n][s] * g.in_tiles[n]
+                ).astype(np.int32)
+            nb = psize // blk
+            block_it[b : b + nb] = it[s]
+            for n in range(n_in):
+                block_in[n][b : b + nb] = in_ts[n][s]
+            src = e
+            dst += psize
+            b += nb
 
-    return _assemble_plan(
-        st, mode, g, tile_i, blk, vals, iloc, in_locs, block_it, block_in
-    )
+        plan = _assemble_plan(
+            st, mode, g, tile_i, blk, vals, iloc, in_locs, block_it, block_in
+        )
+    _record_plan_metrics(plan, time.perf_counter() - t0, "reference")
+    return plan

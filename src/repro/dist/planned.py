@@ -49,6 +49,8 @@ the guards detect — see `repro.testing.faults.deaden_shard`.
 """
 from __future__ import annotations
 
+from typing import Any
+
 import jax
 import numpy as np
 
@@ -63,6 +65,7 @@ from ..kernels.ops import (
     make_sharded_planned_tt,
     make_sharded_planned_tucker,
 )
+from ..obs import metrics as _metrics
 from .sharding import ShardingPlan, StreamPartition, partition_stream
 
 __all__ = [
@@ -78,6 +81,7 @@ __all__ = [
     "make_sharded_planned_cp_als",
     "make_sharded_planned_tucker",
     "make_sharded_planned_tt",
+    "shard_makespan_report",
     "GuardConfig",
     "DecompositionDiverged",
 ]
@@ -104,3 +108,60 @@ def shard_plan(devices: int | None = None) -> ShardingPlan:
         )
     mesh = jax.sharding.Mesh(np.asarray(devs[:n]), ("shard",))
     return ShardingPlan(mesh=mesh, dp=("shard",))
+
+
+def shard_makespan_report(ws: Any) -> dict:
+    """Per-shard makespan accounting for a sharded planned workspace
+    (docs/observability.md).
+
+    The stacked shard_map sweep runs EVERY shard for the widest shard's
+    block count (`_stack_shard_plans` pads narrower shards with repeated
+    no-op blocks), so per mode the makespan in controller steps is
+    ``max(shard_nblocks)`` and shard d's busy fraction is
+    ``nblocks[d] / max``.  The report makes that visible per mode:
+
+      * ``shard_nblocks`` / ``shard_nnz`` — the raw per-shard layout sizes;
+      * ``makespan_blocks`` — the padded block count every device steps;
+      * ``block_imbalance`` — max/mean shard blocks (1.0 = perfect balance;
+        the direct makespan-inflation factor of the stacked sweep);
+      * ``busy_fraction`` — per-shard useful fraction of the makespan.
+
+    Each mode's imbalance is also recorded into the metrics registry
+    (``sharded.block_imbalance{mode=..}`` / ``sharded.nnz_imbalance``) so a
+    skewed partition shows up in `metrics.snapshot()` without holding onto
+    the workspace."""
+    stacks = getattr(ws, "stacks", None)
+    if stacks is None:
+        stack = getattr(ws, "stack", None)
+        if stack is None:
+            raise TypeError(
+                f"{type(ws).__name__} exposes no shard stacks; the makespan "
+                f"report needs a sharded planned workspace"
+            )
+        stacks = {stack.mode: stack}
+    modes = {}
+    for m, stack in sorted(stacks.items()):
+        nb = [max(1, int(b)) for b in stack.shard_nblocks]
+        nnz = [int(z) for z in stack.shard_nnz]
+        makespan = max(nb)
+        block_imb = makespan * len(nb) / sum(nb)
+        nnz_imb = (
+            max(nnz) * len(nnz) / sum(nnz) if sum(nnz) else float("inf")
+        )
+        _metrics.histogram("sharded.block_imbalance", mode=m).observe(block_imb)
+        _metrics.histogram("sharded.nnz_imbalance", mode=m).observe(nnz_imb)
+        modes[m] = {
+            "shard_nblocks": tuple(nb),
+            "shard_nnz": tuple(nnz),
+            "makespan_blocks": makespan,
+            "block_imbalance": block_imb,
+            "nnz_imbalance": nnz_imb,
+            "busy_fraction": tuple(b / makespan for b in nb),
+        }
+    return {
+        "nshards": len(next(iter(modes.values()))["shard_nblocks"]),
+        "modes": modes,
+        "worst_block_imbalance": max(
+            r["block_imbalance"] for r in modes.values()
+        ),
+    }

@@ -33,6 +33,7 @@ from __future__ import annotations
 import dataclasses
 import functools
 import os
+import time
 from collections import OrderedDict
 from typing import Any, Callable, Sequence
 
@@ -45,7 +46,9 @@ from jax.sharding import NamedSharding, PartitionSpec as P
 from ..core.coo import SparseTensor
 from ..core.cp_als import _update_mode, fit_value, inner_with_model, model_norm_sq
 from ..core.memctrl import MemoryControllerConfig, TPUSpec
-from ..core.pms import search as pms_search
+from ..core.pms import predict_from_plan, search as pms_search
+from ..obs import metrics as _metrics
+from ..obs import trace as _trace
 from ..core.remap import BlockPlan, plan_blocks, plans_validated, validate_plan
 from ..core.mttkrp import mttkrp as mttkrp_jax
 from .mttkrp_pallas import mttkrp_pallas_call, pad_factor, rank_padded
@@ -556,6 +559,15 @@ class PlannedCPALS(PlannedWorkspace):
             op.cfg.vmem_bytes(rp, n_in=op.plan.n_in) for op in self.ops.values()
         )
 
+    def pms_estimates(self, spec: TPUSpec = TPUSpec()) -> dict[int, Any]:
+        """Exact per-mode PMS estimates from the built plans — the predicted
+        side of `obs.calibrate`'s achieved_pct join (measured fills and
+        padding, not the analytic occupancy model)."""
+        return {
+            m: predict_from_plan(op.plan, self.rank, op.cfg, spec)
+            for m, op in self.ops.items()
+        }
+
     def _build_fallback_sweep(self) -> Callable:
         """Reference degradation target of the "fallback" guard policy: the
         same ALS iteration as `_build_sweep` with the per-mode Pallas calls
@@ -657,8 +669,10 @@ def plan_cache_config(maxsize: int | None = None) -> int:
 
 def _evict_to_cap() -> None:
     while len(_PLAN_CACHE) > _PLAN_CACHE_CAP:
-        _PLAN_CACHE.popitem(last=False)
+        key, _ = _PLAN_CACHE.popitem(last=False)
         _PLAN_CACHE_EVICTIONS["count"] += 1
+        _metrics.counter("plan_cache.evictions").inc()
+        _trace.event("plan_cache_evict", kind=str(key[0]), mode=int(key[2]))
 
 
 def plan_cache_stats() -> dict:
@@ -730,6 +744,7 @@ def _planned_cached(
         shard,
     )
     stats = _PLAN_CACHE_STATS[kind]
+    t0 = time.perf_counter()
     op = _PLAN_CACHE.get(key)
     if op is not None:
         stats["hits"] += 1
@@ -740,11 +755,21 @@ def _planned_cached(
             # because it skipped the build path.  Shard entries cache raw
             # BlockPlans; kind entries cache kernel ops carrying `.plan`.
             validate_plan(op if isinstance(op, BlockPlan) else op.plan)
+        _metrics.counter("plan_cache.hits", kind=kind).inc()
+        _metrics.histogram("plan_cache.hit_seconds", kind=kind).observe(
+            time.perf_counter() - t0
+        )
+        _trace.event("plan_cache_hit", kind=kind, mode=mode)
         return op
     stats["misses"] += 1
-    op = build()
+    with _trace.span("plan_cache_build", kind=kind, mode=mode):
+        op = build()
     _PLAN_CACHE[key] = op
     _evict_to_cap()
+    _metrics.counter("plan_cache.misses", kind=kind).inc()
+    _metrics.histogram("plan_cache.miss_build_seconds", kind=kind).observe(
+        time.perf_counter() - t0
+    )
     return op
 
 
@@ -1051,27 +1076,35 @@ def _sharded_mode_stack(
     from ..dist.sharding import partition_stream
 
     nshards = dist.dp_size()
-    part = partition_stream(st, mode, nshards, tile=cfg.cache.tile_i)
-    n_in = st.nmodes - 1
-    plans = []
-    for d, shard in enumerate(part.shards):
-        if shard.nnz == 0:
-            plans.append(_empty_shard_plan(st.shape, mode, cfg))
-            continue
-        plans.append(
-            _planned_cached(
-                kind, shard, mode, "layout", cfg, False,
-                lambda shard=shard: plan_blocks(
-                    shard,
-                    mode,
-                    tile_i=cfg.cache.tile_i,
-                    blk=cfg.dma.blk,
-                    in_tiles=cfg.cache.input_tiles(n_in),
-                ),
-                shard=(d, nshards),
+    with _trace.span("shard_stack", kind=kind, mode=mode, nshards=nshards):
+        part = partition_stream(st, mode, nshards, tile=cfg.cache.tile_i)
+        n_in = st.nmodes - 1
+        plans = []
+        for d, shard in enumerate(part.shards):
+            if shard.nnz == 0:
+                plans.append(_empty_shard_plan(st.shape, mode, cfg))
+                continue
+            plans.append(
+                _planned_cached(
+                    kind, shard, mode, "layout", cfg, False,
+                    lambda shard=shard: plan_blocks(
+                        shard,
+                        mode,
+                        tile_i=cfg.cache.tile_i,
+                        blk=cfg.dma.blk,
+                        in_tiles=cfg.cache.input_tiles(n_in),
+                    ),
+                    shard=(d, nshards),
+                )
             )
-        )
-    return part, _stack_shard_plans(plans, part, dist)
+        stack = _stack_shard_plans(plans, part, dist)
+    # The stacked sweep runs every shard for the widest shard's block count,
+    # so max/mean block imbalance is the direct makespan-inflation factor.
+    nblocks = [max(1, p.nblocks) for p in plans]
+    _metrics.histogram("sharded.block_imbalance", kind=kind).observe(
+        max(nblocks) * len(nblocks) / sum(nblocks)
+    )
+    return part, stack
 
 
 def _stack_fit_stream(part, shape: tuple[int, ...], dist):

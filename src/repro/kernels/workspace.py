@@ -26,6 +26,7 @@ format-specific sweep body IS the format.
 """
 from __future__ import annotations
 
+import time
 from typing import Any, Sequence
 
 import jax
@@ -34,6 +35,8 @@ import numpy as np
 
 from ..core.loop import DecompositionDiverged, GuardState, finish_iter
 from ..core.remap import BlockPlan
+from ..obs import metrics as _metrics
+from ..obs import trace as _trace
 from .mttkrp_pallas import pad_factor, rank_padded
 
 __all__ = [
@@ -346,81 +349,124 @@ class PlannedWorkspace:
                 facs = tuple(jnp.asarray(f) for f in saved)
                 fits = [float(f) for f in np.asarray(tree["fits"]).ravel()]
                 start = int(step) + 1
+                _metrics.counter("resilience.resumes", label=label).inc()
+                _trace.event("checkpoint_resume", label=label, step=int(step))
                 if verbose:
                     print(f"[{label}] resumed from checkpoint step {step} "
                           f"({len(fits)} fits recorded)")
         elif checkpoint_every is not None:
             raise ValueError("checkpoint_every requires checkpoint_path")
 
+        # Per-iteration observability (docs/observability.md): metric
+        # handles are resolved once so the hot loop pays no registry lookup;
+        # the per-sweep span carries the PMS-predicted sweep time when the
+        # format exposes it, which is what `obs.calibrate.join_trace` joins
+        # achieved_pct from.
+        m_iter = _metrics.histogram("drive.iter_seconds", label=label)
+        m_delta = _metrics.histogram("drive.fit_delta", label=label)
+        m_count = _metrics.counter("drive.iterations", label=label)
+        predicted_s = (
+            self._predicted_sweep_s() if _trace.active() is not None else None
+        )
+
         it = start
         prev_facs = None  # one-step history: the fallback rebase target
-        while it < iters:
-            new_facs, aux, fit = sweep_call(facs, *args, it=it)
-            fit = float(fit)
-            reason = None
-            if gs is not None:
-                reason = gs.observe_fit(fit)
-                if (reason is None and gs.cfg.check_factors_every > 0
-                        and (it + 1) % gs.cfg.check_factors_every == 0
-                        and not _factors_finite(new_facs)):
-                    reason = "non-finite factor entries"
-            if reason is not None:
-                policy = gs.cfg.policy
-                if policy == "restart" and gs.restarts < gs.cfg.max_restarts:
-                    gs.restarts += 1
-                    if verbose:
-                        print(f"[{label}] iter {it:3d} {reason}; restart "
-                              f"{gs.restarts}/{gs.cfg.max_restarts} with "
-                              f"jittered re-init")
-                    base = (reinit(gs.restarts) if reinit is not None
-                            else _jitter_factors(factors, gs.restarts))
-                    facs = self.pad_factors(base)
-                    fits = []
-                    gs.reset()
-                    it = 0
-                    continue
-                if policy == "fallback" and not fb_active:
-                    fb = self._fallback_sweep()
-                    if fb is not None:
-                        fb_active = True
-                        sweep_call = fb
-                        gs.reset()
-                        # The current iterate may itself be corrupted (its
-                        # fit looked fine when it was accepted, e.g. a factor
-                        # poisoned after the fit was computed): rebase onto
-                        # the previous accepted iterate and redo the tainted
-                        # iteration in place, so the run loses no sweeps.
-                        if not _factors_finite(facs) and prev_facs is not None:
-                            facs = prev_facs
-                            if fits:
-                                fits.pop()
-                            it -= 1
+        with _trace.span("drive", label=label, iters=iters, start=start):
+            while it < iters:
+                t_sweep = time.perf_counter()
+                with _trace.span("sweep", label=label, it=it,
+                                 predicted_s=predicted_s):
+                    new_facs, aux, fit = sweep_call(facs, *args, it=it)
+                    fit = float(fit)
+                m_iter.observe(time.perf_counter() - t_sweep)
+                m_count.inc()
+                if fits:
+                    m_delta.observe(fit - fits[-1])
+                reason = None
+                if gs is not None:
+                    reason = gs.observe_fit(fit)
+                    if (reason is None and gs.cfg.check_factors_every > 0
+                            and (it + 1) % gs.cfg.check_factors_every == 0
+                            and not _factors_finite(new_facs)):
+                        reason = "non-finite factor entries"
+                if reason is not None:
+                    policy = gs.cfg.policy
+                    if policy == "restart" and gs.restarts < gs.cfg.max_restarts:
+                        gs.restarts += 1
+                        _metrics.counter("resilience.restarts", label=label).inc()
+                        _trace.event("guard_restart", label=label, it=it,
+                                     reason=reason, attempt=gs.restarts)
                         if verbose:
-                            print(f"[{label}] iter {it:3d} {reason}; "
-                                  f"degrading to the reference sweep on the "
-                                  f"last good factors")
-                        continue  # retry this iteration on the good iterate
-                    reason += " (no reference fallback sweep for this workspace)"
-                elif policy == "fallback":
-                    reason += " (already running the reference fallback)"
-                elif policy == "restart":
-                    reason += (f" (restart budget of {gs.cfg.max_restarts} "
-                               f"exhausted)")
-                raise DecompositionDiverged(label, it, reason, fits + [fit])
-            prev_facs, facs = facs, new_facs
-            stop = finish_iter(fits, fit, it, tol, verbose, label)
-            if ckpt is not None and (
-                stop or it + 1 == iters or (it + 1) % checkpoint_every == 0
-            ):
-                ckpt.save(
-                    it, {"facs": tuple(facs),
-                         "fits": np.asarray(fits, np.float64),
-                         "lane_ranks": np.asarray(self.lane_ranks, np.int64)}
-                )
-            if stop:
-                break
-            it += 1
+                            print(f"[{label}] iter {it:3d} {reason}; restart "
+                                  f"{gs.restarts}/{gs.cfg.max_restarts} with "
+                                  f"jittered re-init")
+                        base = (reinit(gs.restarts) if reinit is not None
+                                else _jitter_factors(factors, gs.restarts))
+                        facs = self.pad_factors(base)
+                        fits = []
+                        gs.reset()
+                        it = 0
+                        continue
+                    if policy == "fallback" and not fb_active:
+                        fb = self._fallback_sweep()
+                        if fb is not None:
+                            fb_active = True
+                            sweep_call = fb
+                            gs.reset()
+                            _metrics.counter(
+                                "resilience.fallbacks", label=label).inc()
+                            _trace.event("guard_fallback", label=label,
+                                         it=it, reason=reason)
+                            # The current iterate may itself be corrupted (its
+                            # fit looked fine when it was accepted, e.g. a factor
+                            # poisoned after the fit was computed): rebase onto
+                            # the previous accepted iterate and redo the tainted
+                            # iteration in place, so the run loses no sweeps.
+                            if not _factors_finite(facs) and prev_facs is not None:
+                                facs = prev_facs
+                                if fits:
+                                    fits.pop()
+                                it -= 1
+                            if verbose:
+                                print(f"[{label}] iter {it:3d} {reason}; "
+                                      f"degrading to the reference sweep on the "
+                                      f"last good factors")
+                            continue  # retry this iteration on the good iterate
+                        reason += " (no reference fallback sweep for this workspace)"
+                    elif policy == "fallback":
+                        reason += " (already running the reference fallback)"
+                    elif policy == "restart":
+                        reason += (f" (restart budget of {gs.cfg.max_restarts} "
+                                   f"exhausted)")
+                    _metrics.counter("resilience.diverged", label=label).inc()
+                    _trace.event("guard_diverged", label=label, it=it,
+                                 reason=reason)
+                    raise DecompositionDiverged(label, it, reason, fits + [fit])
+                prev_facs, facs = facs, new_facs
+                stop = finish_iter(fits, fit, it, tol, verbose, label)
+                if ckpt is not None and (
+                    stop or it + 1 == iters or (it + 1) % checkpoint_every == 0
+                ):
+                    with _trace.span("checkpoint_save", label=label, it=it):
+                        ckpt.save(
+                            it, {"facs": tuple(facs),
+                                 "fits": np.asarray(fits, np.float64),
+                                 "lane_ranks": np.asarray(self.lane_ranks, np.int64)}
+                        )
+                if stop:
+                    break
+                it += 1
         return self.unpad_factors(facs), aux, fits
+
+    def _predicted_sweep_s(self) -> float | None:
+        """PMS-predicted seconds for one full sweep when the format exposes
+        `pms_estimates` (PlannedCPALS / PlannedTucker / PlannedTT); None
+        otherwise.  Attached to traced sweep spans so a trace JSONL alone
+        carries everything `obs.calibrate.join_trace` needs."""
+        hook = getattr(self, "pms_estimates", None)
+        if hook is None:
+            return None
+        return float(sum(e.t_total for e in hook().values()))
 
 
 class ShardedWorkspace(PlannedWorkspace):

@@ -1,0 +1,181 @@
+"""Predicted-vs-achieved PMS accounting — the observability layer's headline
+consumer.
+
+The PMS (core/pms.py) is the paper's Parameterized Memory Search: an
+analytic roofline that picks memory-controller configurations.  Until now
+nothing ever measured whether its predictions held.  This module closes the
+loop, joining the *exact* per-plan predictors (`predict_from_plan` /
+`predict_ttmc` / `predict_tt` — computed from the workspace's built
+BlockPlans, not the analytic occupancy model) against measured sweep wall
+times:
+
+    achieved_pct = 100 * t_predicted / t_measured
+
+100% means the sweep ran exactly at the modeled roofline; far below 100%
+means the model is optimistic for that (format, config, preset) — on CPU
+interpret-mode Pallas the absolute numbers are small (the model describes
+TPU hardware), but the *trajectory* of achieved_pct across PRs is the
+regression signal ROADMAP asks for ("achieved vs predicted roofline % per
+config in BENCH_kernel.json so PMS mispredictions become visible
+regressions").
+
+Two join paths:
+
+  * `calibration_row(ws, measured_s, ...)` — direct: a built planned
+    workspace plus a measured steady-state sweep time (bench_e2e's
+    `pms_accuracy` section).
+  * `join_trace(path)` — offline: a trace JSONL whose "sweep" spans carry a
+    `predicted_s` attribute (the drive loop attaches it when tracing is on);
+    steady-state measured time is the median span duration excluding the
+    first sweep per group (the first pays jit compilation).
+
+Imports of `repro.core` stay inside functions: `core.remap` imports
+`repro.obs` for its build-time spans, so a module-level import here would
+be circular.
+"""
+from __future__ import annotations
+
+import dataclasses
+import statistics
+from pathlib import Path
+from typing import Any, Mapping, Sequence
+
+__all__ = [
+    "pms_estimates",
+    "predicted_sweep_seconds",
+    "CalibrationRow",
+    "calibration_row",
+    "accuracy_records",
+    "join_trace",
+    "format_table",
+]
+
+
+def pms_estimates(ws: Any, spec=None) -> dict:
+    """Per-mode exact PMS estimates for a planned workspace, via the
+    format's `pms_estimates` hook (PlannedCPALS / PlannedTucker /
+    PlannedTT).  Raises TypeError for workspaces without the hook (the
+    sharded stacks predict through `core.pms.predict_sharded` instead)."""
+    hook = getattr(ws, "pms_estimates", None)
+    if hook is None:
+        raise TypeError(
+            f"{type(ws).__name__} exposes no pms_estimates() hook; "
+            f"calibration needs a single-device planned workspace"
+        )
+    return hook(spec) if spec is not None else hook()
+
+
+def predicted_sweep_seconds(ws: Any, spec=None) -> float:
+    """The PMS-predicted time of ONE full sweep: the sum over output modes
+    of each mode's exact roofline t_total (per-mode kernels run
+    sequentially inside the jitted sweep)."""
+    return float(sum(e.t_total for e in pms_estimates(ws, spec).values()))
+
+
+@dataclasses.dataclass(frozen=True)
+class CalibrationRow:
+    """One (format, preset) entry of the achieved-vs-predicted table."""
+
+    format: str
+    preset: str
+    predicted_s: float
+    measured_s: float
+
+    @property
+    def achieved_pct(self) -> float:
+        return 100.0 * self.predicted_s / self.measured_s
+
+
+def calibration_row(ws: Any, measured_s: float, *, format: str,
+                    preset: str, spec=None) -> CalibrationRow:
+    """Join one workspace's exact PMS prediction against a measured
+    steady-state sweep time (seconds per full sweep, compile excluded)."""
+    if measured_s <= 0:
+        raise ValueError(f"measured_s must be > 0, got {measured_s}")
+    return CalibrationRow(
+        format=format,
+        preset=preset,
+        predicted_s=predicted_sweep_seconds(ws, spec),
+        measured_s=float(measured_s),
+    )
+
+
+def accuracy_records(rows: Sequence[CalibrationRow]) -> list[dict]:
+    """Render calibration rows as benchmark-trajectory result records (the
+    `pms_accuracy` section of BENCH_kernel.json; schema repro/bench.py)."""
+    from ..bench import result_record
+
+    out = []
+    for r in rows:
+        name = f"pms_accuracy_{r.format}"
+        out += [
+            result_record(name, r.preset, "predicted_s", r.predicted_s, "s"),
+            result_record(name, r.preset, "measured_s", r.measured_s, "s"),
+            result_record(name, r.preset, "achieved_pct", r.achieved_pct, "%"),
+        ]
+    return out
+
+
+def _steady_state_s(durs_us: Sequence[float]) -> float:
+    """Median sweep duration in seconds, excluding the first sweep when more
+    than one was recorded (the first pays jit compilation)."""
+    steady = list(durs_us[1:]) if len(durs_us) > 1 else list(durs_us)
+    return statistics.median(steady) / 1e6
+
+
+def join_trace(path: str | Path | Sequence[Mapping]) -> list[dict]:
+    """The offline join: group a trace's "sweep" spans by (label, preset)
+    and compute achieved_pct where the spans carry `predicted_s`.
+
+    Accepts a JSONL path or pre-loaded records.  Returns one dict per group:
+    ``{"label", "preset", "n_sweeps", "measured_s", "predicted_s",
+    "achieved_pct"}`` — the last two are None for untagged spans (tracing
+    was on but the workspace had no PMS hook)."""
+    if isinstance(path, (str, Path)):
+        from .trace import load_jsonl
+
+        records: Sequence[Mapping] = load_jsonl(path)
+    else:
+        records = path
+    groups: dict[tuple, dict] = {}
+    for r in records:
+        if r.get("ph") != "X" or r.get("name") != "sweep":
+            continue
+        args = r.get("args", {})
+        key = (str(args.get("label", "?")), str(args.get("preset", "?")))
+        g = groups.setdefault(key, {"durs": [], "predicted": None})
+        g["durs"].append(float(r.get("dur", 0.0)))
+        if args.get("predicted_s") is not None:
+            g["predicted"] = float(args["predicted_s"])
+    rows = []
+    for (label, preset), g in sorted(groups.items()):
+        measured = _steady_state_s(g["durs"])
+        pred = g["predicted"]
+        rows.append({
+            "label": label,
+            "preset": preset,
+            "n_sweeps": len(g["durs"]),
+            "measured_s": measured,
+            "predicted_s": pred,
+            "achieved_pct": (
+                100.0 * pred / measured if pred and measured > 0 else None
+            ),
+        })
+    return rows
+
+
+def format_table(rows: Sequence[Mapping]) -> str:
+    """Plain-text achieved_pct table (scripts/trace_report.py --pms)."""
+    header = (f"{'label':<14} {'preset':<10} {'sweeps':>6} "
+              f"{'measured_s':>11} {'predicted_s':>12} {'achieved':>9}")
+    lines = [header, "-" * len(header)]
+    for r in rows:
+        pred = r.get("predicted_s")
+        ach = r.get("achieved_pct")
+        pred_s = f"{pred:>12.3e}" if pred is not None else f"{'-':>12}"
+        ach_s = f"{ach:>8.2f}%" if ach is not None else f"{'-':>9}"
+        lines.append(
+            f"{r['label']:<14} {r['preset']:<10} {r['n_sweeps']:>6d} "
+            f"{r['measured_s']:>11.6f} {pred_s} {ach_s}"
+        )
+    return "\n".join(lines)

@@ -47,6 +47,8 @@ from .core.remap import (  # noqa: F401  (re-exports: the validation surface)
     plans_validated,
     validate_plan,
 )
+from .obs import metrics as _metrics
+from .obs import trace as _trace
 
 __all__ = [
     "GuardConfig",
@@ -112,11 +114,18 @@ def admit(ws: Any, budget_bytes: int) -> dict:
     smaller configuration is an option."""
     report = admission_bytes(ws)
     if report["total_bytes"] > budget_bytes:
+        _metrics.counter("admission.rejected").inc()
+        _trace.event(
+            "admission_rejected",
+            total_bytes=report["total_bytes"],
+            budget_bytes=int(budget_bytes),
+        )
         raise AdmissionError(
             budget_bytes,
             [{"blk": None, **report}],
             report["total_bytes"],
         )
+    _metrics.counter("admission.admitted", outcome="pallas").inc()
     return report
 
 
@@ -152,27 +161,53 @@ def plan_with_budget(
     """
     cfg = cfg if cfg is not None else MemoryControllerConfig()
     attempts: list[dict] = []
-    while True:
-        ws = build(cfg)
-        report = admission_bytes(ws)
-        attempts.append({"blk": cfg.dma.blk, **report})
-        if report["total_bytes"] <= budget_bytes:
-            return ws, {
-                "admitted": "pallas",
-                "blk": cfg.dma.blk,
-                "report": report,
+    with _trace.span("admission_ladder", budget_bytes=int(budget_bytes)):
+        while True:
+            ws = build(cfg)
+            report = admission_bytes(ws)
+            attempts.append({"blk": cfg.dma.blk, **report})
+            if report["total_bytes"] <= budget_bytes:
+                _metrics.counter("admission.admitted", outcome="pallas").inc()
+                _metrics.histogram("admission.ladder_rungs").observe(
+                    len(attempts)
+                )
+                _trace.event(
+                    "admission_rung", outcome="pallas", blk=cfg.dma.blk,
+                    total_bytes=report["total_bytes"], rung=len(attempts),
+                )
+                return ws, {
+                    "admitted": "pallas",
+                    "blk": cfg.dma.blk,
+                    "report": report,
+                    "ladder": attempts,
+                }
+            _trace.event(
+                "admission_rung", outcome="over_budget", blk=cfg.dma.blk,
+                total_bytes=report["total_bytes"], rung=len(attempts),
+            )
+            if cfg.dma.blk // 2 >= floor_blk:
+                cfg = dataclasses.replace(
+                    cfg, dma=dataclasses.replace(cfg.dma, blk=cfg.dma.blk // 2)
+                )
+                continue
+            break
+        if reference_bytes <= budget_bytes:
+            _metrics.counter("admission.admitted", outcome="reference").inc()
+            _metrics.histogram("admission.ladder_rungs").observe(
+                len(attempts) + 1
+            )
+            _trace.event(
+                "admission_rung", outcome="reference",
+                total_bytes=int(reference_bytes), rung=len(attempts) + 1,
+            )
+            return None, {
+                "admitted": "reference",
+                "report": {"total_bytes": int(reference_bytes)},
                 "ladder": attempts,
             }
-        if cfg.dma.blk // 2 >= floor_blk:
-            cfg = dataclasses.replace(
-                cfg, dma=dataclasses.replace(cfg.dma, blk=cfg.dma.blk // 2)
-            )
-            continue
-        break
-    if reference_bytes <= budget_bytes:
-        return None, {
-            "admitted": "reference",
-            "report": {"total_bytes": int(reference_bytes)},
-            "ladder": attempts,
-        }
+        _metrics.counter("admission.rejected").inc()
+        _trace.event(
+            "admission_rejected", budget_bytes=int(budget_bytes),
+            rungs=len(attempts),
+        )
     raise AdmissionError(budget_bytes, attempts, int(reference_bytes))

@@ -395,6 +395,16 @@ class PlannedTT(PlannedWorkspace):
             for op in self.ops.values()
         )
 
+    def pms_estimates(self, spec: TPUSpec = TPUSpec()) -> dict:
+        """Per-mode exact PMS estimates from the built plans (the
+        `obs.calibrate` hook — see PlannedCPALS.pms_estimates)."""
+        from ..core.pms import predict_tt
+
+        return {
+            m: predict_tt(op.plan, self.tt_ranks, op.cfg, spec)
+            for m, op in self.ops.items()
+        }
+
     def _build_fallback_sweep(self) -> Callable:
         """Reference degradation target of the "fallback" guard policy: the
         same left-to-right sweep as `_build_sweep` with the per-mode Pallas

@@ -239,6 +239,16 @@ class PlannedTucker(PlannedWorkspace):
             for op in self.ops.values()
         )
 
+    def pms_estimates(self, spec: TPUSpec = TPUSpec()) -> dict:
+        """Per-mode exact PMS estimates from the built plans (the
+        `obs.calibrate` hook — see PlannedCPALS.pms_estimates)."""
+        from ..core.pms import predict_ttmc
+
+        return {
+            m: predict_ttmc(op.plan, self.core_ranks, op.cfg, spec)
+            for m, op in self.ops.items()
+        }
+
     def _build_fallback_sweep(self) -> Callable:
         """Reference degradation target of the "fallback" guard policy: the
         jitted `_sweep_reference` body on the SAME padded factors.  The HOOI

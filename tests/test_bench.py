@@ -2,6 +2,7 @@
 the freshly emitted BENCH_kernel.json with exactly these helpers, so schema
 drift must fail loudly here first."""
 import json
+from pathlib import Path
 
 import pytest
 
@@ -65,3 +66,41 @@ def test_validate_file_rejects_corrupt(tmp_path):
     path.write_text(json.dumps({"commit": "abc", "results": []}))
     with pytest.raises(ValueError):
         validate_file(path)
+
+
+def test_validate_file_expect_commit(tmp_path):
+    """The CI freshness check: a trajectory file whose commit field does not
+    match the expected sha is a stale artifact and must fail validation."""
+    path = tmp_path / "BENCH_kernel.json"
+    write_report(path, _results())
+    report = json.loads(path.read_text())
+    validate_file(path, expect_commit=report["commit"])  # matching sha passes
+    with pytest.raises(ValueError, match="stale"):
+        validate_file(path, expect_commit="f" * 40)
+
+
+def test_validate_file_expect_commit_head(tmp_path):
+    """expect_commit='HEAD' resolves the checkout next to the file: inside a
+    repo a fresh report passes; outside any repo the sentinel itself errors
+    (there is nothing meaningful to compare against)."""
+    from repro.bench import git_commit
+
+    here = Path(__file__).resolve().parent
+    path = here / "_bench_expect_commit_tmp.json"
+    try:
+        write_report(path, _results())
+        if git_commit(here) != "unknown":
+            validate_file(path, expect_commit="HEAD")
+            stale = json.loads(path.read_text())
+            stale["commit"] = "0" * 40
+            path.write_text(json.dumps(stale))
+            with pytest.raises(ValueError, match="stale"):
+                validate_file(path, expect_commit="HEAD")
+    finally:
+        path.unlink(missing_ok=True)
+
+    outside = tmp_path / "r.json"
+    write_report(outside, _results())
+    if git_commit(tmp_path) == "unknown":
+        with pytest.raises(ValueError, match="HEAD"):
+            validate_file(outside, expect_commit="HEAD")

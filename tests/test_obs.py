@@ -1,0 +1,458 @@
+"""Observability layer (repro.obs): span/event tracing, the metrics
+registry, and the predicted-vs-achieved PMS join.
+
+The contract under test: tracing OFF is free (the drive loop with the obs
+calls compiled to no-ops stays within 2% of the same loop with the obs
+modules monkeypatched inert), tracing ON records the spans every layer
+promises (decompose -> drive -> sweep, plan_build, plan-cache events), and
+the calibrate join reproduces achieved_pct from a trace alone."""
+import json
+import math
+import time
+import warnings
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.api import decompose
+from repro.core.coo import random_factors
+from repro.core.loop import finish_iter
+from repro.kernels import ops
+from repro.obs import Tracer, metrics, trace
+from repro.obs.calibrate import (
+    CalibrationRow,
+    accuracy_records,
+    calibration_row,
+    format_table,
+    join_trace,
+    predicted_sweep_seconds,
+)
+
+
+@pytest.fixture(autouse=True)
+def _clean_obs_state():
+    """Every test starts and ends with tracing off and a fresh registry —
+    obs state is process-global by design, so tests must not leak it."""
+    trace.disable()
+    metrics.reset()
+    yield
+    trace.disable()
+    metrics.reset()
+
+
+# ---------------------------------------------------------------------------
+# trace: spans, nesting, export round-trips
+# ---------------------------------------------------------------------------
+
+
+def test_span_nesting_and_roundtrip(tmp_path):
+    tr = Tracer()
+    trace.install(tr)
+    with trace.span("outer", layer="a"):
+        with trace.span("inner", layer="b"):
+            trace.event("ping", n=1)
+        with trace.span("inner", layer="c"):
+            pass
+    assert len(tr.spans("outer")) == 1
+    assert len(tr.spans("inner")) == 2
+    outer = tr.spans("outer")[0]
+    assert outer["parent"] is None
+    for rec in tr.spans("inner"):
+        assert rec["parent"] == outer["id"]
+        assert rec["dur"] >= 0
+    (ping,) = tr.events("ping")
+    assert ping["args"] == {"n": 1}
+    # events nest under the span that was open when they fired
+    inner_b = [r for r in tr.spans("inner") if r["args"]["layer"] == "b"][0]
+    assert ping["parent"] == inner_b["id"]
+
+    path = tmp_path / "t.jsonl"
+    assert tr.export_jsonl(path) == 4
+    loaded = trace.load_jsonl(path)
+    assert loaded == tr.records
+
+    chrome = tmp_path / "t.json"
+    assert tr.export_chrome(chrome) == 4
+    doc = json.loads(chrome.read_text())
+    assert {e["ph"] for e in doc["traceEvents"]} == {"X", "i"}
+    x = [e for e in doc["traceEvents"] if e["ph"] == "X"]
+    assert all("dur" in e and "ts" in e for e in x)
+
+
+def test_span_set_attaches_mid_span():
+    tr = Tracer()
+    trace.install(tr)
+    with trace.span("s") as sp:
+        sp.set(fit=0.5)
+    assert tr.spans("s")[0]["args"]["fit"] == 0.5
+
+
+def test_disabled_calls_are_noops():
+    assert trace.active() is None
+    sp = trace.span("x", a=1)
+    assert sp is trace.span("y")  # the shared null span, no allocation
+    with sp as s:
+        s.set(b=2)
+    trace.event("never")
+
+
+def test_tracing_scope_restores_previous_tracer(tmp_path):
+    outer = trace.enable()
+    path = tmp_path / "scoped.jsonl"
+    with trace.tracing(str(path)) as tr:
+        assert trace.active() is tr
+        with trace.span("scoped"):
+            pass
+    assert trace.active() is outer
+    recs = trace.load_jsonl(path)
+    assert [r["name"] for r in recs] == ["scoped"]
+    assert outer.records == []  # scoped work never leaked into the global
+
+
+def test_load_jsonl_rejects_garbage(tmp_path):
+    bad = tmp_path / "bad.jsonl"
+    bad.write_text('{"ph": "X", "name": "ok", "ts": 1}\nnot json\n')
+    with pytest.raises(ValueError, match="not valid JSON"):
+        trace.load_jsonl(bad)
+    bad.write_text('{"name": "missing ph", "ts": 1}\n')
+    with pytest.raises(ValueError, match="missing field"):
+        trace.load_jsonl(bad)
+
+
+def test_configure_from_env(tmp_path, monkeypatch):
+    monkeypatch.setenv("REPRO_TRACE", "1")
+    tr = trace.configure_from_env()
+    assert trace.active() is tr
+    trace.disable()
+    out = tmp_path / "env.jsonl"
+    monkeypatch.setenv("REPRO_TRACE", str(out))
+    tr = trace.configure_from_env()
+    with trace.span("from_env"):
+        pass
+    trace._export_at_exit()
+    assert [r["name"] for r in trace.load_jsonl(out)] == ["from_env"]
+
+
+# ---------------------------------------------------------------------------
+# metrics registry
+# ---------------------------------------------------------------------------
+
+
+def test_metrics_counter_gauge_histogram():
+    c = metrics.counter("c", kind="x")
+    c.inc()
+    c.inc(2)
+    assert metrics.counter("c", kind="x") is c  # get-or-create
+    g = metrics.gauge("g")
+    g.set(7.5)
+    h = metrics.histogram("h")
+    for v in (1.0, 2.0, 3.0, 4.0, 5.0):
+        h.observe(v)
+    snap = metrics.snapshot()
+    assert snap["counters"]["c{kind=x}"] == 3
+    assert snap["gauges"]["g"] == 7.5
+    hs = snap["histograms"]["h"]
+    assert hs["count"] == 5 and hs["min"] == 1.0 and hs["max"] == 5.0
+    assert hs["mean"] == 3.0
+    assert h.percentile(50) == 3.0
+    with pytest.raises(TypeError):
+        metrics.gauge("c", kind="x")  # same series name, different type
+    metrics.reset()
+    assert metrics.snapshot() == {"counters": {}, "gauges": {},
+                                  "histograms": {}}
+
+
+# ---------------------------------------------------------------------------
+# engine integration: decompose -> drive -> sweep spans + metrics
+# ---------------------------------------------------------------------------
+
+
+def test_decompose_trace_records_engine_spans(tiny_tensor, tmp_path):
+    path = tmp_path / "cp.jsonl"
+    out = decompose(tiny_tensor, 4, iters=3, trace=str(path))
+    assert trace.active() is None  # restored after the call
+    recs = trace.load_jsonl(path)
+    names = [r["name"] for r in recs if r["ph"] == "X"]
+    assert names.count("decompose") == 1
+    assert names.count("drive") == 1
+    assert names.count("sweep") == 3
+    assert names.count("plan_build") == tiny_tensor.nmodes
+    # nesting: sweep under drive under decompose
+    by_id = {r["id"]: r for r in recs}
+    sweep = [r for r in recs if r["name"] == "sweep"][0]
+    drive = by_id[sweep["parent"]]
+    assert drive["name"] == "drive"
+    assert by_id[drive["parent"]]["name"] == "decompose"
+    # the sweep spans carry the PMS prediction for the offline join
+    assert sweep["args"]["predicted_s"] == pytest.approx(
+        sum(e.t_total for e in
+            ops.make_planned_cp_als(tiny_tensor, 4).pms_estimates().values()),
+        rel=1e-6,
+    )
+    assert len(out.fit_history) == 3
+    # the always-on metrics saw the iterations even though trace was scoped
+    snap = metrics.snapshot()
+    assert snap["counters"]["drive.iterations{label=cp_als}"] == 3
+    assert snap["histograms"]["drive.iter_seconds{label=cp_als}"]["count"] == 3
+
+
+def test_plan_build_metrics_recorded(tiny_tensor):
+    from repro.core.remap import plan_blocks
+
+    plan_blocks(tiny_tensor, 0)
+    snap = metrics.snapshot()
+    assert snap["histograms"]["plan.build_seconds{builder=vectorized}"]["count"] == 1
+    pad = snap["histograms"]["plan.padding_fraction"]
+    occ = snap["histograms"]["plan.occupancy"]
+    assert pad["count"] == occ["count"] == 1
+    assert pad["mean"] + occ["mean"] == pytest.approx(1.0)
+
+
+def test_plan_cache_counters_match_stats(tiny_tensor):
+    facs = random_factors(jax.random.PRNGKey(0), tiny_tensor.shape, 4)
+    ops.plan_cache_clear()
+    metrics.reset()
+    tr = trace.enable()
+    try:
+        ops.mttkrp_auto(tiny_tensor, facs, 0)   # miss
+        ops.mttkrp_auto(tiny_tensor, facs, 0)   # hit
+        ops.mttkrp_auto(tiny_tensor, facs, 1)   # miss
+    finally:
+        trace.disable()
+    stats = ops.plan_cache_stats()["by_kind"]["mttkrp"]
+    snap = metrics.snapshot()
+    assert snap["counters"]["plan_cache.misses{kind=mttkrp}"] == stats["misses"] == 2
+    assert snap["counters"]["plan_cache.hits{kind=mttkrp}"] == stats["hits"] == 1
+    assert snap["histograms"]["plan_cache.miss_build_seconds{kind=mttkrp}"]["count"] == 2
+    assert snap["histograms"]["plan_cache.hit_seconds{kind=mttkrp}"]["count"] == 1
+    assert len(tr.events("plan_cache_hit")) == 1
+    assert len(tr.spans("plan_cache_build")) == 2
+
+
+def test_plan_cache_eviction_counter(tiny_tensor):
+    facs = random_factors(jax.random.PRNGKey(0), tiny_tensor.shape, 4)
+    old_cap = ops.plan_cache_config()
+    ops.plan_cache_clear()
+    metrics.reset()
+    try:
+        ops.plan_cache_config(1)
+        ops.mttkrp_auto(tiny_tensor, facs, 0)
+        ops.mttkrp_auto(tiny_tensor, facs, 1)  # evicts mode 0's plan
+        ops.mttkrp_auto(tiny_tensor, facs, 0)  # miss again (was evicted)
+    finally:
+        ops.plan_cache_config(old_cap)
+        ops.plan_cache_clear()
+    snap = metrics.snapshot()
+    assert snap["counters"]["plan_cache.evictions"] == 2
+    assert snap["counters"]["plan_cache.misses{kind=mttkrp}"] == 3
+    assert "plan_cache.hits{kind=mttkrp}" not in snap["counters"]
+
+
+def test_nonfinite_fit_event_and_counter():
+    tr = trace.enable()
+    try:
+        with warnings.catch_warnings():
+            warnings.simplefilter("ignore", RuntimeWarning)
+            stop = finish_iter([], float("nan"), 3, None, False, "unit")
+    finally:
+        trace.disable()
+    assert stop is True
+    assert metrics.snapshot()["counters"]["resilience.nonfinite_fit{label=unit}"] == 1
+    (ev,) = tr.events("nonfinite_fit")
+    assert ev["args"]["it"] == 3 and ev["args"]["label"] == "unit"
+
+
+def test_guard_restart_counted(tiny_tensor):
+    from repro.resilience import GuardConfig
+    from repro.testing import faults
+
+    ws = ops.make_planned_cp_als(tiny_tensor, 4)
+    faults.inject_nan_factor(ws, at_iter=1)
+    tr = trace.enable()
+    try:
+        decompose(tiny_tensor, 4, iters=4, seed=0, planned=ws,
+                  guards=GuardConfig(policy="restart", max_restarts=1))
+    finally:
+        trace.disable()
+    snap = metrics.snapshot()
+    assert snap["counters"]["resilience.restarts{label=cp_als}"] == 1
+    assert len(tr.events("guard_restart")) == 1
+
+
+def test_admission_metrics(tiny_tensor):
+    from repro.resilience import admit, admission_bytes
+
+    ws = ops.make_planned_cp_als(tiny_tensor, 4)
+    admit(ws, admission_bytes(ws)["total_bytes"] + 1)
+    snap = metrics.snapshot()
+    assert snap["counters"]["admission.admitted{outcome=pallas}"] == 1
+
+
+# ---------------------------------------------------------------------------
+# calibrate: the PMS join
+# ---------------------------------------------------------------------------
+
+
+def test_pms_estimates_hooks(tiny_tensor):
+    from repro.tt.als import make_planned_tt
+    from repro.tucker.hooi import make_planned_tucker
+
+    for ws in (
+        ops.make_planned_cp_als(tiny_tensor, 4),
+        make_planned_tucker(tiny_tensor, (3, 3, 3)),
+        make_planned_tt(tiny_tensor, (2, 2)),
+    ):
+        pred = predicted_sweep_seconds(ws)
+        assert pred > 0 and math.isfinite(pred)
+        ests = ws.pms_estimates()
+        assert set(ests) == set(range(tiny_tensor.nmodes))
+
+
+def test_calibration_row_and_records():
+    row = CalibrationRow("cp", "small", predicted_s=0.02, measured_s=4.0)
+    assert row.achieved_pct == pytest.approx(0.5)
+    recs = accuracy_records([row])
+    assert [r["metric"] for r in recs] == [
+        "predicted_s", "measured_s", "achieved_pct"]
+    assert all(r["name"] == "pms_accuracy_cp" and r["preset"] == "small"
+               for r in recs)
+    with pytest.raises(ValueError):
+        calibration_row(object(), 0.0, format="cp", preset="x")
+
+
+def test_join_trace_on_fixed_fixture(tmp_path):
+    """The offline join on a hand-built trace: 1 compile sweep + 3 steady
+    sweeps; measured = median of the steady three, achieved = pred/measured."""
+    recs = [
+        {"ph": "X", "name": "sweep", "ts": i * 100.0, "dur": dur,
+         "args": {"label": "cp_als", "preset": "small",
+                  "predicted_s": 0.002, "it": i}}
+        for i, dur in enumerate([900_000.0, 110_000.0, 100_000.0, 90_000.0])
+    ]
+    recs.append({"ph": "X", "name": "plan_build", "ts": 0.0, "dur": 5.0,
+                 "args": {}})
+    path = tmp_path / "fixture.jsonl"
+    path.write_text("".join(json.dumps(r) + "\n" for r in recs))
+    rows = join_trace(path)
+    assert len(rows) == 1
+    r = rows[0]
+    assert r["label"] == "cp_als" and r["preset"] == "small"
+    assert r["n_sweeps"] == 4
+    assert r["measured_s"] == pytest.approx(0.1)   # median excl. first
+    assert r["achieved_pct"] == pytest.approx(2.0)  # 100 * 0.002 / 0.1
+    table = format_table(rows)
+    assert "cp_als" in table and "2.00%" in table
+
+
+def test_join_trace_without_predictions():
+    recs = [{"ph": "X", "name": "sweep", "ts": 0.0, "dur": 50_000.0,
+             "args": {"label": "tt_als"}}]
+    (row,) = join_trace(recs)
+    assert row["predicted_s"] is None and row["achieved_pct"] is None
+
+
+# ---------------------------------------------------------------------------
+# the traced-off overhead bound
+# ---------------------------------------------------------------------------
+
+
+def test_traced_off_drive_overhead_under_2pct(small_tensor):
+    """ISSUE acceptance: with tracing disabled, the instrumented drive loop
+    must stay within 2% of the same loop with the obs modules monkeypatched
+    inert — the no-op path is one global read per call site."""
+    from repro.kernels import workspace as wsmod
+
+    rank = 8
+    ws = ops.make_planned_cp_als(small_tensor, rank)
+    f0 = random_factors(jax.random.PRNGKey(0), small_tensor.shape, rank)
+    idx = jnp.asarray(small_tensor.indices)
+    val = jnp.asarray(small_tensor.values)
+    nxs = jnp.asarray(
+        float(np.sum(small_tensor.values.astype(np.float64) ** 2)))
+    args = (idx, val, nxs)
+    iters = 2
+
+    class _InertMetrics:
+        def counter(self, *a, **kw):
+            return self
+
+        histogram = gauge = counter
+
+        def inc(self, *a):
+            pass
+
+        def observe(self, *a):
+            pass
+
+        def set(self, *a):
+            pass
+
+    class _InertTrace:
+        @staticmethod
+        def active():
+            return None
+
+        @staticmethod
+        def span(*a, **kw):
+            return trace._NULL_SPAN
+
+        @staticmethod
+        def event(*a, **kw):
+            pass
+
+    def best_of(n):
+        best = math.inf
+        for _ in range(n):
+            t0 = time.perf_counter()
+            ws.drive(f0, args, iters=iters)
+            best = min(best, time.perf_counter() - t0)
+        return best
+
+    assert trace.active() is None
+    ws.drive(f0, args, iters=iters)  # compile both sweep variants
+    t_instrumented = best_of(4)
+    real_metrics, real_trace = wsmod._metrics, wsmod._trace
+    try:
+        wsmod._metrics, wsmod._trace = _InertMetrics(), _InertTrace()
+        t_inert = best_of(4)
+    finally:
+        wsmod._metrics, wsmod._trace = real_metrics, real_trace
+    overhead = (t_instrumented - t_inert) / t_inert
+    assert overhead < 0.02, (
+        f"traced-off drive overhead {overhead:+.2%} exceeds 2% "
+        f"(instrumented {t_instrumented:.4f}s vs inert {t_inert:.4f}s)"
+    )
+
+
+# ---------------------------------------------------------------------------
+# the sharded makespan report
+# ---------------------------------------------------------------------------
+
+
+def test_shard_makespan_report_shape():
+    from repro.dist.planned import shard_makespan_report
+
+    class _Stack:
+        def __init__(self, mode, nblocks, nnz):
+            self.mode = mode
+            self.shard_nblocks = nblocks
+            self.shard_nnz = nnz
+
+    class _WS:
+        stacks = {0: _Stack(0, (4, 2), (100, 50)),
+                  1: _Stack(1, (3, 3), (75, 75))}
+
+    rep = shard_makespan_report(_WS())
+    assert rep["nshards"] == 2
+    m0 = rep["modes"][0]
+    assert m0["makespan_blocks"] == 4
+    assert m0["block_imbalance"] == pytest.approx(4 * 2 / 6)
+    assert m0["busy_fraction"] == (1.0, 0.5)
+    assert rep["modes"][1]["block_imbalance"] == pytest.approx(1.0)
+    assert rep["worst_block_imbalance"] == pytest.approx(4 * 2 / 6)
+    snap = metrics.snapshot()
+    assert snap["histograms"]["sharded.block_imbalance{mode=0}"]["count"] == 1
+    with pytest.raises(TypeError):
+        shard_makespan_report(object())
