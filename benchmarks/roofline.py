@@ -32,10 +32,16 @@ import json
 import math
 import os
 
-PEAK_FLOPS = 197e12
-HBM_BW = 819e9
-ICI_BW = 50e9
-HBM_BYTES = 16 * 2**30
+from repro.core.memctrl import TPUSpec
+
+# Hardware constants sourced from the one authoritative definition
+# (memctrl.TPUSpec) — tests/test_tune.py pins them in sync so this module
+# can never drift from what the PMS prices against again.
+_SPEC = TPUSpec()
+PEAK_FLOPS = _SPEC.peak_flops
+HBM_BW = _SPEC.hbm_bw
+ICI_BW = _SPEC.ici_bw_per_link
+HBM_BYTES = _SPEC.hbm_bytes
 
 RING = {
     "all-reduce": lambda n: 2 * (n - 1) / n,

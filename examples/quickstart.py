@@ -25,11 +25,15 @@ runs from this one entry point, through the unified `decompose()` facade
   PYTHONPATH=src python examples/quickstart.py [--algo {cp,tucker,tt}]
                                                [--fast] [--devices N]
                                                [--trace PATH]
+                                               [--auto-tune {off,on,cached}]
 
   --trace PATH exports an observability trace of the headline decompose()
   call as JSONL (repro.obs; summarize with scripts/trace_report.py, convert
   with --chrome for chrome://tracing).  REPRO_TRACE=1 (or =PATH) instead
   enables process-global tracing for everything this script runs.
+  --auto-tune cached persists each mode's PMS winner in the on-disk autotune
+  cache ($REPRO_AUTOTUNE_DIR or ~/.cache/repro-autotune; docs/autotune.md),
+  so a rerun skips the config sweep entirely.
 """
 import argparse
 import os
@@ -43,7 +47,7 @@ def _print_pms(best):
               f"-> t={e.t_total*1e6:.1f}us [{e.bottleneck}-bound] vmem={e.vmem_bytes/2**20:.0f}MiB")
 
 
-def run_cp(st, fast: bool, devices: int, trace=None):
+def run_cp(st, fast: bool, devices: int, trace=None, auto_tune=False):
     from repro.api import decompose
     from repro.core.coo import frostt_like
     from repro.core.hypergraph import approach1_traffic, approach2_traffic, remap_overhead
@@ -63,14 +67,17 @@ def run_cp(st, fast: bool, devices: int, trace=None):
     # CP-ALS entirely on the planned Pallas kernel (interpret mode on CPU):
     # plans are built once per mode and amortized over all iterations.
     small = frostt_like("tiny")
-    planned = make_planned_cp_als(small, 8, interpret=True)
-    print(f"planned workspace: {small.nmodes} mode plans, "
-          f"{planned.plan_bytes()/2**20:.2f} MiB of remapped copies on HBM")
+    # With --auto-tune the facade builds (or, for "cached", loads) each
+    # mode's PMS-selected configuration itself — no prebuilt workspace.
+    planned = None if auto_tune else make_planned_cp_als(small, 8, interpret=True)
+    if planned is not None:
+        print(f"planned workspace: {small.nmodes} mode plans, "
+              f"{planned.plan_bytes()/2**20:.2f} MiB of remapped copies on HBM")
 
     iters = 2 if fast else 5
     t0 = time.time()
     state = decompose(small, 8, format="cp", iters=iters, planned=planned,
-                      verbose=True, trace=trace)
+                      auto_tune=auto_tune, verbose=True, trace=trace)
     print(f"CP-ALS fit={state.fit_history[-1]:.4f} in {time.time()-t0:.1f}s "
           f"(PlannedCPALS, interpret mode)")
 
@@ -92,7 +99,7 @@ def run_cp(st, fast: bool, devices: int, trace=None):
         print(f"4-mode CP-ALS fit={s4.fit_history[-1]:.4f} (N-mode kernel)")
 
 
-def run_tucker(st, fast: bool, devices: int, trace=None):
+def run_tucker(st, fast: bool, devices: int, trace=None, auto_tune=False):
     from repro.api import decompose
     from repro.core.coo import frostt_like
     from repro.core.pms import search
@@ -107,14 +114,16 @@ def run_tucker(st, fast: bool, devices: int, trace=None):
     # MTTKRP uses, built once per mode and amortized over all iterations.
     small = frostt_like("tiny")
     ranks_small = (4, 4, 4)
-    planned = make_planned_tucker(small, ranks_small, interpret=True)
-    print(f"planned workspace: {small.nmodes} mode plans, "
-          f"{planned.plan_bytes()/2**20:.2f} MiB of remapped copies on HBM")
+    planned = None if auto_tune else make_planned_tucker(small, ranks_small, interpret=True)
+    if planned is not None:
+        print(f"planned workspace: {small.nmodes} mode plans, "
+              f"{planned.plan_bytes()/2**20:.2f} MiB of remapped copies on HBM")
 
     iters = 2 if fast else 5
     t0 = time.time()
     state = decompose(small, ranks_small, format="tucker", iters=iters,
-                      planned=planned, verbose=True, trace=trace)
+                      planned=planned, auto_tune=auto_tune, verbose=True,
+                      trace=trace)
     print(f"Tucker HOOI fit={state.fit_history[-1]:.4f} core={state.core.shape} "
           f"in {time.time()-t0:.1f}s (PlannedTucker, interpret mode)")
 
@@ -133,7 +142,7 @@ def run_tucker(st, fast: bool, devices: int, trace=None):
         print(f"4-mode Tucker fit={s4.fit_history[-1]:.4f} (N-mode TTMc kernel)")
 
 
-def run_tt(st, fast: bool, devices: int, trace=None):
+def run_tt(st, fast: bool, devices: int, trace=None, auto_tune=False):
     from repro.api import decompose
     from repro.core.coo import frostt_like
     from repro.core.pms import search
@@ -149,14 +158,16 @@ def run_tt(st, fast: bool, devices: int, trace=None):
     # iterations.
     small = frostt_like("tiny")
     ranks_small = (4, 4)
-    planned = make_planned_tt(small, ranks_small, interpret=True)
-    print(f"planned workspace: {small.nmodes} mode plans, "
-          f"{planned.plan_bytes()/2**20:.2f} MiB of remapped copies on HBM")
+    planned = None if auto_tune else make_planned_tt(small, ranks_small, interpret=True)
+    if planned is not None:
+        print(f"planned workspace: {small.nmodes} mode plans, "
+              f"{planned.plan_bytes()/2**20:.2f} MiB of remapped copies on HBM")
 
     iters = 2 if fast else 5
     t0 = time.time()
     state = decompose(small, ranks_small, format="tt", iters=iters,
-                      planned=planned, verbose=True, trace=trace)
+                      planned=planned, auto_tune=auto_tune, verbose=True,
+                      trace=trace)
     print(f"TT-ALS fit={state.fit_history[-1]:.4f} tt_ranks={state.tt_ranks} "
           f"in {time.time()-t0:.1f}s (PlannedTT, interpret mode)")
 
@@ -176,7 +187,7 @@ def run_tt(st, fast: bool, devices: int, trace=None):
 
 
 def main(fast: bool = False, algo: str = "cp", devices: int = 1,
-         trace: str | None = None):
+         trace: str | None = None, auto_tune=False):
     import jax
 
     from repro.core.coo import frostt_like
@@ -192,15 +203,15 @@ def main(fast: bool = False, algo: str = "cp", devices: int = 1,
     print(f"tensor: shape={st.shape} nnz={st.nnz:,} density={st.density:.2e} "
           f"algo={algo} devices={devices}")
     if algo == "cp":
-        run_cp(st, fast, devices, trace)
+        run_cp(st, fast, devices, trace, auto_tune)
     elif algo == "tucker":
-        run_tucker(st, fast, devices, trace)
+        run_tucker(st, fast, devices, trace, auto_tune)
     elif algo == "tt":
-        run_tt(st, fast, devices, trace)
-    if trace:
-        print(f"trace -> {trace} (summarize: python scripts/trace_report.py {trace})")
+        run_tt(st, fast, devices, trace, auto_tune)
     else:
         raise ValueError(f"unknown algo {algo!r}: expected 'cp', 'tucker' or 'tt'")
+    if trace:
+        print(f"trace -> {trace} (summarize: python scripts/trace_report.py {trace})")
 
 
 if __name__ == "__main__":
@@ -214,6 +225,12 @@ if __name__ == "__main__":
     ap.add_argument("--trace", default=None, metavar="PATH",
                     help="export the headline decompose() call's obs trace "
                          "as JSONL to PATH (see scripts/trace_report.py)")
+    ap.add_argument("--auto-tune", choices=("off", "on", "cached"),
+                    default="off", dest="auto_tune",
+                    help="PMS tuning for the headline decompose() call: "
+                         "'on' searches every run; 'cached' persists/reuses "
+                         "the winners on disk ($REPRO_AUTOTUNE_DIR, see "
+                         "docs/autotune.md) — a warm cache skips the sweep")
     a = ap.parse_args()
     if a.devices > 1:
         # Must precede the first jax import: the host device count locks at
@@ -235,4 +252,5 @@ if __name__ == "__main__":
                 f"xla_force_host_platform_device_count or raise it to "
                 f">= {a.devices}"
             )
-    main(fast=a.fast, algo=a.algo, devices=a.devices, trace=a.trace)
+    main(fast=a.fast, algo=a.algo, devices=a.devices, trace=a.trace,
+         auto_tune={"off": False, "on": True, "cached": "cached"}[a.auto_tune])

@@ -127,7 +127,8 @@ def decompose(
     tol: float | None = None,
     planned=None,
     interpret: bool = True,
-    auto_tune: bool = False,
+    auto_tune: bool | str = False,
+    spec="default",
     cfg=None,
     jit_sweep: bool = True,
     devices: int | None = None,
@@ -162,6 +163,15 @@ def decompose(
         calls; type-checked against `format`/`method`.
       interpret / auto_tune / cfg: pallas-path knobs — interpret-mode Pallas
         (CPU containers), per-mode PMS tuning, explicit controller config.
+        auto_tune accepts False, True, or "cached": "cached" serves each
+        mode's persisted PMS winner from the on-disk autotune cache
+        (repro.tune.cache; `$REPRO_AUTOTUNE_DIR`), skipping the config
+        sweep entirely on a warm hit — identical factors, zero search
+        configs evaluated — and searching + writing back on a miss.
+      spec: PMS hardware constants for the search — a
+        `repro.core.memctrl.TPUSpec`, "default" (datasheet guesses), or
+        "measured" (this backend's calibrated spec from the autotune cache;
+        auto-calibrates on first use — see docs/autotune.md).
       jit_sweep: fully-jitted per-iteration sweep (the default); False keeps
         each format's eager per-mode dispatch loop as the parity baseline.
       devices / dist: 'pallas_sharded' placement.
@@ -197,6 +207,10 @@ def decompose(
         raise ValueError(
             f"unknown format {format!r}: expected 'cp', 'tucker' or 'tt'"
         )
+    if auto_tune not in (False, True, "cached"):
+        raise ValueError(
+            f"auto_tune must be False, True or 'cached', got {auto_tune!r}"
+        )
     r = _normalized_rank(format, rank, st.nmodes)
     with _trace.tracing(trace), _trace.span(
         "decompose", format=format, method=method,
@@ -210,7 +224,7 @@ def decompose(
             )
         common = dict(
             iters=iters, method=method, seed=seed, tol=tol, planned=planned,
-            interpret=interpret, auto_tune=auto_tune, cfg=cfg,
+            interpret=interpret, auto_tune=auto_tune, spec=spec, cfg=cfg,
             jit_sweep=jit_sweep, devices=devices, dist=dist, verbose=verbose,
             guards=guards, checkpoint_every=checkpoint_every,
             checkpoint_path=checkpoint_path,

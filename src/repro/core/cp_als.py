@@ -169,7 +169,8 @@ def cp_als(
     mttkrp_fn: Callable | None = None,
     planned=None,
     interpret: bool = True,
-    auto_tune: bool = False,
+    auto_tune: bool | str = False,
+    spec="default",
     cfg=None,
     jit_sweep: bool = True,
     devices: int | None = None,
@@ -202,7 +203,11 @@ def cp_als(
                prebuilt `PlannedCPALS` (or `ShardedPlannedCPALS` for
                'pallas_sharded') to reuse plans across calls, or let
                auto_tune run the PMS per mode (Sec. 5.3; worst-shard
-               makespan for the sharded path).
+               makespan for the sharded path).  auto_tune="cached" persists
+               and reuses the PMS winners on disk (repro.tune.cache).
+    spec:      PMS hardware constants — a TPUSpec, "default" (datasheet
+               guesses), or "measured" (this backend's calibrated spec from
+               the autotune cache; see repro.tune).
     jit_sweep: run each iteration as one jitted sweep (factors stay
                device-resident — rank-padded for the pallas path — across
                iterations; `tol` is checked on the host against the
@@ -240,7 +245,7 @@ def cp_als(
         if planned is None:
             planned = make_sharded_planned_cp_als(
                 st, rank, dist=dist, devices=devices, cfg=cfg,
-                auto_tune=auto_tune, interpret=interpret,
+                auto_tune=auto_tune, spec=spec, interpret=interpret,
             )
         else:
             check_workspace(
@@ -259,7 +264,8 @@ def cp_als(
 
         if planned is None:
             planned = make_planned_cp_als(
-                st, rank, cfg=cfg, auto_tune=auto_tune, interpret=interpret
+                st, rank, cfg=cfg, auto_tune=auto_tune, spec=spec,
+                interpret=interpret,
             )
         else:
             check_workspace(

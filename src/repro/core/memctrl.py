@@ -22,7 +22,17 @@ from __future__ import annotations
 
 import dataclasses
 
-__all__ = ["CacheEngineConfig", "DMAEngineConfig", "RemapperConfig", "MemoryControllerConfig", "TPUSpec"]
+__all__ = [
+    "CacheEngineConfig",
+    "DMAEngineConfig",
+    "RemapperConfig",
+    "MemoryControllerConfig",
+    "TPUSpec",
+    "spec_to_dict",
+    "spec_from_dict",
+    "config_to_dict",
+    "config_from_dict",
+]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -155,3 +165,54 @@ class MemoryControllerConfig:
             self.vmem_bytes_tt(out_cols_padded, in_rank_pads, iface_cols)
             <= spec.vmem_bytes * spec.vmem_usable_frac
         )
+
+
+# ---------------------------------------------------------------------------
+# JSON-ready (de)serialization — the autotune cache (repro.tune.cache) persists
+# fitted TPUSpecs and winning MemoryControllerConfigs across processes.  The
+# converters live here, next to the dataclasses whose schema they mirror.
+# ---------------------------------------------------------------------------
+
+
+def _from_known_fields(cls, d: dict):
+    """Rebuild a dataclass from a plain dict, rejecting unknown keys (a key
+    this schema does not know about means the entry was written by a different
+    code version — the caller treats that as a cache miss, never a crash)."""
+    if not isinstance(d, dict):
+        raise ValueError(f"{cls.__name__}: expected a dict, got {type(d).__name__}")
+    names = {f.name for f in dataclasses.fields(cls)}
+    unknown = set(d) - names
+    if unknown:
+        raise ValueError(f"{cls.__name__}: unknown fields {sorted(unknown)}")
+    return cls(**d)
+
+
+def spec_to_dict(spec: TPUSpec) -> dict:
+    """TPUSpec -> plain JSON-ready dict."""
+    return dataclasses.asdict(spec)
+
+
+def spec_from_dict(d: dict) -> TPUSpec:
+    """Plain dict -> TPUSpec.  Raises ValueError on unknown fields."""
+    return _from_known_fields(TPUSpec, d)
+
+
+def config_to_dict(cfg: MemoryControllerConfig) -> dict:
+    """MemoryControllerConfig -> nested JSON-ready dict."""
+    return dataclasses.asdict(cfg)
+
+
+def config_from_dict(d: dict) -> MemoryControllerConfig:
+    """Nested dict -> MemoryControllerConfig.  Raises ValueError on unknown
+    fields at any level (version drift reads as invalid, not as silence)."""
+    if not isinstance(d, dict):
+        raise ValueError(f"config: expected a dict, got {type(d).__name__}")
+    known = {"cache", "dma", "remapper"}
+    unknown = set(d) - known
+    if unknown:
+        raise ValueError(f"config: unknown fields {sorted(unknown)}")
+    return MemoryControllerConfig(
+        cache=_from_known_fields(CacheEngineConfig, d.get("cache", {})),
+        dma=_from_known_fields(DMAEngineConfig, d.get("dma", {})),
+        remapper=_from_known_fields(RemapperConfig, d.get("remapper", {})),
+    )

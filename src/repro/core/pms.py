@@ -41,6 +41,7 @@ __all__ = [
     "predict_tt",
     "predict_tt_analytic",
     "predict_sharded",
+    "resolve_spec",
     "search",
     "search_sharded",
     "DEFAULT_TILE_CHOICES",
@@ -73,6 +74,32 @@ class PMSEstimate:
 
 def _rank_padded(rank: int) -> int:
     return max(128, ((rank + 127) // 128) * 128)
+
+
+def resolve_spec(spec) -> TPUSpec:
+    """Resolve the `spec=` argument of the search entry points: a `TPUSpec`
+    passes through, ``"default"`` is the datasheet `TPUSpec()`, and
+    ``"measured"`` is this backend's calibrated spec from the autotune cache
+    (`repro.tune`), auto-calibrating on a cache miss."""
+    if isinstance(spec, TPUSpec):
+        return spec
+    from ..tune import resolve_spec as _tune_resolve  # deferred: tune -> pms
+
+    return _tune_resolve(spec)
+
+
+def _count_configs(kernel: str, n: int, *, sharded: bool = False) -> None:
+    """Account every configuration the search actually priced in
+    `obs.metrics` (``pms.configs_evaluated``) — the parity tests assert this
+    stays at zero on a warm autotune-cache hit."""
+    from ..obs import metrics as _metrics  # deferred: keep core leaf-light
+
+    _metrics.counter(
+        "pms.configs_evaluated", kernel=kernel, sharded=str(sharded).lower()
+    ).inc(n)
+    _metrics.counter(
+        "pms.searches", kernel=kernel, sharded=str(sharded).lower()
+    ).inc()
 
 
 def _kernel_times(
@@ -552,6 +579,7 @@ def search(
     TT's two-interface scratch, and the per-factor lane paddings change both
     the VMEM constraint and the roofline, so the best configuration generally
     differs between kernels."""
+    spec = resolve_spec(spec)
     if isinstance(st_or_stats, SparseTensor):
         hs = hg_stats(st_or_stats)
         st = st_or_stats
@@ -583,6 +611,7 @@ def search(
             results.append(predict_tt_analytic(hs, mode, core_ranks, cfg, spec))
         else:
             results.append(predict_analytic(hs, mode, rank, cfg, spec))
+    _count_configs(kernel, len(results))
     results.sort(key=lambda e: e.t_total)
     return results[:top_k]
 
@@ -741,6 +770,7 @@ def search_sharded(
     the shard_map sweep waits for (the makespan).  Partitions (and per-shard
     hypergraph stats) are cached per tile_i, since the split depends only on
     the output tile granularity."""
+    spec = resolve_spec(spec)
     _validate_kernel_args(kernel, core_ranks, st.nmodes)
     from ..dist.sharding import partition_stream
 
@@ -764,5 +794,6 @@ def search_sharded(
         results.append(
             ShardedPMSEstimate(cfg=cfg, per_shard=ests, shard_nnz=part.shard_nnz)
         )
+    _count_configs(kernel, len(results), sharded=True)
     results.sort(key=lambda e: e.t_total)
     return results[:top_k]

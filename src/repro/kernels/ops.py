@@ -46,7 +46,11 @@ from jax.sharding import NamedSharding, PartitionSpec as P
 from ..core.coo import SparseTensor
 from ..core.cp_als import _update_mode, fit_value, inner_with_model, model_norm_sq
 from ..core.memctrl import MemoryControllerConfig, TPUSpec
-from ..core.pms import predict_from_plan, search as pms_search
+from ..core.pms import (
+    predict_from_plan,
+    resolve_spec as pms_resolve_spec,
+    search as pms_search,
+)
 from ..obs import metrics as _metrics
 from ..obs import trace as _trace
 from ..core.remap import BlockPlan, plan_blocks, plans_validated, validate_plan
@@ -147,27 +151,62 @@ class PlannedMTTKRP:
         return self(*(factors[m] for m in self.plan.in_modes))[:true_rows]
 
 
+def _resolve_tune(auto_tune, spec):
+    """Normalize the (auto_tune, spec) pair every planned builder accepts:
+    `auto_tune` must be False / True / "cached" ("cached" = True semantics
+    with the winning configuration persisted in `repro.tune.cache`, so a
+    warm cache skips the PMS sweep entirely); `spec` may be a TPUSpec,
+    "default", or "measured" (this backend's calibrated spec)."""
+    if auto_tune not in (False, True, "cached"):
+        raise ValueError(
+            f"auto_tune must be False, True or 'cached', got {auto_tune!r}"
+        )
+    return auto_tune, pms_resolve_spec(spec)
+
+
+def _searched_cfg(
+    auto_tune, kind: str, st: SparseTensor, mode: int, rank_key, spec, search,
+    *, nshards: int | None = None,
+) -> MemoryControllerConfig:
+    """Run (or skip) the PMS sweep per the auto_tune policy: True runs
+    `search()` every call; "cached" serves the persisted winner for this
+    (kind, tensor, mode, rank payload, backend, spec, shards) key and only
+    searches — then writes back — on a miss."""
+    if auto_tune == "cached":
+        from ..tune.cache import cached_config  # deferred: tune -> ops
+
+        return cached_config(
+            kind, st.fingerprint(), mode, rank_key, spec, search, nshards=nshards
+        )
+    return search()
+
+
 def make_planned_mttkrp(
     st: SparseTensor,
     mode: int,
     rank: int,
     *,
     cfg: MemoryControllerConfig | None = None,
-    auto_tune: bool = False,
-    spec: TPUSpec = TPUSpec(),
+    auto_tune: bool | str = False,
+    spec: TPUSpec | str = TPUSpec(),
     interpret: bool = True,
 ) -> PlannedMTTKRP:
     """Build the memory layout (Tensor Remapper) + kernel instance.  With
-    auto_tune=True the PMS picks the controller parameters (Sec. 5.3)."""
+    auto_tune=True the PMS picks the controller parameters (Sec. 5.3);
+    auto_tune="cached" additionally persists/reuses the winner on disk."""
+    auto_tune, spec = _resolve_tune(auto_tune, spec)
     if auto_tune:
-        best = pms_search(st, mode, rank, spec=spec, top_k=1)
-        if not best:
-            raise ValueError(
-                f"PMS found no VMEM-feasible controller configuration for "
-                f"mode {mode} at rank {rank} (spec budget "
-                f"{spec.vmem_bytes * spec.vmem_usable_frac:.0f} bytes)"
-            )
-        cfg = best[0].cfg
+        def _search():
+            best = pms_search(st, mode, rank, spec=spec, top_k=1)
+            if not best:
+                raise ValueError(
+                    f"PMS found no VMEM-feasible controller configuration for "
+                    f"mode {mode} at rank {rank} (spec budget "
+                    f"{spec.vmem_bytes * spec.vmem_usable_frac:.0f} bytes)"
+                )
+            return best[0].cfg
+
+        cfg = _searched_cfg(auto_tune, "mttkrp", st, mode, rank, spec, _search)
     cfg = cfg or MemoryControllerConfig()
     n_in = st.nmodes - 1
     plan = plan_blocks(
@@ -247,8 +286,8 @@ def make_planned_ttmc(
     core_ranks: Sequence[int],
     *,
     cfg: MemoryControllerConfig | None = None,
-    auto_tune: bool = False,
-    spec: TPUSpec = TPUSpec(),
+    auto_tune: bool | str = False,
+    spec: TPUSpec | str = TPUSpec(),
     interpret: bool = True,
 ) -> PlannedTTMC:
     """Build the memory layout + TTMc kernel instance for one output mode.
@@ -279,18 +318,22 @@ def make_planned_ttmc(
             f"core_ranks has {len(core_ranks)} entries for a "
             f"{st.nmodes}-mode tensor (pass the full N-tuple)"
         )
+    auto_tune, spec = _resolve_tune(auto_tune, spec)
     if auto_tune:
-        best = pms_search(
-            st, mode, max(core_ranks), spec=spec, top_k=1,
-            kernel="ttmc", core_ranks=core_ranks,
-        )
-        if not best:
-            raise ValueError(
-                f"PMS found no VMEM-feasible controller configuration for "
-                f"TTMc mode {mode} at core ranks {core_ranks} (spec budget "
-                f"{spec.vmem_bytes * spec.vmem_usable_frac:.0f} bytes)"
+        def _search():
+            best = pms_search(
+                st, mode, max(core_ranks), spec=spec, top_k=1,
+                kernel="ttmc", core_ranks=core_ranks,
             )
-        cfg = best[0].cfg
+            if not best:
+                raise ValueError(
+                    f"PMS found no VMEM-feasible controller configuration for "
+                    f"TTMc mode {mode} at core ranks {core_ranks} (spec budget "
+                    f"{spec.vmem_bytes * spec.vmem_usable_frac:.0f} bytes)"
+                )
+            return best[0].cfg
+
+        cfg = _searched_cfg(auto_tune, "ttmc", st, mode, core_ranks, spec, _search)
     cfg = cfg or MemoryControllerConfig()
     n_in = st.nmodes - 1
     plan = plan_blocks(
@@ -400,8 +443,8 @@ def make_planned_ttcore(
     tt_ranks: Sequence[int],
     *,
     cfg: MemoryControllerConfig | None = None,
-    auto_tune: bool = False,
-    spec: TPUSpec = TPUSpec(),
+    auto_tune: bool | str = False,
+    spec: TPUSpec | str = TPUSpec(),
     interpret: bool = True,
 ) -> PlannedTTCore:
     """Build the memory layout + TT-core kernel instance for one output mode.
@@ -426,18 +469,24 @@ def make_planned_ttcore(
       SAME layout `make_planned_mttkrp` would build for this (tensor, mode,
       cfg); only the kernel differs."""
     pairs = _tt_bond_pairs(tt_ranks, st.nmodes)
+    auto_tune, spec = _resolve_tune(auto_tune, spec)
     if auto_tune:
-        best = pms_search(
-            st, mode, max(max(p) for p in pairs), spec=spec, top_k=1,
-            kernel="tt", core_ranks=tuple(int(r) for r in tt_ranks),
-        )
-        if not best:
-            raise ValueError(
-                f"PMS found no VMEM-feasible controller configuration for "
-                f"TT mode {mode} at TT ranks {tuple(tt_ranks)} (spec budget "
-                f"{spec.vmem_bytes * spec.vmem_usable_frac:.0f} bytes)"
+        def _search():
+            best = pms_search(
+                st, mode, max(max(p) for p in pairs), spec=spec, top_k=1,
+                kernel="tt", core_ranks=tuple(int(r) for r in tt_ranks),
             )
-        cfg = best[0].cfg
+            if not best:
+                raise ValueError(
+                    f"PMS found no VMEM-feasible controller configuration for "
+                    f"TT mode {mode} at TT ranks {tuple(tt_ranks)} (spec budget "
+                    f"{spec.vmem_bytes * spec.vmem_usable_frac:.0f} bytes)"
+                )
+            return best[0].cfg
+
+        cfg = _searched_cfg(
+            auto_tune, "tt", st, mode, tuple(int(r) for r in tt_ranks), spec, _search
+        )
     cfg = cfg or MemoryControllerConfig()
     n_in = st.nmodes - 1
     plan = plan_blocks(
@@ -602,8 +651,8 @@ def make_planned_cp_als(
     rank: int,
     *,
     cfg: MemoryControllerConfig | None = None,
-    auto_tune: bool = False,
-    spec: TPUSpec = TPUSpec(),
+    auto_tune: bool | str = False,
+    spec: TPUSpec | str = TPUSpec(),
     interpret: bool = True,
 ) -> PlannedCPALS:
     """Build the full ALS workspace: one tuned plan per output mode.
@@ -1208,28 +1257,37 @@ def _tuned_cfg(
     rank: int,
     nshards: int,
     cfg: MemoryControllerConfig | None,
-    auto_tune: bool,
-    spec: TPUSpec,
+    auto_tune: bool | str,
+    spec: TPUSpec | str,
     kernel: str = "mttkrp",
     core_ranks: Sequence[int] | None = None,
 ) -> MemoryControllerConfig:
     """Resolve one mode's controller configuration for the sharded path:
-    the sharded PMS's worst-shard-makespan winner when auto_tune is set,
-    else the explicit cfg, else the default."""
+    the sharded PMS's worst-shard-makespan winner when auto_tune is set
+    (persisted/reused on disk for auto_tune="cached", keyed with the shard
+    count — a 2-shard winner is not a 4-shard winner), else the explicit
+    cfg, else the default."""
+    auto_tune, spec = _resolve_tune(auto_tune, spec)
     if auto_tune:
-        from ..core.pms import search_sharded
+        def _search():
+            from ..core.pms import search_sharded
 
-        best = search_sharded(
-            st, mode, rank, nshards, spec=spec, top_k=1,
-            kernel=kernel, core_ranks=core_ranks,
-        )
-        if not best:
-            raise ValueError(
-                f"sharded PMS found no VMEM-feasible {kernel} configuration "
-                f"for mode {mode} over {nshards} shards (spec budget "
-                f"{spec.vmem_bytes * spec.vmem_usable_frac:.0f} bytes)"
+            best = search_sharded(
+                st, mode, rank, nshards, spec=spec, top_k=1,
+                kernel=kernel, core_ranks=core_ranks,
             )
-        return best[0].cfg
+            if not best:
+                raise ValueError(
+                    f"sharded PMS found no VMEM-feasible {kernel} configuration "
+                    f"for mode {mode} over {nshards} shards (spec budget "
+                    f"{spec.vmem_bytes * spec.vmem_usable_frac:.0f} bytes)"
+                )
+            return best[0].cfg
+
+        rank_key = rank if core_ranks is None else tuple(int(r) for r in core_ranks)
+        return _searched_cfg(
+            auto_tune, kernel, st, mode, rank_key, spec, _search, nshards=nshards
+        )
     return cfg or MemoryControllerConfig()
 
 
@@ -1320,8 +1378,8 @@ def make_sharded_planned_mttkrp(
     dist=None,
     devices: int | None = None,
     cfg: MemoryControllerConfig | None = None,
-    auto_tune: bool = False,
-    spec: TPUSpec = TPUSpec(),
+    auto_tune: bool | str = False,
+    spec: TPUSpec | str = TPUSpec(),
     interpret: bool = True,
 ) -> ShardedPlannedMTTKRP:
     """Build the distributed memory layout + kernel instance for one output
@@ -1447,8 +1505,8 @@ def make_sharded_planned_cp_als(
     dist=None,
     devices: int | None = None,
     cfg: MemoryControllerConfig | None = None,
-    auto_tune: bool = False,
-    spec: TPUSpec = TPUSpec(),
+    auto_tune: bool | str = False,
+    spec: TPUSpec | str = TPUSpec(),
     interpret: bool = True,
 ) -> ShardedPlannedCPALS:
     """Build the distributed ALS workspace: one partition + shard-stacked
@@ -1569,8 +1627,8 @@ def make_sharded_planned_tucker(
     dist=None,
     devices: int | None = None,
     cfg: MemoryControllerConfig | None = None,
-    auto_tune: bool = False,
-    spec: TPUSpec = TPUSpec(),
+    auto_tune: bool | str = False,
+    spec: TPUSpec | str = TPUSpec(),
     interpret: bool = True,
 ) -> ShardedPlannedTucker:
     """Build the distributed HOOI workspace: one partition + shard-stacked
@@ -1717,8 +1775,8 @@ def make_sharded_planned_tt(
     dist=None,
     devices: int | None = None,
     cfg: MemoryControllerConfig | None = None,
-    auto_tune: bool = False,
-    spec: TPUSpec = TPUSpec(),
+    auto_tune: bool | str = False,
+    spec: TPUSpec | str = TPUSpec(),
     interpret: bool = True,
 ) -> ShardedPlannedTT:
     """Build the distributed TT-ALS workspace: one partition + shard-stacked

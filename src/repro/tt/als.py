@@ -447,8 +447,8 @@ def make_planned_tt(
     tt_ranks: int | Sequence[int],
     *,
     cfg: MemoryControllerConfig | None = None,
-    auto_tune: bool = False,
-    spec: TPUSpec = TPUSpec(),
+    auto_tune: bool | str = False,
+    spec: TPUSpec | str = TPUSpec(),
     interpret: bool = True,
 ) -> PlannedTT:
     """Build the full TT-ALS workspace: one tuned TT-core plan per output
@@ -479,7 +479,8 @@ def tt_als(
     tol: float | None = None,
     planned: "PlannedTT | None" = None,
     interpret: bool = True,
-    auto_tune: bool = False,
+    auto_tune: bool | str = False,
+    spec: TPUSpec | str = "default",
     cfg: MemoryControllerConfig | None = None,
     jit_sweep: bool = True,
     devices: int | None = None,
@@ -507,6 +508,8 @@ def tt_als(
             prebuilt `PlannedTT` (or `ShardedPlannedTT`) to reuse plans
             across calls, or let auto_tune run the TT-aware PMS per mode
             (worst-shard makespan for the sharded path).
+            auto_tune="cached" persists/reuses the winners on disk; spec may
+            be a TPUSpec, "default", or "measured" (repro.tune).
     jit_sweep: run each iteration as one jitted sweep (interface matrices
             stay device-resident, lane-padded, across iterations); False
             keeps the eager per-mode dispatch loop as the parity baseline
@@ -543,7 +546,7 @@ def tt_als(
         if planned is None:
             planned = make_sharded_planned_tt(
                 st, tr, dist=dist, devices=devices, cfg=cfg,
-                auto_tune=auto_tune, interpret=interpret,
+                auto_tune=auto_tune, spec=spec, interpret=interpret,
             )
         else:
             check_workspace(
@@ -563,7 +566,8 @@ def tt_als(
     if method == "pallas":
         if planned is None:
             planned = make_planned_tt(
-                st, tr, cfg=cfg, auto_tune=auto_tune, interpret=interpret
+                st, tr, cfg=cfg, auto_tune=auto_tune, spec=spec,
+                interpret=interpret,
             )
         else:
             check_workspace(

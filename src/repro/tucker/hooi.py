@@ -286,8 +286,8 @@ def make_planned_tucker(
     core_ranks: Sequence[int],
     *,
     cfg: MemoryControllerConfig | None = None,
-    auto_tune: bool = False,
-    spec: TPUSpec = TPUSpec(),
+    auto_tune: bool | str = False,
+    spec: TPUSpec | str = TPUSpec(),
     interpret: bool = True,
 ) -> PlannedTucker:
     """Build the full HOOI workspace: one tuned TTMc plan per output mode.
@@ -315,7 +315,8 @@ def tucker_hooi(
     tol: float | None = None,
     planned: "PlannedTucker | None" = None,
     interpret: bool = True,
-    auto_tune: bool = False,
+    auto_tune: bool | str = False,
+    spec: TPUSpec | str = "default",
     cfg: MemoryControllerConfig | None = None,
     jit_sweep: bool = True,
     devices: int | None = None,
@@ -339,6 +340,8 @@ def tucker_hooi(
             prebuilt `PlannedTucker` (or `ShardedPlannedTucker`) to reuse
             plans across calls, or let auto_tune run the TTMc-aware PMS per
             mode (worst-shard makespan for the sharded path).
+            auto_tune="cached" persists/reuses the winners on disk; spec may
+            be a TPUSpec, "default", or "measured" (repro.tune).
     jit_sweep: run each iteration as one jitted sweep (factors stay
             device-resident, rank-padded for the pallas path); False keeps
             the eager per-mode dispatch loop as the parity baseline
@@ -366,7 +369,7 @@ def tucker_hooi(
         if planned is None:
             planned = make_sharded_planned_tucker(
                 st, cr, dist=dist, devices=devices, cfg=cfg,
-                auto_tune=auto_tune, interpret=interpret,
+                auto_tune=auto_tune, spec=spec, interpret=interpret,
             )
         else:
             check_workspace(
@@ -382,7 +385,8 @@ def tucker_hooi(
     if method == "pallas":
         if planned is None:
             planned = make_planned_tucker(
-                st, cr, cfg=cfg, auto_tune=auto_tune, interpret=interpret
+                st, cr, cfg=cfg, auto_tune=auto_tune, spec=spec,
+                interpret=interpret,
             )
         else:
             check_workspace(

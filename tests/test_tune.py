@@ -1,0 +1,475 @@
+"""repro.tune test suite (ISSUE 10): PMS predictor properties, the
+measured-roofline fit, the persistent autotune cache's robustness contract,
+and warm-cache decompose parity.
+
+Four pillars:
+  * predictor properties (hypothesis): every PMS predictor
+    (predict_from_plan / predict_ttmc / predict_tt / predict_sharded) is
+    non-negative and non-increasing in `hbm_bw` and `peak_flops_f32` — a
+    faster machine can never be predicted slower;
+  * fit recovery: synthetic samples generated from known constants recover
+    (hbm_bw, peak_flops_f32) through `tune.fit_spec` to <1%;
+  * cache robustness: bit-for-bit round-trips, corrupt/truncated/
+    version-bumped files degrade to a clean re-search (never a crash),
+    cross-backend and cross-kernel keys never collide, concurrent writers
+    keep the file valid JSON (atomic rename);
+  * parity: `decompose(auto_tune="cached")` on a warm cache is bit-for-bit
+    identical to the fresh `auto_tune=True` search path for cp/tucker/tt,
+    with ZERO `pms.configs_evaluated` on the hit (obs.metrics).
+
+Plus the ISSUE's drift fix: benchmarks/roofline.py constants are pinned to
+`memctrl.TPUSpec`.
+"""
+import dataclasses
+import json
+import threading
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as hst
+
+from repro.core.coo import frostt_like, synthetic_tensor
+from repro.core.memctrl import (
+    CacheEngineConfig,
+    DMAEngineConfig,
+    MemoryControllerConfig,
+    TPUSpec,
+    config_from_dict,
+    config_to_dict,
+    spec_from_dict,
+    spec_to_dict,
+)
+from repro.core.pms import (
+    predict_from_plan,
+    predict_sharded,
+    predict_tt,
+    predict_ttmc,
+)
+from repro.core.remap import plan_blocks
+from repro.obs import metrics
+from repro.tune import (
+    AutotuneCache,
+    CalibSample,
+    cache_path,
+    config_key,
+    current_backend,
+    fit_spec,
+    predicted_seconds,
+    resolve_spec,
+    roofline_counts,
+    sweep_sample,
+)
+from repro.tune.cache import SCHEMA_VERSION, cached_config
+
+
+@pytest.fixture(autouse=True)
+def _isolated_cache(tmp_path, monkeypatch):
+    """Every test gets its own on-disk cache and a clean metrics registry —
+    the autotune cache is process-global state by design."""
+    monkeypatch.setenv("REPRO_AUTOTUNE_DIR", str(tmp_path / "autotune"))
+    metrics.reset()
+    yield
+    metrics.reset()
+
+
+def _counters():
+    return metrics.snapshot()["counters"]
+
+
+# ---------------------------------------------------------------------------
+# Predictor properties: monotone in the hardware constants, non-negative
+# ---------------------------------------------------------------------------
+
+_CFG = MemoryControllerConfig()
+
+
+def _spec_scaled(bw_x: float, pf_x: float) -> TPUSpec:
+    base = TPUSpec()
+    return dataclasses.replace(
+        base,
+        hbm_bw=base.hbm_bw * bw_x,
+        peak_flops_f32=base.peak_flops_f32 * pf_x,
+        peak_flops=base.peak_flops * pf_x,
+    )
+
+
+def _term_estimates(est):
+    """The per-term PMSEstimates of `est`: itself, or — for the sharded
+    makespan wrapper — every shard's estimate."""
+    return est.per_shard if hasattr(est, "per_shard") else (est,)
+
+
+def _assert_monotone(predict, bw_x: float, pf_x: float):
+    """Faster hardware (either constant scaled up) never predicts slower,
+    and every roofline term stays non-negative."""
+    lo, hi = min(bw_x, 1.0), max(bw_x, 1.0)
+    base = predict(_spec_scaled(lo, 1.0))
+    fast = predict(_spec_scaled(hi, 1.0))
+    assert fast.t_total <= base.t_total + 1e-12
+    base = predict(_spec_scaled(1.0, min(pf_x, 1.0)))
+    fast = predict(_spec_scaled(1.0, max(pf_x, 1.0)))
+    assert fast.t_total <= base.t_total + 1e-12
+    for est in (base, fast):
+        assert est.t_total >= 0
+        for term in _term_estimates(est):
+            assert term.t_stream >= 0 and term.t_factor >= 0
+            assert term.t_out >= 0 and term.t_compute >= 0
+
+
+@settings(max_examples=8, deadline=None)
+@given(
+    bw_x=hst.floats(0.01, 100.0),
+    pf_x=hst.floats(0.01, 100.0),
+    mode=hst.integers(0, 2),
+    seed=hst.integers(0, 20),
+)
+def test_predict_from_plan_monotone_in_spec(bw_x, pf_x, mode, seed):
+    tensor = synthetic_tensor((40, 30, 50), 800, seed=seed)
+    plan = plan_blocks(tensor, mode, blk=_CFG.dma.blk)
+    _assert_monotone(lambda s: predict_from_plan(plan, 8, _CFG, s), bw_x, pf_x)
+
+
+@settings(max_examples=8, deadline=None)
+@given(bw_x=hst.floats(0.01, 100.0), pf_x=hst.floats(0.01, 100.0),
+       mode=hst.integers(0, 2))
+def test_predict_ttmc_monotone_in_spec(bw_x, pf_x, mode):
+    tensor = synthetic_tensor((40, 30, 50), 800, seed=3)
+    plan = plan_blocks(tensor, mode, blk=_CFG.dma.blk)
+    _assert_monotone(
+        lambda s: predict_ttmc(plan, (4, 4, 4), _CFG, s), bw_x, pf_x
+    )
+
+
+@settings(max_examples=8, deadline=None)
+@given(bw_x=hst.floats(0.01, 100.0), pf_x=hst.floats(0.01, 100.0),
+       mode=hst.integers(0, 2))
+def test_predict_tt_monotone_in_spec(bw_x, pf_x, mode):
+    tensor = synthetic_tensor((40, 30, 50), 800, seed=5)
+    plan = plan_blocks(tensor, mode, blk=_CFG.dma.blk)
+    _assert_monotone(lambda s: predict_tt(plan, (4, 4), _CFG, s), bw_x, pf_x)
+
+
+@settings(max_examples=6, deadline=None)
+@given(bw_x=hst.floats(0.01, 100.0), pf_x=hst.floats(0.01, 100.0),
+       nshards=hst.sampled_from([2, 4]))
+def test_predict_sharded_monotone_in_spec(bw_x, pf_x, nshards):
+    tensor = synthetic_tensor((64, 40, 48), 1200, seed=7)
+    _assert_monotone(
+        lambda s: predict_sharded(tensor, 0, 8, nshards, _CFG, spec=s),
+        bw_x, pf_x,
+    )
+
+
+# ---------------------------------------------------------------------------
+# Fit recovery: known constants come back through the least squares to <1%
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    bw=hst.floats(1e8, 1e12),
+    pf=hst.floats(1e9, 1e14),
+    seed=hst.integers(0, 1000),
+)
+def test_fit_spec_recovers_known_constants(bw, pf, seed):
+    """Samples priced exactly by the sum-form roofline at known (bw, pf)
+    must recover both constants to <1% — the calibration loop is only
+    trustworthy if the solver is."""
+    rng = np.random.default_rng(seed)
+    samples = []
+    for i in range(6):
+        # Byte/FLOP mixes spanning memory-bound to compute-bound cells so
+        # the least-squares system is well conditioned.
+        b = float(rng.uniform(0.5, 8.0) * bw)          # ~0.5-8 s of memory
+        f = float(rng.uniform(0.05, 4.0) * pf)         # ~0.05-4 s of compute
+        t = b / bw + f / pf
+        samples.append(CalibSample(label=f"s{i}", per_mode=((b, f),), measured_s=t))
+    fitted = fit_spec(samples)
+    assert abs(fitted.hbm_bw - bw) / bw < 0.01
+    assert abs(fitted.peak_flops_f32 - pf) / pf < 0.01
+
+
+def test_fit_spec_through_real_sweep_counts():
+    """End-to-end through `tune` plumbing: price real workspaces' exact
+    byte/FLOP counts (roofline_counts) under known constants, fit, recover
+    to <1% — the synthetic-plan variant of the ISSUE's acceptance."""
+    st = frostt_like("tiny")
+    bw_true, pf_true = 3.7e9, 5.2e10
+    cfgs = (
+        MemoryControllerConfig(
+            cache=CacheEngineConfig(tile_i=128, tile_j=128, tile_k=128),
+            dma=DMAEngineConfig(blk=128),
+        ),
+        MemoryControllerConfig(),
+        MemoryControllerConfig(
+            cache=CacheEngineConfig(tile_i=512, tile_j=512, tile_k=512),
+            dma=DMAEngineConfig(blk=512),
+        ),
+    )
+    from repro.kernels.ops import make_planned_cp_als
+
+    samples = []
+    for cfg in cfgs:
+        per_mode = roofline_counts(make_planned_cp_als(st, 8, cfg=cfg))
+        t = sum(b / bw_true + f / pf_true for b, f in per_mode)
+        samples.append(CalibSample(label=str(cfg.dma.blk), per_mode=per_mode,
+                                   measured_s=t))
+    fitted = fit_spec(samples)
+    assert abs(fitted.hbm_bw - bw_true) / bw_true < 0.01
+    assert abs(fitted.peak_flops_f32 - pf_true) / pf_true < 0.01
+    # predicted_seconds re-prices with the max-form model: bounded above by
+    # the sum-form measurement it was fit to.
+    for s in samples:
+        assert predicted_seconds(s.per_mode, fitted) <= s.measured_s * 1.001
+
+
+def test_sweep_sample_counts_match_unit_spec():
+    """sweep_sample's stored counts are exactly the unit-spec PMS estimates
+    of the workspace it timed."""
+    st = frostt_like("tiny")
+    s = sweep_sample(st, 8, MemoryControllerConfig(), reps=1)
+    assert s.measured_s > 0
+    assert s.mem_bytes > 0 and s.flops > 0
+    assert len(s.per_mode) == st.nmodes
+
+
+# ---------------------------------------------------------------------------
+# Cache robustness
+# ---------------------------------------------------------------------------
+
+
+def _cfg_variants():
+    return (
+        MemoryControllerConfig(),
+        MemoryControllerConfig(
+            cache=CacheEngineConfig(tile_i=512, tile_j=128, tile_k=256,
+                                    resident_tiles=2),
+            dma=DMAEngineConfig(blk=512, buffers=3),
+        ),
+    )
+
+
+def test_spec_and_config_round_trip_bit_for_bit():
+    spec = dataclasses.replace(TPUSpec(), hbm_bw=123.456e9,
+                               peak_flops_f32=7.89e12)
+    assert spec_from_dict(json.loads(json.dumps(spec_to_dict(spec)))) == spec
+    for cfg in _cfg_variants():
+        rt = config_from_dict(json.loads(json.dumps(config_to_dict(cfg))))
+        assert rt == cfg
+
+
+def test_cache_round_trip_on_disk():
+    cache = AutotuneCache()
+    spec = dataclasses.replace(TPUSpec(), hbm_bw=42e9)
+    cache.put_spec("cpu", spec, note="test")
+    assert cache.get_spec("cpu") == spec
+    cfg = _cfg_variants()[1]
+    key = config_key("mttkrp", "f" * 12, 0, 8, backend="cpu", spec=spec)
+    cache.put_config(key, cfg)
+    assert cache.get_config(key) == cfg
+    # A second process would read the same file: a fresh handle agrees.
+    assert AutotuneCache().get_spec("cpu") == spec
+    assert AutotuneCache().get_config(key) == cfg
+
+
+@pytest.mark.parametrize("payload", [
+    "",                                    # empty file
+    "{not json",                           # invalid JSON
+    '{"schema_version": 1, "specs": {}, "configs"',  # truncated
+    '"a bare string"',                     # valid JSON, wrong shape
+    '{"schema_version": 9999, "specs": {}, "configs": {}}',  # version bump
+    '{"schema_version": 1, "specs": [], "configs": {}}',     # bad section
+])
+def test_corrupt_cache_degrades_to_clean_miss(payload):
+    """Any defective on-disk state reads as empty: get_* return None, a
+    cached_config falls through to the search, and the next write repairs
+    the file — never a crash."""
+    path = cache_path()
+    path.parent.mkdir(parents=True, exist_ok=True)
+    path.write_text(payload)
+    cache = AutotuneCache()
+    assert cache.get_spec("cpu") is None
+    key = config_key("mttkrp", "a" * 12, 0, 8, backend="cpu", spec=TPUSpec())
+    assert cache.get_config(key) is None
+    ran = []
+    cfg = cached_config("mttkrp", "a" * 12, 0, 8, TPUSpec(),
+                        lambda: ran.append(1) or MemoryControllerConfig())
+    assert ran == [1] and cfg == MemoryControllerConfig()
+    # The miss-path write-back replaced the defective file with a valid one.
+    assert json.loads(path.read_text())["schema_version"] == SCHEMA_VERSION
+    assert cache.get_config(key) == MemoryControllerConfig()
+
+
+def test_unknown_entry_fields_read_as_miss():
+    """An entry written by a *future* code version (extra fields) is a miss,
+    not a crash and not a silently misread config."""
+    cache = AutotuneCache()
+    cache.put_spec("cpu", TPUSpec())
+    data = cache.load()
+    data["specs"]["cpu"]["spec"]["new_field_from_the_future"] = 1.0
+    key = config_key("mttkrp", "b" * 12, 0, 8, backend="cpu", spec=TPUSpec())
+    data["configs"][key] = {"cfg": {"cache": {}, "dma": {}, "remapper": {},
+                                    "extra_engine": {}}}
+    cache._write(data)
+    assert cache.get_spec("cpu") is None
+    assert cache.get_config(key) is None
+
+
+def test_keys_never_collide_across_backend_kind_rank_spec_shards():
+    fp = "c" * 12
+    spec, spec2 = TPUSpec(), dataclasses.replace(TPUSpec(), hbm_bw=1e9)
+    keys = [
+        config_key("mttkrp", fp, 0, 8, backend="cpu", spec=spec),
+        config_key("ttmc", fp, 0, 8, backend="cpu", spec=spec),
+        config_key("tt", fp, 0, 8, backend="cpu", spec=spec),
+        config_key("mttkrp", fp, 0, 8, backend="tpu", spec=spec),
+        config_key("mttkrp", fp, 1, 8, backend="cpu", spec=spec),
+        config_key("mttkrp", fp, 0, 16, backend="cpu", spec=spec),
+        config_key("mttkrp", fp, 0, (8, 8, 8), backend="cpu", spec=spec),
+        config_key("mttkrp", fp, 0, 8, backend="cpu", spec=spec2),
+        config_key("mttkrp", fp, 0, 8, backend="cpu", spec=spec, nshards=2),
+        config_key("mttkrp", fp, 0, 8, backend="cpu", spec=spec, nshards=4),
+        config_key("mttkrp", "d" * 12, 0, 8, backend="cpu", spec=spec),
+    ]
+    assert len(set(keys)) == len(keys)
+    # rank payloads that differ only in type must not alias either
+    assert config_key("tt", fp, 0, (4, 4), backend="cpu", spec=spec) != \
+        config_key("tt", fp, 0, "(4, 4)", backend="cpu", spec=spec)
+
+
+def test_concurrent_writers_keep_file_valid():
+    """N threads hammering put_config interleave arbitrarily, but the atomic
+    rename means the file is always complete, valid JSON and every writer's
+    entry survives (distinct keys, last-writer-wins per key)."""
+    cache = AutotuneCache()
+    spec = TPUSpec()
+    errors = []
+
+    def writer(i):
+        try:
+            for j in range(5):
+                key = config_key("mttkrp", f"{i:012d}", j, 8,
+                                 backend="cpu", spec=spec)
+                cache.put_config(key, MemoryControllerConfig())
+        except Exception as e:  # pragma: no cover - failure reporting
+            errors.append(e)
+
+    threads = [threading.Thread(target=writer, args=(i,)) for i in range(8)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    assert not errors
+    data = json.loads(cache_path().read_text())  # parses == never torn
+    assert len(data["configs"]) == 8 * 5
+    for i in range(8):
+        for j in range(5):
+            key = config_key("mttkrp", f"{i:012d}", j, 8,
+                             backend="cpu", spec=spec)
+            assert cache.get_config(key) == MemoryControllerConfig()
+
+
+def test_cached_config_hit_miss_metrics():
+    ran = []
+
+    def search():
+        ran.append(1)
+        return MemoryControllerConfig()
+
+    cfg1 = cached_config("mttkrp", "e" * 12, 0, 8, TPUSpec(), search)
+    cfg2 = cached_config("mttkrp", "e" * 12, 0, 8, TPUSpec(), search)
+    assert cfg1 == cfg2 and ran == [1]
+    counters = _counters()
+    assert counters.get("autotune_cache.misses{kind=mttkrp}") == 1
+    assert counters.get("autotune_cache.hits{kind=mttkrp}") == 1
+
+
+def test_resolve_spec_contract():
+    assert resolve_spec("default") == TPUSpec()
+    custom = dataclasses.replace(TPUSpec(), hbm_bw=1.0)
+    assert resolve_spec(custom) is custom
+    with pytest.raises(ValueError, match="unknown spec"):
+        resolve_spec("warp-speed")
+    # Cold cache without auto-calibration is an explicit, actionable error.
+    with pytest.raises(ValueError, match="no fitted spec"):
+        resolve_spec("measured", calibrate_on_miss=False)
+    # A stored spec resolves without calibrating.
+    stored = dataclasses.replace(TPUSpec(), hbm_bw=9.9e9)
+    AutotuneCache().put_spec(current_backend(), stored)
+    assert resolve_spec("measured", calibrate_on_miss=False) == stored
+
+
+# ---------------------------------------------------------------------------
+# Warm-cache decompose parity (cp / tucker / tt)
+# ---------------------------------------------------------------------------
+
+
+def _tree_equal(a, b) -> bool:
+    return all(np.array_equal(np.asarray(x), np.asarray(y))
+               for x, y in zip(a, b))
+
+
+@pytest.mark.parametrize("format,rank,state_arrays", [
+    ("cp", 4, lambda s: tuple(s.factors)),
+    ("tucker", (3, 3, 3), lambda s: tuple(s.factors) + (s.core,)),
+    ("tt", (3, 3), lambda s: tuple(s.cores)),
+])
+def test_decompose_cached_warm_parity_zero_search(format, rank, state_arrays):
+    """The ISSUE's acceptance: a warm `auto_tune="cached"` decompose is
+    bit-for-bit the fresh `auto_tune=True` search path, and the hit
+    evaluates ZERO search configs (obs.metrics)."""
+    from repro.api import decompose
+
+    st = frostt_like("tiny")
+    fresh = decompose(st, rank, format=format, iters=2, auto_tune=True)
+    cold = decompose(st, rank, format=format, iters=2, auto_tune="cached")
+    metrics.reset()
+    warm = decompose(st, rank, format=format, iters=2, auto_tune="cached")
+    counters = _counters()
+    assert not any(k.startswith("pms.configs_evaluated") for k in counters), counters
+    assert not any(k.startswith("pms.searches") for k in counters), counters
+    hits = [v for k, v in counters.items()
+            if k.startswith("autotune_cache.hits")]
+    assert sum(hits) == st.nmodes
+    assert _tree_equal(state_arrays(fresh), state_arrays(cold))
+    assert _tree_equal(state_arrays(fresh), state_arrays(warm))
+    assert fresh.fit_history == warm.fit_history
+
+
+def test_decompose_rejects_bad_auto_tune():
+    from repro.api import decompose
+
+    with pytest.raises(ValueError, match="auto_tune"):
+        decompose(frostt_like("tiny"), 4, auto_tune="always")
+
+
+def test_recalibration_invalidates_stale_winners():
+    """The spec fingerprint is part of the config key: a recalibration that
+    moves the constants must re-search, not serve a winner tuned for
+    different hardware."""
+    ran = []
+
+    def search():
+        ran.append(1)
+        return MemoryControllerConfig()
+
+    spec_a = TPUSpec()
+    spec_b = dataclasses.replace(TPUSpec(), hbm_bw=1e9)
+    cached_config("mttkrp", "f" * 12, 0, 8, spec_a, search)
+    cached_config("mttkrp", "f" * 12, 0, 8, spec_b, search)
+    assert ran == [1, 1]
+
+
+# ---------------------------------------------------------------------------
+# ISSUE drift fix: roofline constants pinned to TPUSpec
+# ---------------------------------------------------------------------------
+
+
+def test_roofline_constants_match_tpuspec():
+    from benchmarks import roofline
+
+    spec = TPUSpec()
+    assert roofline.PEAK_FLOPS == spec.peak_flops
+    assert roofline.HBM_BW == spec.hbm_bw
+    assert roofline.ICI_BW == spec.ici_bw_per_link
+    assert roofline.HBM_BYTES == spec.hbm_bytes
